@@ -1,0 +1,77 @@
+"""Paper Fig 17 + Eq 11-13: latency of the 2-parallel NTT-based multiplier
+with vs without the shuffling circuit, plus the clock-level cascade
+simulation (buffer occupancy) and the JAX-level analogue: wall-clock of
+the fused no-permute cascade vs an explicitly shuffled one.
+"""
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ntt as ntt_mod
+from repro.core import schedule as sched
+
+
+def _timeit(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    out = []
+    for n in (1024, 4096):
+        lat = sched.latency_cycles(n)
+        lat_sh = sched.latency_cycles(n, with_shuffle=True)
+        out.append(
+            (
+                f"fig17_latency_model_n{n}",
+                0.0,
+                f"no_shuffle={lat}cyc shuffle={lat_sh}cyc "
+                f"increase={100*(lat_sh-lat)/lat:.1f}% bpp={sched.bpp_cycles(n)}",
+            )
+        )
+        sim0 = sched.simulate_cascade(n, bit_reversed_intt=True)
+        sim1 = sched.simulate_cascade(n, bit_reversed_intt=False)
+        out.append(
+            (
+                f"fig17_cascade_sim_n{n}",
+                0.0,
+                f"bitrev_folding_buffer={sim0.max_buffer_pairs} "
+                f"same_folding_buffer={sim1.max_buffer_pairs} (paper DSD=n/4={n//4})",
+            )
+        )
+    # JAX-level: fused (no permute) vs explicit-bit-reverse cascade
+    n, q = 4096, 0x3FDE0001
+    tb = ntt_mod.make_tables(q, n)
+    brv = ntt_mod.bit_reverse_indices(n)
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(0, q, size=(8, n)))
+    b = jnp.asarray(rng.integers(0, q, size=(8, n)))
+
+    @jax.jit
+    def fused(a, b):
+        return ntt_mod.negacyclic_mul(a, b, tb)
+
+    @jax.jit
+    def shuffled(a, b):
+        fa = ntt_mod.ntt(a, tb)[:, brv]  # materialized reorder, then
+        fb = ntt_mod.ntt(b, tb)[:, brv]  # un-reorder before iNTT
+        prod = ntt_mod.mul_mod(fa, fb, q)
+        return ntt_mod.intt(prod[:, np.argsort(brv)], tb)
+
+    us_f = _timeit(fused, a, b)
+    us_s = _timeit(shuffled, a, b)
+    assert np.array_equal(np.asarray(fused(a, b)), np.asarray(shuffled(a, b)))
+    out.append(
+        (
+            "fig17_jax_cascade_no_permute",
+            us_f,
+            f"vs_shuffled={us_s:.0f}us speedup={us_s/us_f:.2f}x (batch=8, n=4096)",
+        )
+    )
+    return out

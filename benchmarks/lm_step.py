@@ -1,0 +1,44 @@
+"""Framework benchmark: per-arch reduced-config train/decode step wall-clock
+on CPU (smoke-scale — the production numbers are the §Roofline terms)."""
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import RunConfig
+from repro.models import model as M
+from repro.train import train_step as ts_mod
+
+
+def run():
+    out = []
+    for arch in sorted(registry.ARCHS):
+        cfg = registry.get(arch).reduced()
+        run_cfg = RunConfig(model=cfg, remat=False)
+        params, opt = ts_mod.init_state(run_cfg, jax.random.PRNGKey(0))
+        step = jax.jit(ts_mod.make_train_step(run_cfg))
+        rng = np.random.default_rng(0)
+        B, S = 2, 32
+        batch = {"labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["enc_embeddings"] = jnp.asarray(
+                rng.normal(size=(B, S, cfg.d_model)).astype(np.float32))
+            batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+        elif cfg.frontend:
+            batch["embeddings"] = jnp.asarray(
+                rng.normal(size=(B, S, cfg.d_model)).astype(np.float32))
+        else:
+            batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+        p2, o2, metrics = step(params, opt, batch)
+        jax.block_until_ready(metrics["loss"])
+        t0 = time.perf_counter()
+        for _ in range(3):
+            p2, o2, metrics = step(p2, o2, batch)
+        jax.block_until_ready(metrics["loss"])
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        out.append((f"lm_train_step_{arch}", us,
+                    f"reduced cfg, B={B} S={S}, loss={float(metrics['loss']):.3f}"))
+    return out

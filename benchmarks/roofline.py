@@ -1,0 +1,84 @@
+"""§Roofline reporting: read the dry-run artifacts and emit the three-term
+roofline table (one row per arch x shape x mesh).
+
+    python -m benchmarks.roofline                  # CSV rows (bench format)
+    python -m benchmarks.roofline --markdown       # EXPERIMENTS.md table
+"""
+import glob
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh="single", tag=""):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(ART, f"dryrun_{mesh}_*.json"))):
+        with open(fn) as f:
+            d = json.load(f)
+        if d.get("tag", "") != tag:
+            continue
+        rows.append(d)
+    rows.sort(key=lambda d: (d["arch"], SHAPE_ORDER.index(d["shape"])
+                             if d["shape"] in SHAPE_ORDER else 9))
+    return rows
+
+
+def run():
+    out = []
+    for d in load("single"):
+        if d.get("status") != "ok":
+            out.append((f"roofline_{d['arch']}_{d['shape']}", 0.0, f"ERROR {d.get('error','')[:60]}"))
+            continue
+        r = d["roofline"]
+        out.append(
+            (
+                f"roofline_{d['arch']}_{d['shape']}",
+                r["compute_s"] * 1e6,
+                f"mem={r['memory_s']*1e6:.0f}us coll={r['collective_s']*1e6:.0f}us "
+                f"dominant={r['dominant']} mfr={d.get('model_flops_ratio', 0):.2f}",
+            )
+        )
+    return out
+
+
+def markdown(tag=""):
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | dominant | "
+        "MODEL/HLO flops | step bound (s) | HW util* |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for d in load("single", tag):
+        if d.get("status") != "ok":
+            lines.append(
+                f"| {d['arch']} | {d['shape']} | — | — | — | ERROR | — | — | — |"
+            )
+            continue
+        r = d["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        util = r["compute_s"] / bound if bound else 0.0
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['dominant']} | "
+            f"{d.get('model_flops_ratio', 0):.2f} | {bound:.4f} | {util:.1%} |"
+        )
+    lines.append("")
+    lines.append(
+        "*HW util = compute term / dominant term = the MFU this step would "
+        "achieve if the dominant roofline bound is met."
+    )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    if "--markdown" in sys.argv:
+        tag = ""
+        if "--tag" in sys.argv:
+            tag = sys.argv[sys.argv.index("--tag") + 1]
+        print(markdown(tag))
+    else:
+        for name, us, derived in run():
+            print(f"{name},{us:.1f},{derived}")

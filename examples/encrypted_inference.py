@@ -1,0 +1,76 @@
+"""Encrypted inference: a linear classifier evaluated on BFV-encrypted
+activations — every homomorphic product runs on the PaReNTT multiplier.
+
+The server sees only ciphertexts; the client encrypts features and
+decrypts logits.  ct x plaintext-weight products need no relinearization.
+
+Weights are fixed-point quantized; features are packed one-per-slot into
+the polynomial coefficients and each class weight vector is packed
+reversed so coefficient (n-1) of the product polynomial holds the inner
+product (the standard coefficient-packing trick for negacyclic rings).
+
+Run:  PYTHONPATH=src python examples/encrypted_inference.py
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bfv
+
+
+def pack_weights(w_row: np.ndarray, n: int) -> np.ndarray:
+    """Reverse-pack so (a * w)[n-1] = sum_i a_i w_i (negacyclic ring)."""
+    out = np.zeros(n, dtype=np.int64)
+    d = len(w_row)
+    out[: d][::-1] = w_row  # w at positions d-1-i
+    return out
+
+
+def main():
+    rng = np.random.default_rng(0)
+    d_in, n_cls = 64, 10
+    # synthetic "digit" task: class templates + noise
+    templates = rng.normal(size=(n_cls, d_in))
+    X = np.stack([templates[i % n_cls] + 0.3 * rng.normal(size=d_in) for i in range(20)])
+    labels = np.arange(20) % n_cls
+
+    # train a tiny linear probe in the clear (plain numpy ridge)
+    W = templates  # nearest-template classifier is enough for the demo
+
+    # fixed-point quantization
+    fx, fw = 6, 6
+    Xq = np.round(X * (1 << fx)).astype(np.int64)
+    Wq = np.round(W * (1 << fw)).astype(np.int64)
+
+    ctx = bfv.make_context(n=256, t=3, v=30, pt_mod=1 << 26)
+    keys = bfv.keygen(jax.random.PRNGKey(0), ctx)
+
+    correct = 0
+    for i, (x, y) in enumerate(zip(Xq, labels)):
+        poly = np.zeros(ctx.params.n, dtype=np.int64)
+        poly[:d_in] = x % ctx.pt_mod
+        ct = bfv.encrypt(jax.random.PRNGKey(100 + i), jnp.asarray(poly), keys, ctx)
+        logits = []
+        for c in range(n_cls):
+            wpoly = pack_weights(Wq[c], ctx.params.n)
+            prod = bfv.mul_plain(ct, jnp.asarray(wpoly), ctx)  # PaReNTT x2
+            dec = bfv.decrypt(prod, keys, ctx)
+            v = int(dec[d_in - 1])
+            if v > ctx.pt_mod // 2:
+                v -= ctx.pt_mod
+            logits.append(v / (1 << (fx + fw)))
+        pred = int(np.argmax(logits))
+        plain = int(np.argmax(X[i] @ W.T))
+        assert pred == plain, (i, pred, plain, logits)
+        correct += pred == y
+    print(f"[ok] encrypted == plaintext predictions on all 20 samples")
+    print(f"     accuracy {correct}/20 (synthetic task)")
+    print(
+        f"     each class logit = 1 homomorphic ct x pt product "
+        f"= 2 PaReNTT negacyclic multiplications (t={ctx.params.t} RNS channels)"
+    )
+
+
+if __name__ == "__main__":
+    main()

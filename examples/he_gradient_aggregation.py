@@ -1,0 +1,67 @@
+"""HE-secured gradient aggregation (the paper's federated-learning
+motivation [1]): three workers train a shared tiny LM; per-step gradients
+are BFV-encrypted, summed as ciphertexts by an untrusted reducer, and
+decrypted only by the trusted coordinator.  Compares against plaintext
+aggregation.
+
+Run:  PYTHONPATH=src python examples/he_gradient_aggregation.py
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import RunConfig
+from repro.models import model as M
+from repro.train import aggregation as agg_mod
+from repro.train import data as data_mod
+from repro.train import optimizer as opt_mod
+from repro.train import train_step as ts_mod
+
+
+def main():
+    cfg = registry.get("mamba2-130m").reduced()
+    run = RunConfig(model=cfg, remat=False)
+    loss_fn = ts_mod.make_loss_fn(run)
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    params, opt_state = ts_mod.init_state(run, jax.random.PRNGKey(0))
+    adamw = opt_mod.AdamWConfig(lr=3e-3, warmup_steps=0, total_steps=50)
+
+    agg = agg_mod.HeAggregator(n=1024, t=3, v=30, pt_mod=1 << 24, frac_bits=12)
+    he_keys = agg.keygen(jax.random.PRNGKey(42))
+
+    workers = [
+        data_mod.SyntheticLM(cfg, data_mod.DataConfig(batch=2, seq_len=32, seed=s))
+        for s in range(3)
+    ]
+    losses = []
+    for step in range(8):
+        worker_grads, worker_losses = [], []
+        for w in workers:
+            batch = jax.tree.map(jnp.asarray, w.batch_at(step))
+            loss, g = grad_fn(params, batch)
+            worker_grads.append(g)
+            worker_losses.append(float(loss))
+        # --- the untrusted reducer only ever sees ciphertexts -----------
+        g_he = agg_mod.he_aggregate_gradients(
+            agg, worker_grads, jax.random.PRNGKey(step), he_keys
+        )
+        g_plain = jax.tree.map(lambda *xs: sum(xs) / len(xs), *worker_grads)
+        errs = [
+            float(jnp.max(jnp.abs(a - b)))
+            for a, b in zip(jax.tree.leaves(g_he), jax.tree.leaves(g_plain))
+        ]
+        params, opt_state, m = opt_mod.update(adamw, g_he, opt_state, params)
+        losses.append(np.mean(worker_losses))
+        print(
+            f"step {step}: mean worker loss={losses[-1]:.4f} "
+            f"max |HE-plain| grad err={max(errs):.2e}"
+        )
+    assert losses[-1] < losses[0], "training on HE-aggregated grads diverged"
+    print(f"[ok] loss {losses[0]:.3f} -> {losses[-1]:.3f} with encrypted aggregation")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Batched serving demo: prefill + decode through the Engine (the same
+serve_step the decode-shape dry-runs lower at production scale).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch yi-6b
+"""
+import argparse
+
+import numpy as np
+
+import jax
+
+from repro.configs import registry
+from repro.models import model as M
+from repro.serve.engine import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+    cfg = registry.get(args.arch).reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, batch_slots=4, max_len=128)
+    prompts = [
+        np.array([5, 7, 11], np.int32),
+        np.array([2, 4, 6, 8], np.int32),
+        np.array([100, 200], np.int32),
+    ]
+    outs = eng.generate(prompts, max_new=args.max_new)
+    for i, o in enumerate(outs):
+        print(f"request {i}: prompt={prompts[i].tolist()} -> {o}")
+    print(f"[ok] {len(outs)} requests decoded {args.max_new} tokens each "
+          f"({cfg.name} reduced)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""repro: PaReNTT — parallel RNS + NTT long polynomial modular multiplication
+(Tan, Chiu, Wang, Lao, Parhi, 2023) as a production JAX framework.
+
+The crypto core requires 64-bit integer arithmetic; enable x64 once at
+package import.  All floating-point model code states dtypes explicitly,
+so the x64 default does not leak into LM layers.
+"""
+from jax import config as _config
+
+_config.update("jax_enable_x64", True)
+
+__version__ = "0.1.0"

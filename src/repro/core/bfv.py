@@ -1,0 +1,225 @@
+"""RLWE/BFV somewhat-homomorphic layer on top of the PaReNTT multiplier.
+
+The paper builds the *modular polynomial multiplier* that dominates HE
+evaluation cost; this module is the HE scheme that consumes it, providing
+the two applications shipped with the framework:
+
+  * additively-homomorphic secure gradient aggregation (enc / ⊞ / dec) —
+    the paper's federated-learning motivation [1];
+  * encrypted linear-layer inference (ct x plaintext ⊠) — evaluation-side
+    polynomial products running on the PaReNTT cascade.
+
+Everything stays in RNS residue form (t, n); composition to bigints
+happens only inside ``decrypt`` (client side).  ct x ct multiplication
+with relinearization requires the BFV scaling step; a bigint reference
+implementation lives in :mod:`repro.core.bfv_ref` (host-side, tested) —
+matching paper scope, which cites HPS [33] for the full RNS variant.
+
+SECURITY NOTE: parameters here are sized for systems evaluation, not for
+a production 128-bit security level (that needs the full error analysis
+of an audited library).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bigint, ntt as ntt_mod, rns as rns_mod
+from repro.core.params import ParenttParams, make_params
+
+
+class BfvContext(NamedTuple):
+    params: ParenttParams
+    pt_mod: int  # plaintext modulus p_t
+    delta_res: np.ndarray  # (t,) floor(q / p_t) mod q_i
+    noise_bound: int  # max magnitude of fresh noise samples
+
+
+@dataclasses.dataclass
+class Ciphertext:
+    """BFV ciphertext in RNS coefficient form: c: (2, t, ..., n)."""
+
+    c: jax.Array
+
+    @property
+    def batch_shape(self):
+        return self.c.shape[2:-1]
+
+
+def make_context(
+    n: int = 4096, t: int = 6, v: int = 30, pt_mod: int = 1 << 24
+) -> BfvContext:
+    params = make_params(n=n, t=t, v=v)
+    delta = params.q // pt_mod
+    delta_res = np.array([delta % int(q) for q in params.plan.qs], dtype=np.int64)
+    return BfvContext(
+        params=params, pt_mod=pt_mod, delta_res=delta_res, noise_bound=8
+    )
+
+
+# --------------------------------------------------------------------------
+# sampling (all RNS-resident; negatives lifted per channel)
+# --------------------------------------------------------------------------
+
+
+def _lift(x: jax.Array, qs: jax.Array) -> jax.Array:
+    """Small signed values -> per-channel residues (t, ...)."""
+    return (x[None, ...] + qs.reshape((-1,) + (1,) * x.ndim)) % qs.reshape(
+        (-1,) + (1,) * x.ndim
+    )
+
+
+def _ternary(key, shape) -> jax.Array:
+    return jax.random.randint(key, shape, -1, 2, dtype=jnp.int64)
+
+
+def _noise(key, shape, bound: int) -> jax.Array:
+    """Centered binomial-ish small noise in [-bound, bound]."""
+    a = jax.random.randint(key, shape, 0, bound + 1, dtype=jnp.int64)
+    b = jax.random.randint(jax.random.fold_in(key, 1), shape, 0, bound + 1, dtype=jnp.int64)
+    return a - b
+
+
+def _uniform_res(key, ctx: BfvContext, shape) -> jax.Array:
+    """Uniform element of R_q in residue form (t, *shape)."""
+    qs = np.asarray(ctx.params.plan.qs)
+    chans = []
+    for i, qi in enumerate(qs):
+        chans.append(
+            jax.random.randint(jax.random.fold_in(key, i), shape, 0, int(qi), dtype=jnp.int64)
+        )
+    return jnp.stack(chans)
+
+
+# --------------------------------------------------------------------------
+# keygen / encrypt / decrypt
+# --------------------------------------------------------------------------
+
+
+class KeyPair(NamedTuple):
+    sk: jax.Array  # (t, n) residues of ternary secret
+    pk: jax.Array  # (2, t, n)
+
+
+def keygen(key: jax.Array, ctx: BfvContext) -> KeyPair:
+    n = ctx.params.n
+    qs = jnp.asarray(ctx.params.plan.qs)
+    k_s, k_a, k_e = jax.random.split(key, 3)
+    s = _ternary(k_s, (n,))
+    s_res = _lift(s, qs)
+    a = _uniform_res(k_a, ctx, (n,))
+    e = _lift(_noise(k_e, (n,), ctx.noise_bound), qs)
+    tabs = ctx.params.tables
+    q_b = qs[:, None]
+    # pk0 = -(a*s + e)
+    as_ = ntt_mod.negacyclic_mul_channels(a, s_res, tabs)
+    pk0 = (q_b - (as_ + e) % q_b) % q_b
+    return KeyPair(sk=s_res, pk=jnp.stack([pk0, a]))
+
+
+def encrypt(key: jax.Array, m: jax.Array, kp: KeyPair, ctx: BfvContext) -> Ciphertext:
+    """m: (..., n) ints in [0, pt_mod) -> ct (2, t, ..., n)."""
+    qs = jnp.asarray(ctx.params.plan.qs)
+    lead = m.shape[:-1]
+    n = ctx.params.n
+    k_u, k_e1, k_e2 = jax.random.split(key, 3)
+    u = _lift(_ternary(k_u, lead + (n,)), qs)
+    e1 = _lift(_noise(k_e1, lead + (n,), ctx.noise_bound), qs)
+    e2 = _lift(_noise(k_e2, lead + (n,), ctx.noise_bound), qs)
+    tabs = ctx.params.tables
+    q_b = qs.reshape((-1,) + (1,) * (len(lead) + 1))
+    pk0 = kp.pk[0].reshape((ctx.params.t,) + (1,) * len(lead) + (n,))
+    pk1 = kp.pk[1].reshape((ctx.params.t,) + (1,) * len(lead) + (n,))
+    pk0 = jnp.broadcast_to(pk0, (ctx.params.t,) + lead + (n,))
+    pk1 = jnp.broadcast_to(pk1, (ctx.params.t,) + lead + (n,))
+    dm = (m[None, ...] % ctx.pt_mod) * jnp.asarray(ctx.delta_res).reshape(q_b.shape)
+    c0 = (ntt_mod.negacyclic_mul_channels(pk0, u, tabs) + e1 + dm % q_b) % q_b
+    c1 = (ntt_mod.negacyclic_mul_channels(pk1, u, tabs) + e2) % q_b
+    return Ciphertext(c=jnp.stack([c0, c1]))
+
+
+def decrypt(ct: Ciphertext, kp: KeyPair, ctx: BfvContext) -> np.ndarray:
+    """Host-side (client) decryption with exact bigint rounding."""
+    phase = _phase(ct, kp, ctx)  # (t, ..., n) residues
+    limbs = rns_mod.compose(phase, ctx.params.plan)  # (..., n, L)
+    arr = np.asarray(limbs)
+    flat = arr.reshape(-1, arr.shape[-1])
+    q, pt = ctx.params.q, ctx.pt_mod
+    out = np.empty(flat.shape[0], dtype=np.int64)
+    for i, row in enumerate(flat):
+        x = bigint.limbs_to_int(row, ctx.params.plan.w)
+        out[i] = ((pt * x + q // 2) // q) % pt
+    return out.reshape(arr.shape[:-1])
+
+
+def _phase(ct: Ciphertext, kp: KeyPair, ctx: BfvContext) -> jax.Array:
+    qs = jnp.asarray(ctx.params.plan.qs)
+    lead = ct.c.shape[2:-1]
+    n = ctx.params.n
+    sk = jnp.broadcast_to(
+        kp.sk.reshape((ctx.params.t,) + (1,) * len(lead) + (n,)),
+        (ctx.params.t,) + lead + (n,),
+    )
+    q_b = qs.reshape((-1,) + (1,) * (len(lead) + 1))
+    c1s = ntt_mod.negacyclic_mul_channels(ct.c[1], sk, ctx.params.tables)
+    return (ct.c[0] + c1s) % q_b
+
+
+def noise_budget_bits(ct: Ciphertext, kp: KeyPair, ctx: BfvContext, m: np.ndarray) -> float:
+    """log2(q / (2*|noise|)) — remaining headroom (diagnostic, host)."""
+    phase = _phase(ct, kp, ctx)
+    limbs = rns_mod.compose(phase, ctx.params.plan)
+    arr = np.asarray(limbs).reshape(-1, int(limbs.shape[-1]))
+    q, pt = ctx.params.q, ctx.pt_mod
+    delta = q // pt
+    mm = np.asarray(m).reshape(-1)
+    worst = 1
+    for row, mi in zip(arr, mm):
+        x = bigint.limbs_to_int(row, ctx.params.plan.w)
+        noise = (x - delta * int(mi)) % q
+        noise = min(noise, q - noise)
+        worst = max(worst, noise)
+    import math
+
+    return math.log2(q) - 1 - math.log2(max(worst, 1))
+
+
+# --------------------------------------------------------------------------
+# homomorphic ops (evaluation side — this is what the cloud runs; every
+# polynomial product goes through the PaReNTT cascade)
+# --------------------------------------------------------------------------
+
+
+def add(a: Ciphertext, b: Ciphertext, ctx: BfvContext) -> Ciphertext:
+    qs = jnp.asarray(ctx.params.plan.qs)
+    q_b = qs.reshape((1, -1) + (1,) * (a.c.ndim - 2))
+    return Ciphertext(c=(a.c + b.c) % q_b)
+
+
+def add_many(cts: list[Ciphertext], ctx: BfvContext) -> Ciphertext:
+    qs = jnp.asarray(ctx.params.plan.qs)
+    q_b = qs.reshape((1, -1) + (1,) * (cts[0].c.ndim - 2))
+    acc = cts[0].c
+    for ct in cts[1:]:
+        acc = (acc + ct.c) % q_b
+    return Ciphertext(c=acc)
+
+
+def mul_plain(ct: Ciphertext, pt_poly: jax.Array, ctx: BfvContext) -> Ciphertext:
+    """ct ⊠ plaintext polynomial (signed ints, small).  pt_poly: (..., n),
+    broadcast against the ciphertext batch.  Both ciphertext components
+    ride the PaReNTT multiplier."""
+    qs = jnp.asarray(ctx.params.plan.qs)
+    w = _lift(pt_poly, qs)  # (t, ..., n)
+    tgt = ct.c[0].shape  # (t, ..., n)
+    while w.ndim < len(tgt):
+        w = w[:, None]
+    w = jnp.broadcast_to(w, tgt)
+    tabs = ctx.params.tables
+    c0 = ntt_mod.negacyclic_mul_channels(ct.c[0], w, tabs)
+    c1 = ntt_mod.negacyclic_mul_channels(ct.c[1], w, tabs)
+    return Ciphertext(c=jnp.stack([c0, c1]))

@@ -1,0 +1,110 @@
+"""Multi-limb big-integer helpers for the CRT pre/post-processing datapath.
+
+Big integers (e.g. 180-bit polynomial coefficients) are last-axis arrays of
+limbs, least-significant first.  Two bases are used:
+
+* base ``2^v`` "segments" — the paper's Alg 1 line 1 splitting
+  (``a_j = z_0 + z_1 B + ...``, B = 2^v), input format of pre-processing;
+* base ``2^w`` "limbs" (w <= 29) — the accumulation format of
+  post-processing, chosen so that (31-bit residue) x (w-bit limb) products
+  plus a t-way sum stay inside int64.
+
+Host<->device conversion helpers use Python bigints (exact).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def int_to_limbs(x: int, width: int, count: int) -> np.ndarray:
+    assert x >= 0
+    mask = (1 << width) - 1
+    out = np.zeros(count, dtype=np.int64)
+    for i in range(count):
+        out[i] = x & mask
+        x >>= width
+    assert x == 0, "limb count too small"
+    return out
+
+
+def ints_to_limbs(xs, width: int, count: int) -> np.ndarray:
+    return np.stack([int_to_limbs(int(x), width, count) for x in xs])
+
+
+def limbs_to_int(limbs, width: int) -> int:
+    x = 0
+    for i, l in enumerate(np.asarray(limbs).tolist()):
+        x += int(l) << (width * i)
+    return x
+
+
+def limbs_to_ints(arr, width: int) -> list[int]:
+    arr = np.asarray(arr)
+    return [limbs_to_int(row, width) for row in arr.reshape(-1, arr.shape[-1])]
+
+
+# --------------------------------------------------------------------------
+# jnp limb ops (last axis = limbs, LSB first)
+# --------------------------------------------------------------------------
+
+
+def carry_normalize(x: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Propagate carries so every limb < 2^width.  Limbs may hold values up
+    to ~2^62 on input.  One sequential pass (running carry) suffices."""
+    mask = (1 << width) - 1
+    L = x.shape[-1]
+    outs = []
+    carry = jnp.zeros_like(x[..., 0])
+    for i in range(L):
+        s = x[..., i] + carry
+        outs.append(s & mask)
+        carry = s >> width
+    # assert-by-construction: caller sizes L so the final carry is zero.
+    return jnp.stack(outs, axis=-1)
+
+
+def compare_ge(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a >= b lexicographically from the most-significant limb. Normalized
+    inputs. Returns bool array over leading dims."""
+    L = a.shape[-1]
+    ge = jnp.ones(a.shape[:-1], dtype=bool)
+    decided = jnp.zeros(a.shape[:-1], dtype=bool)
+    for i in range(L - 1, -1, -1):
+        ai, bi = a[..., i], b[..., i]
+        gt = ai > bi
+        lt = ai < bi
+        ge = jnp.where(~decided & gt, True, ge)
+        ge = jnp.where(~decided & lt, False, ge)
+        decided = decided | gt | lt
+    return ge
+
+
+def sub_limbs(a: jnp.ndarray, b: jnp.ndarray, width: int) -> jnp.ndarray:
+    """a - b (requires a >= b), normalized limbs, with borrow propagation."""
+    L = a.shape[-1]
+    outs = []
+    borrow = jnp.zeros_like(a[..., 0])
+    base = 1 << width
+    for i in range(L):
+        d = a[..., i] - b[..., i] - borrow
+        neg = d < 0
+        outs.append(jnp.where(neg, d + base, d))
+        borrow = neg.astype(a.dtype)
+    return jnp.stack(outs, axis=-1)
+
+
+def cond_sub(a: jnp.ndarray, m: jnp.ndarray, width: int) -> jnp.ndarray:
+    """If a >= m subtract m, else keep a.  Normalized limbs."""
+    ge = compare_ge(a, m)
+    return jnp.where(ge[..., None], sub_limbs(a, m, width), a)
+
+
+def mod_by_subtraction(
+    a: jnp.ndarray, m: jnp.ndarray, width: int, times: int
+) -> jnp.ndarray:
+    """a mod m when a < (times+1) * m, via `times` conditional subtractions —
+    the paper's post-processing tail (sum of t terms each < q => a < t*q)."""
+    for _ in range(times):
+        a = cond_sub(a, m, width)
+    return a

@@ -1,0 +1,197 @@
+"""Four-step (n = n1 x n2) negacyclic NTT — the distributed/blocked form.
+
+The paper raises throughput by adding datapath lanes (2-parallel folding);
+at chip scale the analogous lever splits ONE long polynomial across
+devices.  Decomposition (cyclic DFT after the negacyclic pre-weight):
+
+    a_hat = a ⊙ psi^j                      (elementwise)
+    X[j1, j2] = a_hat[j1*n2 + j2]
+    C = DFT_n1 over j1 (columns)           (local: shard j2)
+    C = C ⊙ omega^{brv(p1) * j2}           (twiddle correction)
+    T = transpose(C)                       (the ONLY communication:
+                                            an (n1, n2) all-to-all)
+    Y = DFT_n2 over j2 (columns of T)      (local: shard p1)
+
+Both operands of a product use the same scrambled output order
+(bit-reversed within each factor, factors transposed), so the pointwise
+product needs no reordering — the four-step cascade keeps the paper's
+zero-shuffle property at the distributed level: ONE all-to-all per
+transform, nothing else.
+
+Inner transforms: cyclic radix-2 DIF (natural-in, bit-reversed-out) and
+its DIT mirror (bit-reversed-in, natural-out) with the per-stage halving
+trick (Eq 24) folding in m^{-1}; validated against the naive DFT and the
+single-step NWC transform (tests/test_dntt.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import primes as primes_mod
+from repro.core.ntt import bit_reverse_indices, mul_mod
+
+
+# --------------------------------------------------------------------------
+# cyclic DIF / DIT kernels (last-axis transforms, per-stage twiddle tuples)
+# --------------------------------------------------------------------------
+
+
+def _stage_tables(q: int, m: int, w: int) -> tuple[np.ndarray, ...]:
+    """DIF stage twiddles for a length-m cyclic transform with root w:
+    stage sizes m, m/2, ..., 2; stage s has (size/2) twiddles w^{j*(m/size)}."""
+    out = []
+    size = m
+    while size >= 2:
+        half, stride = size // 2, m // size
+        out.append(
+            np.array([pow(w, j * stride, q) for j in range(half)], dtype=np.int64)
+        )
+        size //= 2
+    return tuple(out)
+
+
+def cyclic_dif(a, stages, q):
+    """Cyclic DFT, natural-in -> bit-reversed-out, over the last axis."""
+    n = a.shape[-1]
+    lead = a.shape[:-1]
+    size = n
+    for W in stages:
+        half = size // 2
+        x = a.reshape(lead + (n // size, size))
+        u, v = x[..., :half], x[..., half:]
+        s = (u + v) % q
+        d = mul_mod((u - v) % q, jnp.asarray(W), q)
+        a = jnp.concatenate([s, d], axis=-1).reshape(lead + (n,))
+        size //= 2
+    return a
+
+
+def cyclic_dit_inv(a, inv_stages, q, half_q):
+    """Inverse cyclic DFT, bit-reversed-in -> natural-out, m^{-1} folded via
+    the per-stage halving (paper Eq 24)."""
+    n = a.shape[-1]
+    lead = a.shape[:-1]
+    size = 2
+    for Wi in reversed(inv_stages):
+        half = size // 2
+        x = a.reshape(lead + (n // size, size))
+        p, r = x[..., :half], mul_mod(x[..., half:], jnp.asarray(Wi), q)
+        s = (p + r) % q
+        d = (p - r) % q
+        s = (s >> 1) + (s & 1) * half_q
+        d = (d >> 1) + (d & 1) * half_q
+        a = jnp.concatenate([s, d], axis=-1).reshape(lead + (n,))
+        size *= 2
+    return a
+
+
+# --------------------------------------------------------------------------
+# four-step tables
+# --------------------------------------------------------------------------
+
+
+class FourStepTables(NamedTuple):
+    q: int
+    n: int
+    n1: int
+    n2: int
+    psi_w: np.ndarray  # (n,) psi^j       negacyclic pre-weight
+    psi_iw: np.ndarray  # (n,) psi^{-j}    post-weight (n^{-1} is in the stages)
+    st1: tuple  # DIF stages, length n1
+    ist1: tuple
+    st2: tuple  # DIF stages, length n2
+    ist2: tuple
+    tw: np.ndarray  # (n1, n2) omega^{brv(p1) * j2}
+    itw: np.ndarray
+    half: int
+
+
+@functools.lru_cache(maxsize=None)
+def make_fourstep_tables(q: int, n: int, n1: int) -> FourStepTables:
+    n2 = n // n1
+    assert n1 * n2 == n and n1 & (n1 - 1) == 0 and n2 & (n2 - 1) == 0
+    psi = primes_mod.root_of_unity(q, 2 * n)
+    omega = pow(psi, 2, q)
+    omega_inv = pow(omega, q - 2, q)
+    psi_inv = pow(psi, q - 2, q)
+    psi_w = np.array([pow(psi, j, q) for j in range(n)], dtype=np.int64)
+    psi_iw = np.array([pow(psi_inv, j, q) for j in range(n)], dtype=np.int64)
+    w1, w2 = pow(omega, n2, q), pow(omega, n1, q)
+    brv1 = bit_reverse_indices(n1)
+    tw = np.empty((n1, n2), dtype=np.int64)
+    itw = np.empty((n1, n2), dtype=np.int64)
+    for p1 in range(n1):
+        k1 = int(brv1[p1])
+        base, ibase = pow(omega, k1, q), pow(omega_inv, k1, q)
+        row, irow = 1, 1
+        for j in range(n2):
+            tw[p1, j], itw[p1, j] = row, irow
+            row = (row * base) % q
+            irow = (irow * ibase) % q
+    return FourStepTables(
+        q=q, n=n, n1=n1, n2=n2, psi_w=psi_w, psi_iw=psi_iw,
+        st1=_stage_tables(q, n1, w1),
+        ist1=_stage_tables(q, n1, pow(w1, q - 2, q)),
+        st2=_stage_tables(q, n2, w2),
+        ist2=_stage_tables(q, n2, pow(w2, q - 2, q)),
+        tw=tw, itw=itw, half=(q + 1) // 2,
+    )
+
+
+# --------------------------------------------------------------------------
+# transforms
+# --------------------------------------------------------------------------
+
+
+def fourstep_ntt(a, t: FourStepTables, constrain=lambda x, k: x):
+    """a: (..., n) -> scrambled NWC spectrum (..., n) (order: (p2, p1))."""
+    q = t.q
+    a = mul_mod(a, jnp.asarray(t.psi_w), q)
+    x = a.reshape(a.shape[:-1] + (t.n1, t.n2))
+    x = constrain(x, "cols")
+    # columns over j1: transform the last axis of the transposed view
+    x = cyclic_dif(x.swapaxes(-1, -2), t.st1, q).swapaxes(-1, -2)  # (p1, j2)
+    x = mul_mod(x, jnp.asarray(t.tw), q)
+    x = x.swapaxes(-1, -2)  # ALL-TO-ALL: (p1, j2) -> (j2, p1)
+    x = constrain(x, "cols")
+    x = cyclic_dif(x.swapaxes(-1, -2), t.st2, q).swapaxes(-1, -2)  # (p2, p1)
+    return x.reshape(a.shape[:-1] + (t.n,))
+
+
+def fourstep_intt(y, t: FourStepTables, constrain=lambda x, k: x):
+    q = t.q
+    x = y.reshape(y.shape[:-1] + (t.n2, t.n1))
+    x = constrain(x, "cols")
+    x = cyclic_dit_inv(x.swapaxes(-1, -2), t.ist2, q, t.half).swapaxes(-1, -2)
+    x = x.swapaxes(-1, -2)  # all-to-all back: (j2, p1) -> (p1, j2)
+    x = constrain(x, "cols")
+    x = mul_mod(x, jnp.asarray(t.itw), q)
+    x = cyclic_dit_inv(x.swapaxes(-1, -2), t.ist1, q, t.half).swapaxes(-1, -2)
+    out = x.reshape(y.shape[:-1] + (t.n,))
+    return mul_mod(out, jnp.asarray(t.psi_iw), q)
+
+
+def negacyclic_mul_fourstep(a, b, t: FourStepTables, constrain=lambda x, k: x):
+    fa = fourstep_ntt(a, t, constrain)
+    fb = fourstep_ntt(b, t, constrain)
+    return fourstep_intt(mul_mod(fa, fb, t.q), t, constrain)
+
+
+def make_shard_constrain(mesh, axis: str = "model"):
+    """Shard the trailing axis of the (..., m, k) views over `axis` —
+    inner transforms become device-local; the swapaxes between them lowers
+    to one all-to-all."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def constrain(x, kind):
+        if kind == "cols" and x.shape[-1] % mesh.shape[axis] == 0:
+            spec = P(*([None] * (x.ndim - 1) + [axis]))
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+        return x
+
+    return constrain

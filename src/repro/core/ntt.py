@@ -1,0 +1,206 @@
+"""Low-complexity negative-wrapped-convolution NTT / iNTT (paper §II-D, Fig 1,
+supplementary Eq 14-25) with the *no-shuffle cascade* (contribution 1).
+
+Design notes
+------------
+* Forward transform: decimation-in-time (CT) butterflies with the weights
+  psi_{2n}^{(2k+1)} merged into the twiddles (Eq 16-19).  Natural-order
+  input -> **bit-reversed** output.
+* Inverse transform retraces the forward flow graph in reverse stage order
+  (first inverse stage undoes the forward's last), with the inverse
+  twiddles psi^{-brv(h+i)} and the factor n^{-1} folded in: every stage
+  halves both butterfly outputs with the shift-and-conditional-add trick
+  of Eq 24/25 (the paper's Fig 9 PE).  **Bit-reversed** input ->
+  natural-order output.
+* Because the pointwise product is order-agnostic, the cascade
+  ``intt(ntt(a) * ntt(b))`` needs **zero permutations** — this is the
+  data-flow-level content of the paper's different-folding-sets trick
+  (the hardware folding/latency model itself lives in
+  :mod:`repro.core.schedule`).
+
+All arithmetic is int64; residues must satisfy q < 2**31 so products fit
+(the v<=30 fast path; the paper's preferred config).  The v=45 config is
+served by the numpy-object oracle in :mod:`repro.core.polymul`.
+
+Shapes: transforms operate on the last axis; any leading batch dims.  The
+`*_channels` variants vmap over a leading RNS-channel axis with per-channel
+moduli/tables.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import primes as primes_mod
+
+
+def bit_reverse_indices(n: int) -> np.ndarray:
+    """Permutation p with p[i] = bit-reverse of i over log2(n) bits."""
+    m = n.bit_length() - 1
+    idx = np.arange(n, dtype=np.int64)
+    out = np.zeros_like(idx)
+    for b in range(m):
+        out |= ((idx >> b) & 1) << (m - 1 - b)
+    return out
+
+
+class NttTables(NamedTuple):
+    """Per-modulus twiddle tables for the merged-weight NWC transforms."""
+
+    q: int
+    n: int
+    psi: int  # primitive 2n-th root of unity mod q
+    fwd: np.ndarray  # (n,)  fwd[i] = psi^{brv(i)}    (CT/DIT stage tables)
+    inv: np.ndarray  # (n,)  inv[i] = psi^{-brv(i)}   (mirror-order inverse)
+    half: int  # (q + 1) / 2, for the div-by-2 PE (Eq 24)
+
+
+@functools.lru_cache(maxsize=None)
+def make_tables(q: int, n: int) -> NttTables:
+    """Precompute twiddles (host-side Python bigints, cached)."""
+    psi = primes_mod.root_of_unity(q, 2 * n)
+    brv = bit_reverse_indices(n)
+    fwd = np.array([pow(psi, int(b), q) for b in brv], dtype=np.int64)
+    psi_inv = pow(psi, q - 2, q)
+    inv = np.array([pow(psi_inv, int(b), q) for b in brv], dtype=np.int64)
+    return NttTables(q=q, n=n, psi=psi, fwd=fwd, inv=inv, half=(q + 1) // 2)
+
+
+# --------------------------------------------------------------------------
+# Modular helper ops (int64, q < 2**31).  q / half may be python ints or
+# (broadcastable) arrays so the same code serves single- and multi-channel.
+# --------------------------------------------------------------------------
+
+
+def add_mod(x, y, q):
+    s = x + y
+    return jnp.where(s >= q, s - q, s)
+
+
+def sub_mod(x, y, q):
+    d = x - y
+    return jnp.where(d < 0, d + q, d)
+
+
+def mul_mod(x, y, q):
+    return (x * y) % q
+
+
+def div2_mod(x, q_half):
+    """x * 2^{-1} mod q via Eq 24: (x >> 1) + (x & 1) * (q+1)/2.
+    Result < q whenever x < q (no reduction needed)."""
+    return (x >> 1) + (x & 1) * q_half
+
+
+# --------------------------------------------------------------------------
+# Transforms (single modulus; q/half scalars or 0-d arrays)
+# --------------------------------------------------------------------------
+
+
+def ntt_raw(a: jax.Array, fwd: jax.Array, q) -> jax.Array:
+    """Forward NWC NTT, natural-in, bit-reversed-out. Last-axis transform."""
+    n = a.shape[-1]
+    lead = a.shape[:-1]
+    m, t = 1, n
+    while m < n:
+        t //= 2
+        w = fwd[m : 2 * m]  # static slice
+        x = a.reshape(lead + (m, 2, t))
+        u = x[..., 0, :]
+        v = mul_mod(x[..., 1, :], w[:, None], q)
+        a = jnp.stack([add_mod(u, v, q), sub_mod(u, v, q)], axis=-2)
+        a = a.reshape(lead + (n,))
+        m *= 2
+    return a
+
+
+def intt_raw(a: jax.Array, inv: jax.Array, q, half) -> jax.Array:
+    """Inverse NWC NTT, bit-reversed-in, natural-out; n^{-1} folded into the
+    per-stage halving (paper Fig 9 / Eq 20-25)."""
+    n = a.shape[-1]
+    lead = a.shape[:-1]
+    h, t = n // 2, 1
+    while h >= 1:
+        w = inv[h : 2 * h]
+        x = a.reshape(lead + (h, 2, t))
+        u, v = x[..., 0, :], x[..., 1, :]
+        s = add_mod(u, v, q)
+        d = mul_mod(sub_mod(u, v, q), w[:, None], q)
+        a = jnp.stack([div2_mod(s, half), div2_mod(d, half)], axis=-2)
+        a = a.reshape(lead + (n,))
+        h //= 2
+        t *= 2
+    return a
+
+
+def ntt(a: jax.Array, tables: NttTables) -> jax.Array:
+    return ntt_raw(a, jnp.asarray(tables.fwd), tables.q)
+
+
+def intt(a: jax.Array, tables: NttTables) -> jax.Array:
+    return intt_raw(a, jnp.asarray(tables.inv), tables.q, tables.half)
+
+
+def negacyclic_mul(a: jax.Array, b: jax.Array, tables: NttTables) -> jax.Array:
+    """The no-shuffle cascade: NTT(a) ⊙ NTT(b) -> iNTT, zero permutations."""
+    fa = ntt(a, tables)
+    fb = ntt(b, tables)
+    return intt(mul_mod(fa, fb, tables.q), tables)
+
+
+# --------------------------------------------------------------------------
+# Multi-channel (RNS) variants: leading axis = RNS channel, one modulus each.
+# This is the paper's "t parallel residue datapaths"; under pjit the channel
+# axis shards over the `model` mesh axis.
+# --------------------------------------------------------------------------
+
+
+class ChannelTables(NamedTuple):
+    qs: np.ndarray  # (t,)
+    fwd: np.ndarray  # (t, n)
+    inv: np.ndarray  # (t, n)
+    half: np.ndarray  # (t,)
+
+    @property
+    def n(self) -> int:
+        return self.fwd.shape[-1]
+
+    @property
+    def t(self) -> int:
+        return self.fwd.shape[0]
+
+
+def make_channel_tables(qs, n: int) -> ChannelTables:
+    tabs = [make_tables(int(q), n) for q in qs]
+    return ChannelTables(
+        qs=np.array([t.q for t in tabs], dtype=np.int64),
+        fwd=np.stack([t.fwd for t in tabs]),
+        inv=np.stack([t.inv for t in tabs]),
+        half=np.array([t.half for t in tabs], dtype=np.int64),
+    )
+
+
+def ntt_channels(a: jax.Array, ct: ChannelTables) -> jax.Array:
+    """a: (t, ..., n) -> (t, ..., n), channel c transformed mod qs[c]."""
+    return jax.vmap(ntt_raw, in_axes=(0, 0, 0))(
+        a, jnp.asarray(ct.fwd), jnp.asarray(ct.qs)
+    )
+
+
+def intt_channels(a: jax.Array, ct: ChannelTables) -> jax.Array:
+    return jax.vmap(intt_raw, in_axes=(0, 0, 0, 0))(
+        a, jnp.asarray(ct.inv), jnp.asarray(ct.qs), jnp.asarray(ct.half)
+    )
+
+
+def negacyclic_mul_channels(a, b, ct: ChannelTables) -> jax.Array:
+    """(t, ..., n) x (t, ..., n) — the full RNS-parallel no-shuffle cascade."""
+    qs = jnp.asarray(ct.qs)
+    q_b = qs.reshape((ct.t,) + (1,) * (a.ndim - 1))
+    fa = ntt_channels(a, ct)
+    fb = ntt_channels(b, ct)
+    return intt_channels(mul_mod(fa, fb, q_b), ct)

@@ -1,0 +1,49 @@
+"""Parameter presets tying together prime search, NTT tables and RNS plans.
+
+The paper's hardware configs:
+  * t=6, v=30, n=4096  (preferred: best ABP/power)   -> 180-bit q
+  * t=4, v=45, n=4096  (wide-word alternative)       -> 180-bit q; served
+    by the numpy-object oracle (products exceed int64), see polymul.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+from repro.core import ntt as ntt_mod
+from repro.core import primes as primes_mod
+from repro.core import rns as rns_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class ParenttParams:
+    n: int
+    v: int
+    t: int
+    primes: tuple[primes_mod.SpecialPrime, ...]
+    plan: rns_mod.RnsPlan
+    tables: ntt_mod.ChannelTables | None  # None for v > 31 (oracle-only)
+
+    @property
+    def q(self) -> int:
+        return self.plan.q
+
+    @property
+    def qs(self):
+        return self.plan.qs
+
+
+@functools.lru_cache(maxsize=None)
+def make_params(n: int = 4096, t: int = 6, v: int = 30) -> ParenttParams:
+    specials = primes_mod.default_prime_set(n, t, v)
+    qs = [s.q for s in specials]
+    plan = rns_mod.make_plan(
+        qs, n=n, v=v, beta_terms=[s.beta_terms for s in specials]
+    )
+    tables = ntt_mod.make_channel_tables(qs, n) if v <= 31 else None
+    return ParenttParams(n=n, v=v, t=t, primes=specials, plan=plan, tables=tables)
+
+
+# Small presets used across tests (fast to build).
+def test_params(n: int = 64, t: int = 3, v: int = 30) -> ParenttParams:
+    return make_params(n=n, t=t, v=v)

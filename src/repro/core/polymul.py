@@ -1,0 +1,122 @@
+"""End-to-end PaReNTT modular polynomial multiplier (paper Fig 10).
+
+Pipeline (Step 1/2/3 of Fig 10):
+    segments --decompose--> residues --NTT ⊙ iNTT (no shuffle)--> residues
+             --compose--> limbs of p(x) mod q
+
+plus ground-truth oracles:
+  * ``schoolbook_negacyclic`` — O(n^2) Python-bigint negacyclic product.
+  * ``oracle_multiply``       — same pipeline in Python bigints (any v,
+    including the t=4 / v=45 config whose products exceed int64).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bigint, ntt as ntt_mod, rns as rns_mod
+from repro.core.params import ParenttParams
+
+# --------------------------------------------------------------------------
+# Oracles (host, exact)
+# --------------------------------------------------------------------------
+
+
+def schoolbook_negacyclic(a: list[int], b: list[int], q: int) -> list[int]:
+    """p = a*b mod (x^n + 1, q), Python bigints."""
+    n = len(a)
+    p = [0] * n
+    for i in range(n):
+        ai = a[i] % q
+        if not ai:
+            continue
+        for j in range(n):
+            k = i + j
+            if k >= n:
+                p[k - n] = (p[k - n] - ai * b[j]) % q
+            else:
+                p[k] = (p[k] + ai * b[j]) % q
+    return p
+
+
+def oracle_multiply(a: list[int], b: list[int], params: ParenttParams) -> list[int]:
+    """RNS+NTT pipeline in Python bigints (reference for any v)."""
+    plan = params.plan
+    out = [0] * params.n
+    for i in range(params.t):
+        qi = int(plan.qs[i])
+        pi = schoolbook_negacyclic([x % qi for x in a], [x % qi for x in b], qi)
+        star = plan.q // qi
+        tilde = int(plan.qi_tilde[i])
+        for j in range(params.n):
+            out[j] = (out[j] + ((pi[j] * tilde) % qi) * star) % plan.q
+    return out
+
+
+# --------------------------------------------------------------------------
+# Host <-> device formats
+# --------------------------------------------------------------------------
+
+
+def ints_to_segments(xs: list[int], plan: rns_mod.RnsPlan) -> np.ndarray:
+    return bigint.ints_to_limbs(xs, plan.v, plan.seg_count)
+
+
+def limbs_out_to_ints(limbs, plan: rns_mod.RnsPlan) -> list[int]:
+    return bigint.limbs_to_ints(limbs, plan.w)
+
+
+# --------------------------------------------------------------------------
+# jit pipeline
+# --------------------------------------------------------------------------
+
+
+class ParenttMultiplier:
+    """The paper's architecture as a batched JAX transform.
+
+    All methods operate on the last axis = polynomial coefficients; the
+    RNS channel axis is the leading axis of residue-domain arrays.
+    """
+
+    def __init__(self, params: ParenttParams, use_sau: bool = True):
+        if params.tables is None:
+            raise ValueError("v > 31: use oracle_multiply")
+        self.params = params
+        self.use_sau = use_sau
+
+    # -- step 1: pre-processing ------------------------------------------
+    def preprocess(self, z: jax.Array) -> jax.Array:
+        """z: (..., n, S) segments -> residues (t, ..., n)."""
+        fn = rns_mod.decompose_sau if self.use_sau else rns_mod.decompose
+        return fn(z, self.params.plan)
+
+    # -- step 2: evaluation in the residue domain ------------------------
+    def residue_mul(self, ra: jax.Array, rb: jax.Array) -> jax.Array:
+        """(t, ..., n) x (t, ..., n) -> (t, ..., n): parallel no-shuffle
+        NTT cascades, one per RNS channel."""
+        return ntt_mod.negacyclic_mul_channels(ra, rb, self.params.tables)
+
+    # -- step 3: post-processing ------------------------------------------
+    def postprocess(self, residues: jax.Array) -> jax.Array:
+        """(t, ..., n) -> (..., n, L) limbs of p mod q."""
+        return rns_mod.compose(residues, self.params.plan)
+
+    # -- full pipeline ----------------------------------------------------
+    @functools.partial(jax.jit, static_argnums=0)
+    def __call__(self, za: jax.Array, zb: jax.Array) -> jax.Array:
+        """za, zb: (..., n, S) segment arrays -> (..., n, L) limb array."""
+        ra = self.preprocess(za)
+        rb = self.preprocess(zb)
+        rp = self.residue_mul(ra, rb)
+        return self.postprocess(rp)
+
+    # -- host convenience ---------------------------------------------------
+    def multiply_ints(self, a: list[int], b: list[int]) -> list[int]:
+        plan = self.params.plan
+        za = jnp.asarray(ints_to_segments(a, plan))
+        zb = jnp.asarray(ints_to_segments(b, plan))
+        limbs = self(za, zb)
+        return limbs_out_to_ints(np.asarray(limbs), plan)

@@ -1,0 +1,269 @@
+"""RNS/CRT pre- and post-processing (paper §IV-C/D/F, contribution 3).
+
+Pre-processing (residual polynomial computation, Alg 1 / Alg 2):
+  input coefficients arrive as base-B segments (B = 2^v, Alg 1 line 1):
+      a_j = z_0 + z_1 B + ... + z_{t-1} B^{t-1}
+  and each residue is  a_j mod q_i = sum_k z_k * (B^k mod q_i) mod q_i.
+  Two datapaths are provided:
+    * ``decompose``      — generic: precomputed (B^k mod q_i) constants and
+      one multiply per segment (the Fig 11(a) baseline, minus its per-
+      segment Barrett units).
+    * ``decompose_sau``  — the paper's optimized path: multiplication by
+      beta_i = B mod q_i done with Shift-Add Units (low-Hamming-weight
+      special primes, Eq 5), factorized blocks of t' = 3 (Alg 2), one
+      Barrett per block plus one generic v x v multiply for [beta^{t'rho}].
+      int64 adaptation: SAU depth capped at 1 with a Barrett between SAU
+      applications (the paper's own Approach-1 hybrid, Fig 14) because a
+      depth-2 SAU word (v + 2(v1+1) bits) can exceed 63 bits.
+
+Post-processing (inverse CRT, Eq 10 / HPS [33]):
+      p = sum_i [p_i * q_i~]_{q_i} * q_i^  mod q
+  with q_i^ = q / q_i held as base-2^w limbs; the final sum is < t*q and is
+  reduced by at most (t-1) conditional subtractions — no Barrett over the
+  full q is ever instantiated (the content of Fig 16(b)).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bigint
+
+# --------------------------------------------------------------------------
+# Barrett reduction (int64-safe hi-part variant)
+# --------------------------------------------------------------------------
+
+
+def barrett_constants(q: int, c: int, v: int) -> tuple[int, int, int]:
+    """Constants for reducing x < 2^c mod q (q of v bits), 63-bit safe.
+
+    q_hat = ((x >> (v-1)) * eps) >> (c - v + 1),  eps = floor(2^c / q).
+    Requires 2*(c - v + 1) <= 63.  Quotient undershoots by < 4 =>
+    three conditional subtractions complete the reduction.
+    """
+    assert 2 * (c - v + 1) <= 63, (q, c, v)
+    eps = (1 << c) // q
+    return eps, v - 1, c - v + 1
+
+
+def barrett_reduce(x, q, eps, s1: int, s2: int):
+    """x mod q for x < 2^c (see barrett_constants). Arrays or scalars."""
+    qhat = ((x >> s1) * eps) >> s2
+    r = x - qhat * q
+    for _ in range(3):
+        r = jnp.where(r >= q, r - q, r)
+    return r
+
+
+# --------------------------------------------------------------------------
+# Plan
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # identity hash: jit-static-safe
+class RnsPlan:
+    """All host-precomputed constants for one (n, v, t) RNS configuration."""
+
+    n: int
+    v: int
+    t: int
+    q: int  # composed modulus, prod(qs)
+    qs: np.ndarray  # (t,) int64
+    beta_terms: tuple[tuple[tuple[int, int], ...], ...]  # per prime
+    # pre-processing
+    seg_count: int  # number of base-2^v segments of an input coefficient
+    beta_pows: np.ndarray  # (t, seg_count): B^k mod q_i
+    t_prime: int  # Alg 2 block width (t')
+    block_consts: np.ndarray  # (t, n_blocks): [beta_i^{t'*rho}]_{q_i}
+    # post-processing
+    w: int  # post-processing limb width
+    L: int  # post-processing limb count
+    qi_tilde: np.ndarray  # (t,): (q/q_i)^{-1} mod q_i
+    qi_star_limbs: np.ndarray  # (t, L): q/q_i in base 2^w
+    q_limbs: np.ndarray  # (L,)
+
+    @property
+    def jnp_safe(self) -> bool:
+        """int64 datapaths require q_i < 2^31; v=45 is served by the
+        Python-bigint oracle in polymul.py."""
+        return self.v <= 31
+
+
+def make_plan(qs: list[int], n: int, v: int, beta_terms, t_prime: int = 3) -> RnsPlan:
+    t = len(qs)
+    q = 1
+    for qi in qs:
+        q *= int(qi)
+    seg_count = -(-q.bit_length() // v)
+    beta_pows = np.array(
+        [[pow(1 << v, k, int(qi)) for k in range(seg_count)] for qi in qs],
+        dtype=np.int64,
+    )
+    n_blocks = -(-seg_count // t_prime)
+    block_consts = np.array(
+        [[pow(1 << v, t_prime * r, int(qi)) for r in range(n_blocks)] for qi in qs],
+        dtype=np.int64,
+    )
+    w = 28
+    # final accumulator < t * q: size limbs for that
+    L = -(-(q.bit_length() + t.bit_length()) // w)
+    qi_star = [q // int(qi) for qi in qs]
+    qi_tilde = np.array(
+        [pow(s % int(qi), int(qi) - 2, int(qi)) for s, qi in zip(qi_star, qs)],
+        dtype=np.int64,
+    )
+    qi_star_limbs = bigint.ints_to_limbs(qi_star, w, L)
+    q_limbs = bigint.int_to_limbs(q, w, L)
+    return RnsPlan(
+        n=n,
+        v=v,
+        t=t,
+        q=q,
+        qs=np.array(qs, dtype=np.int64),
+        beta_terms=tuple(beta_terms),
+        seg_count=seg_count,
+        beta_pows=beta_pows,
+        t_prime=t_prime,
+        block_consts=block_consts,
+        w=w,
+        L=L,
+        qi_tilde=qi_tilde,
+        qi_star_limbs=qi_star_limbs,
+        q_limbs=q_limbs,
+    )
+
+
+# --------------------------------------------------------------------------
+# Pre-processing
+# --------------------------------------------------------------------------
+
+
+def decompose(z: jnp.ndarray, plan: RnsPlan) -> jnp.ndarray:
+    """Generic residue computation.  z: (..., S) base-2^v segments (each
+    < 2^v) -> residues (t, ...)."""
+    assert plan.jnp_safe
+    qs = jnp.asarray(plan.qs)  # (t,)
+    bp = jnp.asarray(plan.beta_pows)  # (t, S)
+    terms = (z[..., None, :] * bp) % qs[:, None]  # (..., t, S)
+    r = terms.sum(axis=-1) % qs  # (..., t)
+    return jnp.moveaxis(r, -1, 0)
+
+
+def _sau_mul_beta(z: jnp.ndarray, terms) -> jnp.ndarray:
+    """z * beta via shifts/adds; beta = sum(sign * 2^e) - 1 (Eq 5, Fig 12).
+    Input z < 2^v  ->  output < 2^{v + v1 + 1} (<= 52 bits for v<=30)."""
+    acc = -z
+    for e, s in terms:
+        acc = acc + s * (z << e)
+    return acc
+
+
+def decompose_sau(z: jnp.ndarray, plan: RnsPlan) -> jnp.ndarray:
+    """Paper-faithful optimized pre-processing (Alg 2 with SAUs).
+
+    Per channel i, per block rho of t' segments:
+        block = z_{rho t'} + SAU(z_{rho t' + 1}) + SAU(Barrett(SAU(z_{rho t'+2})))
+        sum_rho = Barrett(block) * block_consts[i, rho]        (v x v multiply)
+        a_i = Barrett(sum_rho accumulated)
+    SAU depth capped at 1 (Approach-1 hybrid) for 63-bit safety.
+    """
+    S, tp = plan.seg_count, plan.t_prime
+    n_blocks = -(-S // tp)
+    pad = n_blocks * tp - S
+    if pad:
+        z = jnp.concatenate([z, jnp.zeros(z.shape[:-1] + (pad,), z.dtype)], axis=-1)
+    outs = []
+    for i in range(plan.t):
+        qi = int(plan.qs[i])
+        terms = plan.beta_terms[i]
+        v1 = terms[0][0]
+        c_sau = plan.v + v1 + 1 + 2  # SAU output + block-sum headroom
+        eps, s1, s2 = barrett_constants(qi, c_sau, plan.v)
+        # Accumulator of <= n_blocks already-reduced terms: < 2^{v+3}
+        epsa, sa1, sa2 = barrett_constants(qi, plan.v + 3, plan.v)
+        acc = jnp.zeros(z.shape[:-1], dtype=z.dtype)
+        for rho in range(n_blocks):
+            z0 = z[..., rho * tp + 0]
+            blk = z0
+            if tp > 1:
+                blk = blk + _sau_mul_beta(z[..., rho * tp + 1], terms)
+            for k in range(2, tp):
+                # z * beta^k with Barrett between SAU applications (depth 1)
+                x = _sau_mul_beta(z[..., rho * tp + k], terms)
+                x = barrett_reduce(x, qi, eps, s1, s2)
+                for _ in range(k - 1):
+                    x = _sau_mul_beta(x, terms)
+                    x = barrett_reduce(x, qi, eps, s1, s2)
+                blk = blk + x
+            blk = barrett_reduce(blk, qi, eps, s1, s2)
+            if rho == 0:
+                acc = acc + blk
+            else:
+                # The one generic v x v multiply per block (Eq 8).  The
+                # paper reduces its 2v-bit product with the wide (mu-bit)
+                # Barrett unit; a 63-bit-safe Barrett for c = 2v does not
+                # exist for v = 30, so the int64 model uses rem here
+                # (hardware cost accounting lives in benchmarks).
+                prod = blk * int(plan.block_consts[i, rho])
+                acc = acc + (prod % qi)
+        acc = barrett_reduce(acc, qi, epsa, sa1, sa2)
+        outs.append(acc)
+    return jnp.stack(outs, axis=0)
+
+
+# --------------------------------------------------------------------------
+# Post-processing
+# --------------------------------------------------------------------------
+
+
+def compose(residues: jnp.ndarray, plan: RnsPlan) -> jnp.ndarray:
+    """Inverse CRT per Eq 10: residues (t, ...) -> base-2^w limbs (..., L).
+
+    No full-width Barrett over q: the t-term sum is < t*q and is finished
+    with (t-1) conditional subtractions (Fig 16(b))."""
+    qs = jnp.asarray(plan.qs).reshape((plan.t,) + (1,) * (residues.ndim - 1))
+    y = (residues * jnp.asarray(plan.qi_tilde).reshape(qs.shape)) % qs  # (t, ...)
+    star = jnp.asarray(plan.qi_star_limbs)  # (t, L)
+    star_b = star.reshape((plan.t,) + (1,) * (residues.ndim - 1) + (plan.L,))
+    contrib = y[..., None] * star_b  # (t, ..., L), products < 2^58
+    acc = contrib.sum(axis=0)  # (..., L), < t * 2^58
+    acc = bigint.carry_normalize(acc, plan.w)
+    q_limbs = jnp.asarray(plan.q_limbs)
+    q_b = q_limbs.reshape((1,) * (acc.ndim - 1) + (plan.L,))
+    return bigint.mod_by_subtraction(acc, jnp.broadcast_to(q_b, acc.shape), plan.w, plan.t - 1)
+
+
+def compose_conventional(residues: jnp.ndarray, plan: RnsPlan) -> jnp.ndarray:
+    """Baseline Fig 16(a): multiply residues by the full-width constants
+    e_i = q_i^ * q_i~ mod q and reduce the sum mod q by subtraction.  Kept
+    as the comparison target for the Table V benchmark (the 'expensive'
+    variant differs in *datapath cost*, not in this functional model —
+    op-count accounting happens in benchmarks/postprocess.py)."""
+    # e_i as limbs, wide enough for the un-reduced sum (< t * q * 2^v)
+    Lw = max(plan.L, -(-(plan.q.bit_length() + plan.v + 8) // plan.w))
+    e = [
+        (int(plan.qi_tilde[i]) * (plan.q // int(plan.qs[i]))) % plan.q
+        for i in range(plan.t)
+    ]
+    e_limbs = bigint.ints_to_limbs(e, plan.w, Lw)  # (t, Lw)
+    # residue (31b) x limb (28b) products, accumulated
+    e_b = jnp.asarray(e_limbs).reshape(
+        (plan.t,) + (1,) * (residues.ndim - 1) + (Lw,)
+    )
+    contrib = residues[..., None] * e_b
+    padded = bigint.carry_normalize(contrib.sum(axis=0), plan.w)
+    # each term < q * 2^v; reduce with a subtraction ladder over shifted q
+    # (host-precomputed powers-of-two multiples), modeling the wide
+    # reduction over q that the paper's Fig 16(b) eliminates.
+    q_mults = [plan.q << s for s in range(plan.v + plan.t.bit_length(), -1, -1)]
+    for qm in q_mults:
+        if qm.bit_length() > Lw * plan.w:
+            continue
+        qm_limbs = jnp.asarray(bigint.int_to_limbs(qm, plan.w, Lw))
+        qm_b = jnp.broadcast_to(
+            qm_limbs.reshape((1,) * (padded.ndim - 1) + (Lw,)), padded.shape
+        )
+        padded = bigint.cond_sub(padded, qm_b, plan.w)
+    return padded[..., : plan.L]

@@ -1,0 +1,122 @@
+"""Folding-set schedule model for the 2-parallel NTT -> iNTT cascade
+(paper §III, Eq 1/2, Tables I/II, Fig 17; timing Eq 11-13).
+
+The container has no FPGA, so contribution 1 is validated at the level the
+paper itself argues it: the *schedule*.  We model the 2-parallel folded
+pipeline exactly:
+
+* Forward NTT last PE (PE_{m-1}) emits butterfly-pair k at clock
+  (k - 1) mod n/2  (Table I row PE_{m-1}: folding order l -> node l+1).
+* The iNTT's first stage needs, for its drawn-DFG node j (which pairs
+  frequencies j and j + n/2), the *physical* pair produced by forward
+  node rev(j): the forward output wire 2k carries frequency brv(k) and
+  wire 2k+1 carries brv(k) + n/2.
+* Therefore consuming with the **bit-reversed folding set** (Table II:
+  folding order l -> node <l+1>) makes every pair's consumption clock
+  equal its production clock — zero buffer, zero added latency.  With the
+  *same* folding set as the NTT (the conventional choice) the pairs must
+  wait, requiring an n/4-deep delay-switch-delay buffer and n/4 extra
+  clocks (Fig 17).
+
+``simulate_cascade`` computes production/consumption clocks and the
+buffer occupancy for both schedules; tests assert the paper's claims
+(0 vs n/4) for a sweep of n.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.ntt import bit_reverse_indices
+
+
+# --------------------------------------------------------------------------
+# Timing model (Eq 11-13)
+# --------------------------------------------------------------------------
+
+
+def bpp_cycles(n: int) -> int:
+    """Block processing period of the 2-parallel multiplier (Eq 11)."""
+    return n // 2
+
+
+def latency_cycles(n: int, t_pipe: int = 0, with_shuffle: bool = False) -> int:
+    """Latency of one modular polynomial multiplication (Eq 12); the
+    conventional shuffled cascade pays an extra n/4 (Fig 17)."""
+    extra = n // 4 if with_shuffle else 0
+    return (n - 2) + extra + t_pipe
+
+
+def total_cycles(n: int, L: int, t_pipe: int = 0, with_shuffle: bool = False) -> int:
+    """Clock cycles for L back-to-back multiplications (Eq 13)."""
+    return latency_cycles(n, t_pipe, with_shuffle) + bpp_cycles(n) * L
+
+
+# --------------------------------------------------------------------------
+# Folding sets (Tables I and II)
+# --------------------------------------------------------------------------
+
+
+def ntt_folding_order(n: int, s: int) -> np.ndarray:
+    """Table I: node index processed by PE_s at each folding clock l.
+    PE_s at clock l processes node (2^{m-s-1} + l) mod n/2."""
+    m = n.bit_length() - 1
+    half = n // 2
+    l = np.arange(half)
+    return (2 ** (m - s - 1) + l) % half if s < m - 1 else (l + 1) % half
+
+
+def intt_folding_order(n: int, s: int) -> np.ndarray:
+    """Table II: node processed by iNTT PE_s at folding clock l; <x> is the
+    bit-reverse over (m-1) bits."""
+    m = n.bit_length() - 1
+    half = n // 2
+    brv = bit_reverse_indices(half)
+    l = np.arange(half)
+    if s == 0:
+        return brv[(l + 1) % half]
+    return brv[(2 - 2**s + l) % half]
+
+
+# --------------------------------------------------------------------------
+# Cascade buffer simulation
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadeSim:
+    n: int
+    max_buffer_pairs: int  # peak # of product pairs parked between NTT & iNTT
+    added_latency: int  # extra clocks before iNTT can start consuming
+
+
+def simulate_cascade(n: int, bit_reversed_intt: bool = True) -> CascadeSim:
+    """Clock-accurate production/consumption simulation at the NTT->iNTT
+    boundary of the 2-parallel cascade."""
+    half = n // 2
+    brv_half = bit_reverse_indices(half)
+    # Production: forward PE_{m-1} emits physical pair k at clock (k-1) mod half.
+    prod_clock = np.empty(half, dtype=np.int64)
+    order = ntt_folding_order(n, n.bit_length() - 2)  # PE_{m-1} row
+    for clock, node in enumerate(order):
+        prod_clock[node] = clock
+    # Consumption: iNTT drawn-node j needs physical pair rev(j).
+    cons_clock = np.empty(half, dtype=np.int64)
+    if bit_reversed_intt:
+        intt_order = intt_folding_order(n, 0)  # Table II PE_0
+    else:
+        intt_order = (np.arange(half) + 1) % half  # same folding as NTT
+    for clock, node in enumerate(intt_order):
+        cons_clock[brv_half[node]] = clock
+    # A pair produced at clock p and consumed at clock c >= p occupies the
+    # buffer during [p, c).  If any c < p the schedule is infeasible in the
+    # same period; it slips by `slip` full periods handled as added latency.
+    slip = int(np.max(prod_clock - cons_clock).clip(min=0))
+    cons_eff = cons_clock + slip
+    occupancy = np.zeros(2 * half + 1, dtype=np.int64)
+    for p, c in zip(prod_clock, cons_eff):
+        occupancy[p] += 1
+        occupancy[c] -= 1
+    peak = int(np.max(np.cumsum(occupancy))) - 1  # pass-through pair not buffered
+    return CascadeSim(n=n, max_buffer_pairs=max(peak, 0), added_latency=slip)

@@ -1,0 +1,253 @@
+"""Wide-modulus (v > 31, up to v = 46) modular arithmetic in int64 JAX —
+the paper's t=4 / v=45 configuration as a first-class jit datapath.
+
+A 45-bit x 45-bit product needs 90 bits; there is no int128 on TPU or in
+jnp.  The special-prime form q = 2^v - beta (contribution 2) makes the
+fold cheap: products are built from 23-bit digit partials (all < 2^63)
+and bits >= v are folded with  2^v ≡ beta (mod q)  a bounded number of
+times.  This is exactly why the paper's low-Hamming-weight moduli matter
+beyond FPGA area: they keep wide modular arithmetic inside a 64-bit
+(or, on TPU, 32-bit-pair) integer unit.
+
+All ops are elementwise/broadcastable; a WideSpec carries the per-prime
+constants.  Validated against Python bigints (hypothesis sweeps) and the
+schoolbook polynomial oracle (tests/test_wide.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ntt as ntt_mod
+
+D = 23  # digit width
+M = (1 << D) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class WideSpec:
+    q: int
+    v: int
+    beta: int  # q = 2^v - beta, 0 < beta < 2^{v1+1}, low Hamming weight
+
+    def __post_init__(self):
+        assert self.q == (1 << self.v) - self.beta
+        assert 32 <= self.v <= 46, self.v
+        # fold-safety: terms in mul_mod stay < 2^62 (see derivation below)
+        assert self.beta < 1 << 30, hex(self.beta)
+
+
+def from_special(prime) -> WideSpec:
+    """Build from primes.SpecialPrime."""
+    return WideSpec(q=prime.q, v=prime.v, beta=prime.beta)
+
+
+def add_mod(a, b, q):
+    s = a + b
+    return jnp.where(s >= q, s - q, s)
+
+
+def sub_mod(a, b, q):
+    d_ = a - b
+    return jnp.where(d_ < 0, d_ + q, d_)
+
+
+def div2_mod(x, q):
+    return (x >> 1) + (x & 1) * ((q + 1) // 2)
+
+
+def _fold_v(x, spec: WideSpec):
+    """x < 2^62 -> x mod-equivalent < 2^{v+1}ish via two 2^v folds."""
+    v, beta = spec.v, spec.beta
+    mask = (1 << v) - 1
+    x = (x & mask) + (x >> v) * beta  # x>>v < 2^17, *beta < 2^47 -> < 2^48
+    x = (x & mask) + (x >> v) * beta  # second pass: < 2^v + 2^32
+    return x
+
+
+def reduce_mod(x, spec: WideSpec):
+    """x < 2^62 -> x mod q (canonical)."""
+    x = _fold_v(x, spec)
+    x = jnp.where(x >= spec.q, x - spec.q, x)
+    x = jnp.where(x >= spec.q, x - spec.q, x)
+    return x
+
+
+def mul_mod(a, b, spec: WideSpec):
+    """(a * b) mod q for a, b < q < 2^46, int64-safe throughout.
+
+    Derivation of bounds (b2 = 2*beta < 2^31):
+      partials p00 < 2^46, p01 < 2^47, p11 < 2^46
+      hi46 = p01>>23 + p11   (value of x >> 46)        < 2^47
+      lo46 = p00 + (p01 & M)<<23                        < 2^47
+      x ≡ lo46 + b2^{v-46 adj} ... we fold at 46 bits with
+      2^46 ≡ 2^{46-v} * beta * 2^{?}: for v <= 46, 2^46 = 2^{46-v} 2^v
+      ≡ 2^{46-v} beta  (mod q), so with g = 2^{46-v} beta (< 2^31):
+      x ≡ lo46 + g*h0 + ((g*h1 & M)<<23) + g2*(g*h1 >> 23)
+      where h0 = hi46 & M (< 2^23), h1 = hi46 >> 23 (< 2^24),
+      g*h0 < 2^54, g*h1 < 2^55, (…&M)<<23 < 2^46, g*(g*h1>>23) < 2^63?
+      g*h1>>23 < 2^32, times g < 2^31 -> 2^63: tightened by beta < 2^30
+      (asserted), giving g <= 2*beta < 2^31 only for v=45; then the last
+      term < 2^62.  Total < 2^62.5 -> one extra fold pass keeps us exact
+      because _fold_v only needs x < 2^63.
+    """
+    a0, a1 = a & M, a >> D
+    b0, b1 = b & M, b >> D
+    p00 = a0 * b0
+    p01 = a0 * b1 + a1 * b0
+    p11 = a1 * b1
+    lo46 = p00 + ((p01 & M) << D)  # bits [0, 47)
+    hi46 = (p01 >> D) + p11  # value of x >> 46
+    g = (1 << (46 - spec.v)) * spec.beta  # 2^46 ≡ g (mod q)
+    h0, h1 = hi46 & M, hi46 >> D
+    t1 = g * h0  # < 2^54
+    z = g * h1  # < 2^55
+    acc = lo46 + t1 + ((z & M) << D) + g * (z >> D)
+    return reduce_mod(acc, spec)
+
+
+# --------------------------------------------------------------------------
+# NTT over a wide modulus (same flow graphs as core/ntt.py)
+# --------------------------------------------------------------------------
+
+
+def ntt_raw(a, fwd, spec: WideSpec):
+    n = a.shape[-1]
+    lead = a.shape[:-1]
+    q = spec.q
+    m, t = 1, n
+    while m < n:
+        t //= 2
+        w = fwd[m : 2 * m]
+        x = a.reshape(lead + (m, 2, t))
+        u = x[..., 0, :]
+        vv = mul_mod(x[..., 1, :], w[:, None], spec)
+        a = jnp.stack([add_mod(u, vv, q), sub_mod(u, vv, q)], axis=-2)
+        a = a.reshape(lead + (n,))
+        m *= 2
+    return a
+
+
+def intt_raw(a, inv, spec: WideSpec):
+    n = a.shape[-1]
+    lead = a.shape[:-1]
+    q = spec.q
+    h, t = n // 2, 1
+    while h >= 1:
+        w = inv[h : 2 * h]
+        x = a.reshape(lead + (h, 2, t))
+        u, vv = x[..., 0, :], x[..., 1, :]
+        s = add_mod(u, vv, q)
+        d_ = mul_mod(sub_mod(u, vv, q), w[:, None], spec)
+        a = jnp.stack([div2_mod(s, q), div2_mod(d_, q)], axis=-2)
+        a = a.reshape(lead + (n,))
+        h //= 2
+        t *= 2
+    return a
+
+
+def negacyclic_mul(a, b, fwd, inv, spec: WideSpec):
+    fa = ntt_raw(a, fwd, spec)
+    fb = ntt_raw(b, fwd, spec)
+    return intt_raw(mul_mod(fa, fb, spec), inv, spec)
+
+
+# --------------------------------------------------------------------------
+# the paper's t=4 / v=45 multiplier (pre/post-processing included)
+# --------------------------------------------------------------------------
+
+
+class WideParenttMultiplier:
+    """End-to-end PaReNTT for v in (31, 46]: segments -> residues ->
+    per-channel wide-NTT cascade -> inverse CRT limbs.
+
+    Post-processing limb width W=14 keeps y(46b) x limb(14b) x t(4)
+    inside int64."""
+
+    POST_W = 14
+
+    def __init__(self, params):
+        assert params.v > 31, "use ParenttMultiplier for v <= 31"
+        self.params = params
+        plan = params.plan
+        self.specs = tuple(from_special(p) for p in params.primes)
+        self.tables = [
+            ntt_mod.make_tables(int(q), params.n) for q in plan.qs
+        ]
+        W = self.POST_W
+        from repro.core import bigint
+
+        self.L = -(-(plan.q.bit_length() + plan.t.bit_length()) // W)
+        self.qi_star_limbs = bigint.ints_to_limbs(
+            [plan.q // int(qi) for qi in plan.qs], W, self.L
+        )
+        self.q_limbs = bigint.int_to_limbs(plan.q, W, self.L)
+
+    # -- step 1: residues via per-channel folding of base-2^v segments ----
+    def preprocess(self, z):
+        """z: (..., n, S) base-2^v segments -> residues (t, ..., n)."""
+        plan = self.params.plan
+        outs = []
+        for i, spec in enumerate(self.specs):
+            acc = z[..., 0].astype(jnp.int64)
+            for k in range(1, plan.seg_count):
+                pw = int(plan.beta_pows[i, k])  # B^k mod q_i < 2^46
+                acc = add_mod(
+                    acc, mul_mod(z[..., k].astype(jnp.int64), jnp.int64(pw), spec),
+                    spec.q,
+                )
+            outs.append(acc)
+        return jnp.stack(outs)
+
+    # -- step 2 ------------------------------------------------------------
+    def residue_mul(self, ra, rb):
+        outs = []
+        for i, spec in enumerate(self.specs):
+            tb = self.tables[i]
+            outs.append(
+                negacyclic_mul(
+                    ra[i], rb[i], jnp.asarray(tb.fwd), jnp.asarray(tb.inv), spec
+                )
+            )
+        return jnp.stack(outs)
+
+    # -- step 3: Eq 10 with 14-bit limbs ------------------------------------
+    def postprocess(self, residues):
+        from repro.core import bigint
+
+        plan = self.params.plan
+        W, L = self.POST_W, self.L
+        ys = []
+        for i, spec in enumerate(self.specs):
+            tilde = int(plan.qi_tilde[i])
+            ys.append(mul_mod(residues[i], jnp.int64(tilde), spec))
+        y = jnp.stack(ys)  # (t, ..., n) each < q_i < 2^46
+        star = jnp.asarray(self.qi_star_limbs)  # (t, L) 14-bit limbs
+        star_b = star.reshape((plan.t,) + (1,) * (y.ndim - 1) + (L,))
+        contrib = y[..., None] * star_b  # < 2^60, t-sum < 2^62
+        acc = bigint.carry_normalize(contrib.sum(axis=0), W)
+        q_b = jnp.asarray(self.q_limbs).reshape((1,) * (acc.ndim - 1) + (L,))
+        return bigint.mod_by_subtraction(
+            acc, jnp.broadcast_to(q_b, acc.shape), W, plan.t - 1
+        )
+
+    def __call__(self, za, zb):
+        ra, rb = self.preprocess(za), self.preprocess(zb)
+        return self.postprocess(self.residue_mul(ra, rb))
+
+    # -- host convenience ----------------------------------------------------
+    def multiply_ints(self, a, b):
+        from repro.core import bigint, polymul as pm
+
+        plan = self.params.plan
+        za = jnp.asarray(pm.ints_to_segments(a, plan))
+        zb = jnp.asarray(pm.ints_to_segments(b, plan))
+        limbs = jax.jit(self.__call__)(za, zb)
+        arr = np.asarray(limbs)
+        return [
+            bigint.limbs_to_int(row, self.POST_W)
+            for row in arr.reshape(-1, arr.shape[-1])
+        ]

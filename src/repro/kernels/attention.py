@@ -1,0 +1,163 @@
+"""Pallas flash-attention (forward) kernel: online-softmax blocked
+attention — Q/K/V/O are the only HBM traffic; the O(S^2) score/probs
+tensors live exclusively in VMEM tiles.
+
+Supports: GQA (q-head groups per kv head), causal masking, sliding
+window, attention-logit softcap (gemma2), arbitrary Sq != Skv (decode /
+chunked prefill).
+
+Grid: (batch, q_heads, Sq / BLK_Q).  Each step loads a (BLK_Q, D) query
+tile into VMEM and streams (BLK_K, D) key/value tiles with a fori_loop of
+dynamic slices, carrying the running max / normalizer / accumulator.
+
+Validated in interpret mode against kernels/ref.py::attention_ref for a
+sweep of shapes (tests/test_kernels_attention.py).  On-TPU HBM traffic
+per layer = (Sq*H*D + 2*Skv*Hk*D) * ceil(Sq/BLK_Q reuse) + Sq*H*D output —
+this analytic figure is what §Perf uses (interpret-mode HLO inlines the
+kernel, so the dry-run analyzer cannot see VMEM residency).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+DEFAULT_BLK_Q = 128
+DEFAULT_BLK_K = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window, softcap,
+            blk_k, q_offset_base, skv_true):
+    """q_ref: (BLK_Q, D); k_ref/v_ref: (Skv, D); o_ref: (BLK_Q, D)."""
+    blk_q, d = q_ref.shape
+    skv = k_ref.shape[0]
+    qi = pl.program_id(2)
+    q = q_ref[...].astype(jnp.float32) * scale
+    q_pos = q_offset_base + qi * blk_q + jax.lax.iota(jnp.int32, blk_q)
+
+    n_kv = skv // blk_k
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[...], j * blk_k, blk_k).astype(
+            jnp.float32
+        )
+        v = jax.lax.dynamic_slice_in_dim(v_ref[...], j * blk_k, blk_k).astype(
+            jnp.float32
+        )
+        s = q @ k.T  # (BLK_Q, BLK_K)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        k_pos = j * blk_k + jax.lax.iota(jnp.int32, blk_k)
+        mask = k_pos[None, :] < skv_true  # exclude Skv padding
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= (k_pos[None, :] > q_pos[:, None] - window) | (window == 0)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=1)
+        acc = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc
+
+    m0 = jnp.full((blk_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((blk_q,), jnp.float32)
+    acc0 = jnp.zeros((blk_q, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_kv, body, (m0, l0, acc0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "q_offset", "blk_q", "blk_k", "interpret",
+    ),
+)
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window=None,  # None/0 = global; int/traced = sliding window
+    softcap: float = 0.0,
+    q_offset=0,  # absolute position of q[0] (decode: cache fill level)
+    blk_q: int = DEFAULT_BLK_Q,
+    blk_k: int = DEFAULT_BLK_K,
+    interpret: bool = True,
+):
+    """q: (B, Sq, H, D); k/v: (B, Skv, Hk, D) -> (B, Sq, H, D).
+
+    H must be a multiple of Hk (GQA).  Sq/Skv are padded to the block
+    sizes internally.
+    """
+    B, Sq, H, D = q.shape
+    _, Skv, Hk, _ = k.shape
+    g = H // Hk
+    scale = float(1.0 / np.sqrt(D))  # python float: weak-typed (x64 safe)
+    pad_q = (-Sq) % blk_q
+    pad_k = (-Skv) % blk_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sq_p, Skv_p = q.shape[1], k.shape[1]
+    # transpose to (B, H, S, D) for clean per-head blocking
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    # window must be STATIC (None or int): a traced scalar would be a
+    # captured constant inside the kernel.  Per-layer traced windows
+    # (gemma2 alternation under scan) use the reference path; grouping the
+    # scan by parity lifts them to static (see DESIGN §6).
+    window_static = int(window) if window else None
+
+    kern = functools.partial(
+        _kernel,
+        scale=scale,
+        causal=causal,
+        window=window_static,
+        softcap=softcap,
+        blk_k=blk_k,
+        q_offset_base=q_offset,
+        skv_true=Skv,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(B, H, Sq_p // blk_q),
+        in_specs=[
+            pl.BlockSpec((None, None, blk_q, D), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((None, None, Skv_p, D), lambda b, h, i: (b, h // g, 0, 0)),
+            pl.BlockSpec((None, None, Skv_p, D), lambda b, h, i: (b, h // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, blk_q, D), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(qt.shape, q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out.transpose(0, 2, 1, 3)
+    if pad_q:
+        out = out[:, :Sq]
+    return out
+
+
+def hbm_bytes_per_call(B, Sq, Skv, H, Hk, D, *, blk_q=1024, itemsize=2):
+    """Analytic on-TPU HBM traffic of a production variant of this kernel
+    (for §Perf accounting): Q and O touched once; K/V streamed once per
+    q-block with the whole GQA group processed together (a (blk_q, G, D)
+    query tile is ~2 MB — VMEM-comfortable), so no H/Hk re-read factor.
+
+    Compare against the materialized path: the (B, H, Sq, Skv) f32 score
+    tensor alone is written once and read twice (softmax, PV)."""
+    q_bytes = B * Sq * H * D * itemsize
+    o_bytes = q_bytes
+    kv_reuse = -(-Sq // blk_q)  # K/V re-read once per q-block
+    kv_bytes = 2 * B * Skv * Hk * D * itemsize * kv_reuse
+    return q_bytes + o_bytes + kv_bytes

@@ -1,0 +1,183 @@
+"""Pallas kernels for RNS pre-processing (residual computation, Alg 1/2
+with SAU strength reduction) and post-processing (inverse CRT, Eq 10).
+
+Hardware mapping notes
+----------------------
+* Pre-processing: each RNS channel is its *own specialized circuit* in the
+  paper (the SAU wiring is fixed by beta_i's signed-PoT terms).  We mirror
+  that exactly: one pallas_call per channel with the shift/add network
+  baked in statically — shifts and adds only, no integer multiplier, on
+  the VPU int lanes.
+* Post-processing: the (t -> limbs) recombination is a static einsum-like
+  network: v-bit x w-bit limb products, a carry ripple (static L-step
+  loop), and (t-1) conditional big-int subtractions.  No reduction over
+  the wide modulus q ever materializes (Fig 16(b)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import rns as rns_mod
+
+BLK = 256  # coefficients per grid step
+
+
+# --------------------------------------------------------------------------
+# pre-processing (one specialized kernel per channel, SAU network static)
+# --------------------------------------------------------------------------
+
+
+def _make_decompose_kernel(qi: int, v: int, beta_terms, seg_count: int, t_prime: int,
+                           block_consts):
+    """Returns a kernel closure with the channel's SAU circuit baked in."""
+    v1 = beta_terms[0][0]
+    c_sau = v + v1 + 3
+    eps, s1, s2 = rns_mod.barrett_constants(qi, c_sau, v)
+    epsa, sa1, sa2 = rns_mod.barrett_constants(qi, v + 3, v)
+    n_blocks = -(-seg_count // t_prime)
+
+    def sau(z):
+        acc = -z
+        for e, s in beta_terms:
+            acc = acc + s * (z << e)
+        return acc
+
+    def red(x):
+        return rns_mod.barrett_reduce(x, qi, eps, s1, s2)
+
+    def kernel(z_ref, o_ref):
+        z = z_ref[...]  # (blk, S)
+        acc = jnp.zeros(z.shape[:-1], dtype=z.dtype)
+        for rho in range(n_blocks):
+            blk = z[..., rho * t_prime]
+            if t_prime > 1 and rho * t_prime + 1 < seg_count:
+                blk = blk + sau(z[..., rho * t_prime + 1])
+            for k in range(2, t_prime):
+                if rho * t_prime + k >= seg_count:
+                    break
+                x = red(sau(z[..., rho * t_prime + k]))
+                for _ in range(k - 1):
+                    x = red(sau(x))
+                blk = blk + x
+            blk = red(blk)
+            if rho == 0:
+                acc = acc + blk
+            else:
+                acc = acc + (blk * int(block_consts[rho])) % qi
+        o_ref[...] = rns_mod.barrett_reduce(acc, qi, epsa, sa1, sa2)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def decompose_pallas(z, *, plan: rns_mod.RnsPlan, interpret: bool = True):
+    """z: (rows, S) segments -> residues (t, rows).  One specialized
+    pallas_call per RNS channel (= per hardware circuit)."""
+    rows, S = z.shape
+    pad = (-rows) % BLK
+    zp = jnp.pad(z, ((0, pad), (0, 0))) if pad else z
+    outs = []
+    for i in range(plan.t):
+        kern = _make_decompose_kernel(
+            int(plan.qs[i]),
+            plan.v,
+            plan.beta_terms[i],
+            plan.seg_count,
+            plan.t_prime,
+            plan.block_consts[i],
+        )
+        out = pl.pallas_call(
+            kern,
+            grid=(zp.shape[0] // BLK,),
+            in_specs=[pl.BlockSpec((BLK, S), lambda r: (r, 0))],
+            out_specs=pl.BlockSpec((BLK,), lambda r: (r,)),
+            out_shape=jax.ShapeDtypeStruct((zp.shape[0],), z.dtype),
+            interpret=interpret,
+        )(zp)
+        outs.append(out[:rows])
+    return jnp.stack(outs)
+
+
+# --------------------------------------------------------------------------
+# post-processing (Eq 10)
+# --------------------------------------------------------------------------
+
+
+def _make_compose_kernel(plan: rns_mod.RnsPlan):
+    t, L, w = plan.t, plan.L, plan.w
+    mask = (1 << w) - 1
+
+    def kernel(res_ref, qs_ref, tilde_ref, star_ref, qlimb_ref, o_ref):
+        res = res_ref[...]  # (t, blk)
+        tilde = tilde_ref[...]  # (t, 1)
+        star = star_ref[...]  # (t, L)
+        qs = qs_ref[...]  # (t, 1)
+        y = (res * tilde) % qs  # (t, blk)
+        contrib = y[:, :, None] * star[:, None, :]  # (t, blk, L)
+        acc = contrib.sum(axis=0)  # (blk, L)
+        # carry ripple (static)
+        outs = []
+        carry = jnp.zeros_like(acc[:, 0])
+        for i in range(L):
+            s = acc[:, i] + carry
+            outs.append(s & mask)
+            carry = s >> w
+        acc = jnp.stack(outs, axis=-1)
+        # (t-1) conditional big-int subtractions of q
+        qlimbs = qlimb_ref[0]  # (L,)
+        for _ in range(t - 1):
+            ge = jnp.ones(acc.shape[:1], dtype=bool)
+            decided = jnp.zeros(acc.shape[:1], dtype=bool)
+            for i in range(L - 1, -1, -1):
+                gt = acc[:, i] > qlimbs[i]
+                lt = acc[:, i] < qlimbs[i]
+                ge = jnp.where(~decided & gt, True, ge)
+                ge = jnp.where(~decided & lt, False, ge)
+                decided = decided | gt | lt
+            borrow = jnp.zeros_like(acc[:, 0])
+            subbed = []
+            for i in range(L):
+                d = acc[:, i] - qlimbs[i] - borrow
+                neg = d < 0
+                subbed.append(jnp.where(neg, d + (1 << w), d))
+                borrow = neg.astype(acc.dtype)
+            sub = jnp.stack(subbed, axis=-1)
+            acc = jnp.where(ge[:, None], sub, acc)
+        o_ref[...] = acc
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def compose_pallas(residues, *, plan: rns_mod.RnsPlan, interpret: bool = True):
+    """residues: (t, rows) -> limbs (rows, L) of the composed value mod q."""
+    t, rows = residues.shape
+    L = plan.L
+    pad = (-rows) % BLK
+    rp = jnp.pad(residues, ((0, 0), (0, pad))) if pad else residues
+    kern = _make_compose_kernel(plan)
+    out = pl.pallas_call(
+        kern,
+        grid=(rp.shape[1] // BLK,),
+        in_specs=[
+            pl.BlockSpec((t, BLK), lambda r: (0, r)),
+            pl.BlockSpec((t, 1), lambda r: (0, 0)),
+            pl.BlockSpec((t, 1), lambda r: (0, 0)),
+            pl.BlockSpec((t, L), lambda r: (0, 0)),
+            pl.BlockSpec((1, L), lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLK, L), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp.shape[1], L), residues.dtype),
+        interpret=interpret,
+    )(
+        rp,
+        jnp.asarray(plan.qs).reshape(t, 1),
+        jnp.asarray(plan.qi_tilde).reshape(t, 1),
+        jnp.asarray(plan.qi_star_limbs),
+        jnp.asarray(plan.q_limbs).reshape(1, L),
+    )
+    return out[:rows]

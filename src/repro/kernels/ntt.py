@@ -1,0 +1,172 @@
+"""Pallas TPU kernels for the batched NWC NTT / iNTT and the fused
+no-shuffle polynomial-multiplication cascade (paper contribution 1 mapped
+to the TPU memory hierarchy).
+
+TPU mapping
+-----------
+* One grid step processes a (ROWS, n) tile of polynomials for one RNS
+  channel, resident in VMEM; twiddles (n,) for that channel are also VMEM
+  blocks.  Per-channel moduli arrive as (1, 1) SMEM-style scalar blocks.
+* The fused kernel runs NTT(a), NTT(b), the pointwise product and the
+  iNTT inside ONE pallas_call: the NTT-domain product never exists in HBM.
+  This is the TPU analogue of the paper's buffer-free NTT->iNTT cascade —
+  on the FPGA the eliminated resource is the DSD shuffle buffer; here it
+  is an HBM round-trip of 2 x ROWS x n x 8 bytes per channel.
+* Butterfly pairing is expressed as reshapes (m, 2, t) of the trailing
+  axis.  Stages with pair stride >= 128 keep the lane dimension intact;
+  for stride < 128 a real-TPU deployment flips to the transposed-tile
+  schedule (see DESIGN.md §6) — numerically identical, validated here in
+  interpret mode.
+
+VMEM budget per grid step (n = 4096, ROWS = 8, int64):
+  a, b tiles 2 x 256 KiB + twiddles 2 x 32 KiB + scratch ≈ 0.8 MiB << 128 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_ROWS = 8
+
+
+def _fwd_stages(a, fwd, q):
+    """CT/DIT stages on the last axis of a (rows, n) tile."""
+    rows, n = a.shape
+    m, t = 1, n
+    while m < n:
+        t //= 2
+        w = jax.lax.slice_in_dim(fwd, m, 2 * m)  # static bounds
+        x = a.reshape(rows, m, 2, t)
+        u = x[:, :, 0, :]
+        v = (x[:, :, 1, :] * w[None, :, None]) % q
+        s = u + v
+        s = jnp.where(s >= q, s - q, s)
+        d = u - v
+        d = jnp.where(d < 0, d + q, d)
+        a = jnp.stack([s, d], axis=2).reshape(rows, n)
+        m *= 2
+    return a
+
+
+def _inv_stages(a, inv, q, half):
+    """Mirror-order GS stages with the per-stage halving (Fig 9 PE)."""
+    rows, n = a.shape
+    h, t = n // 2, 1
+    while h >= 1:
+        w = jax.lax.slice_in_dim(inv, h, 2 * h)
+        x = a.reshape(rows, h, 2, t)
+        u, v = x[:, :, 0, :], x[:, :, 1, :]
+        s = u + v
+        s = jnp.where(s >= q, s - q, s)
+        d = u - v
+        d = jnp.where(d < 0, d + q, d)
+        d = (d * w[None, :, None]) % q
+        s = (s >> 1) + (s & 1) * half
+        d = (d >> 1) + (d & 1) * half
+        a = jnp.stack([s, d], axis=2).reshape(rows, n)
+        h //= 2
+        t *= 2
+    return a
+
+
+# --------------------------------------------------------------------------
+# kernels
+# --------------------------------------------------------------------------
+
+
+def _ntt_kernel(q_ref, fwd_ref, a_ref, o_ref):
+    q = q_ref[0]
+    o_ref[...] = _fwd_stages(a_ref[...], fwd_ref[...], q)
+
+
+def _intt_kernel(q_ref, half_ref, inv_ref, a_ref, o_ref):
+    q = q_ref[0]
+    half = half_ref[0]
+    o_ref[...] = _inv_stages(a_ref[...], inv_ref[...], q, half)
+
+
+def _fused_kernel(q_ref, half_ref, fwd_ref, inv_ref, a_ref, b_ref, o_ref):
+    q = q_ref[0]
+    half = half_ref[0]
+    fa = _fwd_stages(a_ref[...], fwd_ref[...], q)
+    fb = _fwd_stages(b_ref[...], fwd_ref[...], q)
+    prod = (fa * fb) % q  # never leaves VMEM
+    o_ref[...] = _inv_stages(prod, inv_ref[...], q, half)
+
+
+# --------------------------------------------------------------------------
+# pallas_call wrappers (grid = (channels, row_blocks))
+# --------------------------------------------------------------------------
+
+
+def _grid_specs(t: int, rows: int, n: int, row_blk: int):
+    """Common BlockSpecs (leading channel axis squeezed with None):
+    per-channel scalars, (n,) tables, (row_blk, n) data tiles."""
+    scalar = pl.BlockSpec((None, 1), lambda c, r: (c, 0))
+    table = pl.BlockSpec((None, n), lambda c, r: (c, 0))
+    data = pl.BlockSpec((None, row_blk, n), lambda c, r: (c, r, 0))
+    return scalar, table, data
+
+
+def _pad_rows(x, row_blk):
+    rows = x.shape[1]
+    pad = (-rows) % row_blk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    return x, rows
+
+
+@functools.partial(jax.jit, static_argnames=("row_blk", "interpret"))
+def ntt_channels_pallas(a, qs, fwd, *, row_blk: int = DEFAULT_ROWS, interpret: bool = True):
+    """a: (t, rows, n) -> forward NTT per channel.  qs: (t,), fwd: (t, n)."""
+    t, _, n = a.shape
+    a, rows = _pad_rows(a, row_blk)
+    scalar, table, data = _grid_specs(t, a.shape[1], n, row_blk)
+    out = pl.pallas_call(
+        _ntt_kernel,
+        grid=(t, a.shape[1] // row_blk),
+        in_specs=[scalar, table, data],
+        out_specs=data,
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=interpret,
+    )(qs.reshape(t, 1), fwd, a)
+    return out[:, :rows]
+
+
+@functools.partial(jax.jit, static_argnames=("row_blk", "interpret"))
+def intt_channels_pallas(a, qs, half, inv, *, row_blk: int = DEFAULT_ROWS, interpret: bool = True):
+    t, _, n = a.shape
+    a, rows = _pad_rows(a, row_blk)
+    scalar, table, data = _grid_specs(t, a.shape[1], n, row_blk)
+    out = pl.pallas_call(
+        _intt_kernel,
+        grid=(t, a.shape[1] // row_blk),
+        in_specs=[scalar, scalar, table, data],
+        out_specs=data,
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=interpret,
+    )(qs.reshape(t, 1), half.reshape(t, 1), inv, a)
+    return out[:, :rows]
+
+
+@functools.partial(jax.jit, static_argnames=("row_blk", "interpret"))
+def fused_polymul_pallas(
+    a, b, qs, half, fwd, inv, *, row_blk: int = DEFAULT_ROWS, interpret: bool = True
+):
+    """(t, rows, n) x (t, rows, n) -> negacyclic products, fused cascade."""
+    t, _, n = a.shape
+    a, rows = _pad_rows(a, row_blk)
+    b, _ = _pad_rows(b, row_blk)
+    scalar, table, data = _grid_specs(t, a.shape[1], n, row_blk)
+    out = pl.pallas_call(
+        _fused_kernel,
+        grid=(t, a.shape[1] // row_blk),
+        in_specs=[scalar, scalar, table, table, data, data],
+        out_specs=data,
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=interpret,
+    )(qs.reshape(t, 1), half.reshape(t, 1), fwd, inv, a, b)
+    return out[:, :rows]

@@ -1,0 +1,82 @@
+"""jit'd public wrappers for the Pallas kernels with a pure-jnp fallback.
+
+`use_pallas=True` (default) runs the kernels in interpret mode on CPU and
+compiled mode on TPU; `use_pallas=False` routes to the ref oracles (used
+by the dry-run lowering, where interpret-mode python loops would bloat
+the HLO on the 512-device mesh).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ntt as ntt_mod
+from repro.core.params import ParenttParams
+from repro.kernels import crt as crt_kernels
+from repro.kernels import ntt as ntt_kernels
+from repro.kernels import ref
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ntt_forward(a, params: ParenttParams, *, use_pallas: bool = True):
+    """a: (t, rows, n) -> NTT per RNS channel."""
+    ct = params.tables
+    if use_pallas:
+        return ntt_kernels.ntt_channels_pallas(
+            a, jnp.asarray(ct.qs), jnp.asarray(ct.fwd), interpret=not _is_tpu()
+        )
+    return ntt_mod.ntt_channels(a, ct)
+
+
+def ntt_inverse(a, params: ParenttParams, *, use_pallas: bool = True):
+    ct = params.tables
+    if use_pallas:
+        return ntt_kernels.intt_channels_pallas(
+            a,
+            jnp.asarray(ct.qs),
+            jnp.asarray(ct.half),
+            jnp.asarray(ct.inv),
+            interpret=not _is_tpu(),
+        )
+    return ntt_mod.intt_channels(a, ct)
+
+
+def negacyclic_mul(a, b, params: ParenttParams, *, use_pallas: bool = True):
+    """(t, rows, n) x (t, rows, n): the fused no-shuffle cascade."""
+    ct = params.tables
+    if use_pallas:
+        return ntt_kernels.fused_polymul_pallas(
+            a,
+            b,
+            jnp.asarray(ct.qs),
+            jnp.asarray(ct.half),
+            jnp.asarray(ct.fwd),
+            jnp.asarray(ct.inv),
+            interpret=not _is_tpu(),
+        )
+    return ntt_mod.negacyclic_mul_channels(a, b, ct)
+
+
+def rns_decompose(z, params: ParenttParams, *, use_pallas: bool = True):
+    """z: (rows, S) -> (t, rows)."""
+    if use_pallas:
+        return crt_kernels.decompose_pallas(
+            z, plan=params.plan, interpret=not _is_tpu()
+        )
+    from repro.core import rns as rns_mod
+
+    return rns_mod.decompose_sau(z, params.plan)
+
+
+def rns_compose(residues, params: ParenttParams, *, use_pallas: bool = True):
+    """(t, rows) -> (rows, L)."""
+    if use_pallas:
+        return crt_kernels.compose_pallas(
+            residues, plan=params.plan, interpret=not _is_tpu()
+        )
+    from repro.core import rns as rns_mod
+
+    return rns_mod.compose(residues, params.plan)

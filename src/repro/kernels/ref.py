@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These re-use the core library implementations so the kernels are pinned to
+the same math that the schoolbook-validated pipeline uses.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import ntt as ntt_mod
+from repro.core import rns as rns_mod
+
+
+def ntt_ref(a, fwd, q):
+    """a: (..., n) residues; fwd: (n,) twiddles; q scalar."""
+    return ntt_mod.ntt_raw(a, fwd, q)
+
+
+def intt_ref(a, inv, q, half):
+    return ntt_mod.intt_raw(a, inv, q, half)
+
+
+def fused_polymul_ref(a, b, fwd, inv, q, half):
+    """NTT(a) ⊙ NTT(b) -> iNTT, one modulus."""
+    fa = ntt_mod.ntt_raw(a, fwd, q)
+    fb = ntt_mod.ntt_raw(b, fwd, q)
+    return ntt_mod.intt_raw((fa * fb) % q, inv, q, half)
+
+
+def decompose_channel_ref(z, beta_pows_i, qi):
+    """z: (..., S) segments -> residues (...,) for ONE channel."""
+    terms = (z * beta_pows_i) % qi
+    return terms.sum(axis=-1) % qi
+
+
+def compose_ref(residues, plan: rns_mod.RnsPlan):
+    """residues (t, ...) -> limbs (..., L); full optimized Eq 10 path."""
+    return rns_mod.compose(residues, plan)
+
+
+def barrett_ref(x, q):
+    return x % q
+
+
+def pointwise_mul_ref(a, b, q):
+    return (a * b) % q

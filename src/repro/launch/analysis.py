@@ -1,0 +1,172 @@
+"""Compiled-artifact analysis: cost/memory extraction + collective-byte
+parsing from post-SPMD HLO, and the three-term roofline model.
+
+Hardware constants (TPU v5e target):
+  197 TFLOP/s bf16 per chip | 819 GB/s HBM | ~50 GB/s/link ICI
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link (per-chip effective, 1 link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of one HLO type string (handles tuples by summing)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op in post-SPMD HLO (per-device
+    shapes).  Returns {op_kind: bytes, ..., 'total': bytes, 'count': n}."""
+    out = {k: 0 for k in _COLLECTIVES}
+    count = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls:
+            continue
+        lhs, rhs = ls.split(" = ", 1)
+        for kind in _COLLECTIVES:
+            # match `<type> <op-name>(` with op kind at the start of rhs ops
+            if re.match(rf"(\(|\w|\[|,|\s)*{kind}(\.\d+)?\(", rhs) or rhs.startswith(kind):
+                out[kind] += _shape_bytes(rhs.split(kind)[0])
+                count += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["count"] = count
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per-device HLO flops
+    hbm_bytes: float  # per-device bytes accessed
+    coll_bytes: float  # per-device collective bytes
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self):
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def roofline_terms(cost: dict, coll: dict, n_devices: int) -> Roofline:
+    """cost_analysis flops/bytes are for the whole computation on CPU
+    backend (unpartitioned program flops); divide by device count.
+    Collective bytes come from per-device post-SPMD HLO already."""
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    per_dev_flops = flops / n_devices
+    per_dev_bytes = byts / n_devices
+    return Roofline(
+        flops=per_dev_flops,
+        hbm_bytes=per_dev_bytes,
+        coll_bytes=float(coll.get("total", 0)),
+        compute_s=per_dev_flops / PEAK_FLOPS,
+        memory_s=per_dev_bytes / HBM_BW,
+        collective_s=float(coll.get("total", 0)) / ICI_BW,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6 N D (train) / 2 N D (inference fwd) with N = active
+    params, D = tokens processed by the step."""
+    from repro.models import model as M
+    import jax
+
+    params = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg)
+    )
+    n_params = sum(int(x.size) for x in jax.tree.leaves(params))
+    n_active = n_params
+    if cfg.n_experts:
+        # active = non-expert params + expert params * topk / E
+        leaves = jax.tree_util.tree_leaves_with_path(params)
+        expert = sum(
+            int(x.size)
+            for path, x in leaves
+            if any(
+                isinstance(p, jax.tree_util.DictKey) and p.key.startswith("we_")
+                for p in path
+            )
+        )
+        n_active = n_params - expert + expert * cfg.top_k / cfg.n_experts
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n_active * tokens
+
+
+def memory_stats(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        return {
+            "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(getattr(ma, "generated_code_size_in_bytes", 0)),
+        }
+    except Exception as e:  # CPU backend quirks
+        return {"error": str(e)}
+
+
+def cost_stats(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items() if isinstance(v, (int, float))}
+    except Exception as e:
+        return {"error": str(e)}

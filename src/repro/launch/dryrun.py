@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (arch x shape) cell against the
+# production meshes, record memory/cost/collective analysis for §Roofline.
+#
+# MUST be run as its own process (the two lines above must execute before
+# any jax initialization):
+#
+#     PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+#     PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+#
+# Artifacts: benchmarks/artifacts/dryrun_<mesh>_<arch>_<shape>.json
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.base import SHAPES, RunConfig
+from repro.launch import analysis, hlo_analyzer, specs as specs_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.sharding import ctx as shard_ctx
+from repro.sharding import partition
+from repro.train import train_step as ts_mod
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "../../../benchmarks/artifacts")
+
+
+def _sharding_tree(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs)
+
+
+def _param_shardings(shapes, mesh):
+    specs = partition.enforce_divisibility(
+        partition.param_specs(shapes), shapes, mesh
+    )
+    return _sharding_tree(specs, mesh)
+
+
+def _batch_shardings(batch_specs, mesh):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, partition.batch_shard_spec(mesh, leaf.shape)),
+        batch_specs,
+    )
+
+
+def lower_cell(cfg, shape, mesh, run_overrides: dict | None = None,
+               strategy: str = "baseline"):
+    """Lower + compile one cell; returns (compiled, lowered, specs)."""
+    run = RunConfig(model=cfg, remat=True, **(run_overrides or {}))
+    cell = specs_mod.input_specs(cfg, shape)
+    if strategy == "dp_only":
+        # small models: pure data parallel, params/opt replicated
+        repl = lambda shapes: jax.tree.map(
+            lambda _: NamedSharding(mesh, P()), shapes)
+        params_sh = repl(cell["params"])
+        ba = tuple(mesh.axis_names)
+        batch_sh = jax.tree.map(
+            lambda leaf: NamedSharding(
+                mesh, P(ba, *([None] * (len(leaf.shape) - 1)))
+                if leaf.shape[0] % (512 if "pod" in ba else 256) == 0
+                else P(*([None] * len(leaf.shape)))),
+            cell["batch"])
+    else:
+        params_sh = _param_shardings(cell["params"], mesh)
+        batch_sh = _batch_shardings(cell["batch"], mesh)
+
+    if shape.kind == "train":
+        if strategy == "dp_only":
+            opt_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                                  cell["opt_state"])
+        else:
+            opt_sh = type(cell["opt_state"])(
+                step=NamedSharding(mesh, P()),
+                m=_param_shardings(cell["opt_state"].m, mesh),
+                v=_param_shardings(cell["opt_state"].v, mesh),
+            )
+        fn = ts_mod.make_train_step(run)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            out_shardings=(params_sh, opt_sh, None),
+        )
+        lowered = jitted.lower(cell["params"], cell["opt_state"], cell["batch"])
+    elif shape.kind == "prefill":
+        def prefill(params, batch):
+            return M.forward(params, cfg, batch, remat=False, last_only=True)
+
+        jitted = jax.jit(prefill, in_shardings=(params_sh, batch_sh))
+        lowered = jitted.lower(cell["params"], cell["batch"])
+    else:  # decode
+        cache_sh = _sharding_tree(partition.cache_specs(cell["cache"], mesh), mesh)
+
+        def serve_step(params, cache, batch):
+            return M.decode_step(params, cfg, cache, batch)
+
+        jitted = jax.jit(
+            serve_step,
+            in_shardings=(params_sh, cache_sh, batch_sh),
+            out_shardings=(None, cache_sh),
+        )
+        lowered = jitted.lower(cell["params"], cell["cache"], cell["batch"])
+    compiled = lowered.compile()
+    return compiled, lowered
+
+
+def run_cell(cfg, shape, mesh_kind: str, out_dir: str, run_overrides=None, tag="",
+             strategy: str = "baseline"):
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = 512 if mesh_kind == "multi" else 256
+    t0 = time.time()
+    record = {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "mesh": mesh_kind,
+        "n_devices": n_dev,
+        "tag": tag,
+        "strategy": strategy,
+    }
+    try:
+        with mesh, shard_ctx.activation_policy(
+            shard_ctx.make_mesh_policy(mesh, strategy=strategy)
+        ):
+            compiled, lowered = lower_cell(cfg, shape, mesh, run_overrides, strategy)
+        record["memory"] = analysis.memory_stats(compiled)
+        record["cost_raw"] = analysis.cost_stats(compiled)  # scan-body-once caveat
+        hlo = hlo_analyzer.analyze(compiled.as_text())  # loop-aware, per-device
+        record["hlo"] = {
+            "flops": hlo["flops"],
+            "hbm_bytes": hlo["hbm_bytes"],
+        }
+        coll = hlo["collectives"]
+        record["collectives"] = coll
+        rl = analysis.Roofline(
+            flops=hlo["flops"],
+            hbm_bytes=hlo["hbm_bytes"],
+            coll_bytes=coll["total"],
+            compute_s=hlo["flops"] / analysis.PEAK_FLOPS,
+            memory_s=hlo["hbm_bytes"] / analysis.HBM_BW,
+            collective_s=coll["total"] / analysis.ICI_BW,
+        )
+        record["roofline"] = rl.as_dict()
+        record["model_flops"] = analysis.model_flops(cfg, shape)
+        record["model_flops_ratio"] = (
+            record["model_flops"] / max(rl.flops * n_dev, 1.0)
+        )
+        record["status"] = "ok"
+        print(
+            f"[ok] {cfg.name} x {shape.name} x {mesh_kind}: "
+            f"dominant={rl.dominant} compute={rl.compute_s:.4f}s "
+            f"memory={rl.memory_s:.4f}s coll={rl.collective_s:.4f}s "
+            f"({time.time()-t0:.0f}s)"
+        )
+    except Exception as e:
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {cfg.name} x {shape.name} x {mesh_kind}: {e}")
+    record["elapsed_s"] = time.time() - t0
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    fn = os.path.join(
+        out_dir, f"dryrun_{mesh_kind}_{cfg.name}_{shape.name}{suffix}.json"
+    )
+    with open(fn, "w") as f:
+        json.dump(record, f, indent=1, default=str)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=os.path.normpath(ARTIFACTS))
+    ap.add_argument("--remat-group", type=int, default=1)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--strategy", default="baseline",
+                    choices=["baseline", "seqpar", "dp_only"])
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.remat_group > 1:
+        overrides["remat_group"] = args.remat_group
+    if args.grad_accum > 1:
+        overrides["grad_accum_steps"] = args.grad_accum
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = registry.cells()
+    else:
+        cfg = registry.get(args.arch)
+        cells = [(cfg, SHAPES[args.shape], "")]
+    n_fail = 0
+    for cfg, shape, skip in cells:
+        if skip:
+            continue
+        for mk in meshes:
+            rec = run_cell(cfg, shape, mk, args.out, overrides or None, args.tag,
+                           args.strategy)
+            n_fail += rec["status"] != "ok"
+            jax.clear_caches()
+    print(f"dryrun complete: {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,331 @@
+"""Post-SPMD HLO text analyzer: loop-aware FLOPs / HBM-traffic /
+collective-bytes extraction.
+
+Why: ``compiled.cost_analysis()`` counts a while-loop body ONCE, and every
+model here scans over layers, so module-level numbers under-report by the
+layer count (verified experimentally; see EXPERIMENTS §Dry-run notes).
+This analyzer walks the computation call graph, multiplies while bodies by
+their trip counts (parsed from the loop-condition compare), and sums:
+
+  * flops            — dot ops only (2*M*N*K incl. batch dims): the
+                       MXU-relevant count, matching MFU conventions.
+  * hbm_bytes        — per top-level instruction of ENTRY / while bodies:
+                       result + operand bytes of fusions/dots/collectives
+                       (fusion interiors excluded = post-fusion traffic).
+  * collective bytes — per collective op kind, result bytes, loop-scaled.
+
+All shapes in post-SPMD HLO are per-device, so results are per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-reduce-start", "all-reduce", "all-gather-start", "all-gather",
+    "reduce-scatter", "all-to-all", "collective-permute-start",
+    "collective-permute",
+)
+_COLLECTIVE_CANON = {
+    "all-reduce-start": "all-reduce",
+    "all-gather-start": "all-gather",
+    "collective-permute-start": "collective-permute",
+}
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+    "all-reduce-done", "all-gather-done", "collective-permute-done",
+}
+
+
+def _shape_dims(type_str: str):
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out.append((dt, dims, n))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    return sum(n * _DTYPE_BYTES[dt] for dt, _, n in _shape_dims(type_str))
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    line: str
+    result_type: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    types: dict = dataclasses.field(default_factory=dict)  # %name -> type str
+    ops: dict = dataclasses.field(default_factory=dict)  # %name -> op
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?(%?[\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"^((?:\([^)]*\)|[^(\s])*?)\s*([\w\-]+)\(")
+
+
+def parse_computations(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry_name = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            st = line.strip()
+            # computation headers end with '{' and declare '(params) -> type'
+            if st.endswith("{") and " -> " in st and " = " not in st:
+                toks = st.split()
+                nm = (toks[1] if toks[0] == "ENTRY" else toks[0]).split("(")[0]
+                nm = nm.lstrip("%")
+                if nm:
+                    cur = Computation(name=nm, instrs=[])
+                    if toks[0] == "ENTRY":
+                        entry_name = nm
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        om = _OP_RE.match(rhs)
+        if not om:
+            continue
+        result_type, op = om.groups()
+        cur.instrs.append(Instr(name=name, op=op, line=line, result_type=result_type))
+        cur.types[name] = result_type
+        cur.ops[name] = op
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+
+
+def _operands(ins: Instr) -> list[str]:
+    m = re.search(r"\((.*)$", ins.line)
+    if not m:
+        return []
+    # stop at metadata/config annotations
+    args = m.group(1)
+    args = args.split("), ")[0]
+    return _OPERAND_RE.findall(args)
+
+
+def _called(line: str, key: str) -> str | None:
+    m = re.search(rf"{key}=(%?[\w.\-]+)", line)
+    return m.group(1).lstrip("%") if m else None
+
+
+def trip_count(comps, while_line: str, cond_name: str) -> int:
+    """Prefer the backend_config known_trip_count on the while op itself;
+    fall back to parsing the condition's compare-against-constant."""
+    m = re.search(r'known_trip_count[^}]*?"n"\s*:\s*"(\d+)"', while_line)
+    if m:
+        return int(m.group(1))
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    consts: dict[str, int] = {}
+    direction = None
+    for ins in cond.instrs:
+        mc = re.search(r"constant\((\d+)\)", ins.line)
+        if mc:
+            consts[ins.name] = int(mc.group(1))
+        md = re.search(r"direction=(LT|LE|GT|GE)", ins.line)
+        if md:
+            direction = md.group(1)
+        if ins.op == "fusion":
+            callee = _called(ins.line, "calls")
+            if callee and callee in comps:
+                for ins2 in comps[callee].instrs:
+                    md2 = re.search(r"direction=(LT|LE|GT|GE)", ins2.line)
+                    if md2:
+                        direction = md2.group(1)
+    if consts:
+        c = max(consts.values())
+        return c + 1 if direction in ("LE", "GE") else max(c, 1)
+    return 1
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    """2 * prod(result dims) * prod(contracting dims of lhs)."""
+    res = _shape_dims(ins.result_type)
+    if not res:
+        return 0.0
+    out_elems = res[0][2]
+    ops = _operands(ins)
+    lc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    if not ops or lc is None:
+        return 0.0
+    lhs_type = comp.types.get(ops[0], "")
+    lhs_shapes = _shape_dims(lhs_type)
+    if not lhs_shapes:
+        return 0.0
+    lhs_dims = lhs_shapes[0][1].split(",") if lhs_shapes[0][1] else []
+    k = 1
+    for idx in lc.group(1).split(","):
+        if idx and int(idx) < len(lhs_dims):
+            k *= int(lhs_dims[int(idx)])
+    return 2.0 * out_elems * k
+
+
+_PASSTHROUGH = {"parameter", "get-tuple-element", "tuple", "constant", "bitcast", ""}
+
+
+def _instr_bytes(ins: Instr, comp: Computation) -> int:
+    """result bytes (write) + operand bytes (reads), EXCLUDING operands that
+    are loop-carried / parameter pass-throughs: a stacked-weights tensor
+    entering a while body via get-tuple-element is physically read through
+    its dynamic-slice fusion (whose *result* we count), not in full each
+    iteration.
+
+    dynamic-update-slice special case: the result aliases the input buffer
+    (in-place update); physical traffic is ~2x the UPDATE slice, not the
+    whole buffer (a scan writing 0.8 MB/iter into a 26 MB stacked buffer
+    must not count 26 MB/iter)."""
+    op_bytes = 0
+    for op in _operands(ins):
+        if comp.ops.get(op, "") in _PASSTHROUGH:
+            continue
+        op_bytes += _shape_bytes(comp.types.get(op, ""))
+    if "dynamic-update-slice" in ins.name or ins.op == "dynamic-update-slice":
+        result = _shape_bytes(ins.result_type)
+        update = min(op_bytes, result)
+        # buffer operand (== result size) may have been non-passthrough:
+        if op_bytes >= result:
+            update = op_bytes - result
+        return 2 * update
+    return _shape_bytes(ins.result_type) + op_bytes
+
+
+class HloAnalysis:
+    def __init__(self, text: str):
+        self.comps = parse_computations(text)
+        self._flops_memo: dict[str, float] = {}
+
+    # -------------------------------------------------------------- flops
+    def flops(self, comp_name: str = "__entry__") -> float:
+        if comp_name in self._flops_memo:
+            return self._flops_memo[comp_name]
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0.0
+        self._flops_memo[comp_name] = 0.0  # cycle guard
+        total = 0.0
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                total += _dot_flops(ins, comp)
+            elif ins.op == "fusion":
+                callee = _called(ins.line, "calls")
+                if callee:
+                    total += self.flops(callee)
+            elif ins.op == "while":
+                body = _called(ins.line, "body")
+                cond = _called(ins.line, "condition")
+                if body:
+                    total += trip_count(self.comps, ins.line, cond or "") * self.flops(body)
+            elif ins.op in ("call", "conditional", "custom-call"):
+                callee = _called(ins.line, "calls") or _called(ins.line, "to_apply")
+                if callee:
+                    total += self.flops(callee)
+        self._flops_memo[comp_name] = total
+        return total
+
+    # -------------------------------------------------------------- bytes
+    def hbm_bytes(self, comp_name: str = "__entry__", _depth: int = 0) -> float:
+        comp = self.comps.get(comp_name)
+        if comp is None or _depth > 32:
+            return 0.0
+        total = 0.0
+        for ins in comp.instrs:
+            if ins.op == "while":
+                body = _called(ins.line, "body")
+                cond = _called(ins.line, "condition")
+                if body:
+                    total += trip_count(self.comps, ins.line, cond or "") * self.hbm_bytes(
+                        body, _depth + 1
+                    )
+            elif ins.op in ("call", "conditional"):
+                callee = _called(ins.line, "calls") or _called(ins.line, "to_apply")
+                if callee:
+                    total += self.hbm_bytes(callee, _depth + 1)
+            elif ins.op in _SKIP_BYTES_OPS:
+                continue
+            else:
+                total += _instr_bytes(ins, comp)
+        return total
+
+    # -------------------------------------------------- collective bytes
+    def collectives(self, comp_name: str = "__entry__", _depth: int = 0) -> dict:
+        comp = self.comps.get(comp_name)
+        out = {k: 0.0 for k in set(_COLLECTIVE_CANON.values()) | set(_COLLECTIVES)}
+        out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+               "all-to-all": 0.0, "collective-permute": 0.0, "count": 0}
+        if comp is None or _depth > 32:
+            return out
+
+        def merge(d, mult=1.0):
+            for k in d:
+                if k == "total":
+                    continue
+                if k == "count":
+                    out[k] += d[k]
+                else:
+                    out[k] += d[k] * mult
+
+        for ins in comp.instrs:
+            if ins.op == "while":
+                body = _called(ins.line, "body")
+                cond = _called(ins.line, "condition")
+                if body:
+                    merge(
+                        self.collectives(body, _depth + 1),
+                        trip_count(self.comps, ins.line, cond or ""),
+                    )
+            elif ins.op in ("call", "conditional", "fusion"):
+                callee = _called(ins.line, "calls") or _called(ins.line, "to_apply")
+                if callee:
+                    merge(self.collectives(callee, _depth + 1))
+            elif ins.op in _COLLECTIVES:
+                kind = _COLLECTIVE_CANON.get(ins.op, ins.op)
+                if kind in out:
+                    out[kind] += _shape_bytes(ins.result_type)
+                    out["count"] += 1
+        out["total"] = sum(v for k, v in out.items() if k not in ("count", "total"))
+        return out
+
+
+def analyze(text: str) -> dict:
+    h = HloAnalysis(text)
+    coll = h.collectives()
+    return {
+        "flops": h.flops(),
+        "hbm_bytes": h.hbm_bytes(),
+        "collectives": coll,
+    }

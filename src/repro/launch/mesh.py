@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Single pod : (data=16, model=16)            = 256 chips (TPU v5e pod)
+Multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before first jax init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1-device mesh with the same axis names (tests / CPU execution)."""
+    import numpy as np
+
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    return jax.sharding.Mesh(devs, ("data", "model"))
+
+
+def validate_mesh(mesh) -> dict:
+    """Basic sanity facts recorded into EXPERIMENTS §Dry-run."""
+    return {
+        "axis_names": tuple(mesh.axis_names),
+        "shape": dict(mesh.shape),
+        "n_devices": int(np.prod(list(mesh.shape.values()))) if (np := __import__("numpy")) else 0,
+    }

@@ -1,0 +1,42 @@
+"""Serving launcher: batched decode engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+import jax
+
+from repro.configs import registry
+from repro.models import model as M
+from repro.serve.engine import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+    cfg = registry.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, batch_slots=args.slots, max_len=args.max_len)
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(0, cfg.vocab, size=rng.integers(2, 8)).astype(np.int32)
+        for _ in range(args.slots)
+    ]
+    outs = eng.generate(prompts, max_new=args.max_new)
+    for i, o in enumerate(outs):
+        print(f"req {i}: {len(o)} tokens: {o[:8]}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell —
+weak-type-correct, shardable, zero device allocation.
+
+``train`` cells lower train_step(params, opt_state, batch);
+``prefill`` cells lower a last-token-logits forward;
+``decode`` cells lower serve_step(params, cache, one-token batch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import model as M
+from repro.train import optimizer as opt_mod
+
+ENC_LEN_FRACTION = 1  # encoder length == shape seq_len for encdec prefill/train
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Model-input ShapeDtypeStructs for one cell."""
+    B = shape.global_batch
+    S = shape.seq_len
+    tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)
+    emb = lambda b, s: jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+    if shape.kind == "train":
+        out = {"labels": tok(B, S)}
+        if cfg.family == "encdec":
+            out["enc_embeddings"] = emb(B, S)
+            out["tokens"] = tok(B, S)
+        elif cfg.frontend:
+            out["embeddings"] = emb(B, S)
+        else:
+            out["tokens"] = tok(B, S)
+        return out
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {"enc_embeddings": emb(B, S), "tokens": tok(B, S)}
+        if cfg.frontend:
+            return {"embeddings": emb(B, S)}
+        return {"tokens": tok(B, S)}
+    # decode: one new token against a seq_len-deep cache
+    if cfg.frontend and cfg.family != "encdec":
+        return {"embeddings": emb(B, 1)}
+    return {"tokens": tok(B, 1)}
+
+
+def state_specs(cfg: ModelConfig):
+    """params + optimizer-state ShapeDtypeStructs via eval_shape."""
+    params = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    opt = jax.eval_shape(lambda: opt_mod.init(params))
+    return params, opt
+
+
+def cache_specs_for(cfg: ModelConfig, shape: ShapeConfig):
+    B, T = shape.global_batch, shape.seq_len
+    return jax.eval_shape(lambda: M.init_cache(cfg, B, T, enc_len=min(T, 4096)))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Everything the lowered step consumes, as ShapeDtypeStructs."""
+    out = {"batch": batch_specs(cfg, shape)}
+    params, opt = state_specs(cfg)
+    out["params"] = params
+    if shape.kind == "train":
+        out["opt_state"] = opt
+    if shape.kind == "decode":
+        out["cache"] = cache_specs_for(cfg, shape)
+    return out

@@ -1,0 +1,52 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch mamba2-130m \
+        --steps 100 --batch 8 --seq 512 [--he-aggregation] [--reduced]
+
+On a real multi-host TPU deployment this process runs per host after
+``jax.distributed.initialize()``; the mesh comes from
+``mesh.make_production_mesh()`` and the same Trainer drives pjit'd steps.
+On this CPU container it runs the 1-device mesh end to end.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import registry
+from repro.configs.base import RunConfig
+from repro.train import data as data_mod
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--remat-group", type=int, default=1)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = registry.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    run = RunConfig(
+        model=cfg,
+        checkpoint_dir=args.ckpt_dir,
+        checkpoint_every=args.ckpt_every,
+        remat_group=args.remat_group,
+        grad_accum_steps=args.grad_accum,
+    )
+    dc = data_mod.DataConfig(batch=args.batch, seq_len=args.seq)
+    trainer = Trainer(run, dc, total_steps=args.steps)
+    trainer.train(jax.random.PRNGKey(0), steps=args.steps)
+
+
+if __name__ == "__main__":
+    main()

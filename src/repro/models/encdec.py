@@ -1,0 +1,151 @@
+"""Encoder-decoder backbone (seamless-m4t): n_layers bidirectional encoder
+over frontend (audio) embeddings + n_layers causal decoder with
+cross-attention.  The speech frontend is a stub per the assignment:
+``input_specs`` supplies precomputed frame embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as tfm
+from repro.sharding import ctx
+
+
+def _dec_block_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": L.rmsnorm_init(d),
+        "attn": L.attention_init(ks[0], cfg),
+        "ln_x": L.rmsnorm_init(d),
+        "xattn": L.attention_init(ks[1], cfg),
+        "ln2": L.rmsnorm_init(d),
+        "ffn": L.mlp_init(ks[2], d, cfg.d_ff),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    k_e, k_enc, k_dec, k_h = jax.random.split(key, 4)
+    enc = jax.vmap(lambda k: tfm.block_init(k, cfg, moe=False))(
+        jax.random.split(k_enc, cfg.n_layers)
+    )
+    dec = jax.vmap(lambda k: _dec_block_init(k, cfg))(
+        jax.random.split(k_dec, cfg.n_layers)
+    )
+    return {
+        "embed": L.dense_init(k_e, (cfg.padded_vocab, cfg.d_model), scale=0.02),
+        "encoder": enc,
+        "decoder": dec,
+        "enc_norm": L.rmsnorm_init(cfg.d_model),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+        "lm_head": L.dense_init(k_h, (cfg.d_model, cfg.padded_vocab)),
+    }
+
+
+def encode(params, cfg: ModelConfig, enc_embeddings, *, remat: bool = False):
+    """enc_embeddings: (B, S_enc, D) from the frontend stub."""
+    x = enc_embeddings.astype(L.CDTYPE)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, lp):
+        a, _ = L.attention_apply(
+            lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg, positions,
+            causal=False,
+        )
+        x = x + a
+        x = x + L.mlp_apply(lp["ffn"], L.rmsnorm(lp["ln2"], x, cfg.norm_eps))
+        return ctx.constrain(x, "btd"), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _cross_kv(lp, cfg: ModelConfig, memory):
+    B, S = memory.shape[:2]
+    hk, dh = cfg.n_kv_heads, cfg.head_dim_
+    k = (memory @ lp["xattn"]["wk"].astype(L.CDTYPE)).reshape(B, S, hk, dh)
+    v = (memory @ lp["xattn"]["wv"].astype(L.CDTYPE)).reshape(B, S, hk, dh)
+    return k, v
+
+
+def _dec_block(lp, x, cfg, positions, memory=None, cross=None, cache=None):
+    a, nc = L.attention_apply(
+        lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), cfg, positions,
+        kv_cache=cache,
+    )
+    x = x + a
+    ck = cross if cross is not None else _cross_kv(lp, cfg, memory)
+    xa, _ = L.attention_apply(
+        lp["xattn"], L.rmsnorm(lp["ln_x"], x, cfg.norm_eps), cfg, positions,
+        cross_kv=ck,
+    )
+    x = x + xa
+    x = x + L.mlp_apply(lp["ffn"], L.rmsnorm(lp["ln2"], x, cfg.norm_eps))
+    return ctx.constrain(x, "btd"), nc
+
+
+def forward(params, cfg: ModelConfig, batch, *, remat: bool = False,
+            last_only: bool = False):
+    """batch: {"enc_embeddings": (B,S_enc,D), "tokens": (B,S_dec)}."""
+    memory = encode(params, cfg, batch["enc_embeddings"], remat=remat)
+    x = params["embed"][batch["tokens"]].astype(L.CDTYPE)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, lp):
+        x, _ = _dec_block(lp, x, cfg, positions, memory=memory)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    if last_only:
+        x = x[:, -1:]
+    return tfm.unembed(params, cfg, x)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int):
+    hk, dh = cfg.n_kv_heads, cfg.head_dim_
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_len, hk, dh), L.CDTYPE),
+        "v": jnp.zeros((cfg.n_layers, batch, max_len, hk, dh), L.CDTYPE),
+        "ck": jnp.zeros((cfg.n_layers, batch, enc_len, hk, dh), L.CDTYPE),
+        "cv": jnp.zeros((cfg.n_layers, batch, enc_len, hk, dh), L.CDTYPE),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill_cross(params, cfg: ModelConfig, cache, memory):
+    """Precompute per-layer cross-attention K/V from encoder memory."""
+    def body(_, lp):
+        return None, _cross_kv(lp, cfg, memory)
+
+    _, (ck, cv) = jax.lax.scan(body, None, params["decoder"])
+    return {**cache, "ck": ck, "cv": cv}
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch):
+    x = params["embed"][batch["tokens"]].astype(L.CDTYPE)
+    B, S = x.shape[:2]
+    pos = cache["pos"]
+    positions = pos + jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, inp):
+        lp, ck, cv, xk, xv = inp
+        x, nc = _dec_block(
+            lp, x, cfg, positions, cross=(xk, xv),
+            cache={"k": ck, "v": cv, "pos": pos},
+        )
+        return x, (nc["k"], nc["v"])
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["decoder"], cache["k"], cache["v"], cache["ck"], cache["cv"])
+    )
+    new_cache = {**cache, "k": nk, "v": nv, "pos": pos + S}
+    return tfm.unembed(params, cfg, x), new_cache

@@ -1,0 +1,133 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with ONE shared transformer block
+(attention + MLP, weights reused) applied every `shared_attn_every` layers
+(arXiv:2411.15242).  Simplification noted in DESIGN.md: the concatenated
+embedding re-injection and per-application LoRA deltas of the original are
+omitted; the shared block is applied residually at each interval.
+
+Scan structure: groups of (shared_attn_every) mamba layers form one scan
+step; the shared block runs between groups with its own KV-cache slot per
+application.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models import transformer as tfm
+
+
+def _groups(cfg: ModelConfig) -> int:
+    k = cfg.shared_attn_every
+    assert cfg.n_layers % k == 0, (cfg.n_layers, k)
+    return cfg.n_layers // k
+
+
+def init_params(key, cfg: ModelConfig):
+    k_embed, k_m, k_shared, k_head = jax.random.split(key, 4)
+    keys = jax.random.split(k_m, cfg.n_layers)
+    mamba_layers = jax.vmap(
+        lambda k: {"ln": L.rmsnorm_init(cfg.d_model), "mixer": ssm.mamba2_init(k, cfg)}
+    )(keys)
+    shared = tfm.block_init(k_shared, cfg, moe=False)
+    p = {
+        "embed": L.dense_init(k_embed, (cfg.padded_vocab, cfg.d_model), scale=0.02),
+        "mamba_layers": mamba_layers,
+        "shared": shared,
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+        "lm_head": L.dense_init(k_head, (cfg.d_model, cfg.padded_vocab)),
+    }
+    return p
+
+
+def _mamba_block(lp, x, cfg, ssm_state=None, conv_state=None):
+    h, states = ssm.mamba2_apply(
+        lp["mixer"], L.rmsnorm(lp["ln"], x, cfg.norm_eps), cfg,
+        ssm_state=ssm_state, conv_state=conv_state,
+    )
+    return x + h, states
+
+
+def forward(params, cfg: ModelConfig, batch, *, remat: bool = False,
+            last_only: bool = False):
+    x = tfm.embed_inputs(params, cfg, batch)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    G = _groups(cfg)
+    k = cfg.shared_attn_every
+    grouped = jax.tree.map(
+        lambda a: a.reshape((G, k) + a.shape[1:]), params["mamba_layers"]
+    )
+
+    def body(x, group_params):
+        for i in range(k):
+            lp = jax.tree.map(lambda a: a[i], group_params)
+            x, _ = _mamba_block(lp, x, cfg)
+        x, _ = tfm.block_apply(params["shared"], x, cfg, positions, moe=False)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, grouped)
+    if last_only:
+        x = x[:, -1:]
+    return tfm.unembed(params, cfg, x)
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    d_in, H, P, N = ssm.dims(cfg)
+    G = _groups(cfg)
+    conv_dim = d_in + 2 * N
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_kernel - 1, conv_dim), L.CDTYPE),
+        "k": jnp.zeros((G, batch, max_len, cfg.n_kv_heads, cfg.head_dim_), L.CDTYPE),
+        "v": jnp.zeros((G, batch, max_len, cfg.n_kv_heads, cfg.head_dim_), L.CDTYPE),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch):
+    x = tfm.embed_inputs(params, cfg, batch)
+    B, S = x.shape[:2]
+    pos = cache["pos"]
+    positions = pos + jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    G = _groups(cfg)
+    k = cfg.shared_attn_every
+    grouped = jax.tree.map(
+        lambda a: a.reshape((G, k) + a.shape[1:]), params["mamba_layers"]
+    )
+    ssm_g = cache["ssm"].reshape((G, k) + cache["ssm"].shape[1:])
+    conv_g = cache["conv"].reshape((G, k) + cache["conv"].shape[1:])
+
+    def body(x, inp):
+        gp, s_states, c_states, ck, cv = inp
+        new_s, new_c = [], []
+        for i in range(k):
+            lp = jax.tree.map(lambda a: a[i], gp)
+            x, (hs, hc) = _mamba_block(lp, x, cfg, ssm_state=s_states[i], conv_state=c_states[i])
+            new_s.append(hs)
+            new_c.append(hc)
+        x, nc = tfm.block_apply(
+            params["shared"], x, cfg, positions, moe=False,
+            cache={"k": ck, "v": cv, "pos": pos},
+        )
+        return x, (jnp.stack(new_s), jnp.stack(new_c), nc["k"], nc["v"])
+
+    x, (ns, ncv, nk, nv) = jax.lax.scan(body, x, (grouped, ssm_g, conv_g, cache["k"], cache["v"]))
+    new_cache = {
+        "ssm": ns.reshape(cache["ssm"].shape),
+        "conv": ncv.reshape(cache["conv"].shape),
+        "k": nk,
+        "v": nv,
+        "pos": pos + S,
+    }
+    return tfm.unembed(params, cfg, x), new_cache

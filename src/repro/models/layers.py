@@ -1,0 +1,287 @@
+"""Shared neural layers: RMSNorm, RoPE / M-RoPE, GQA attention (sliding
+window, logit softcap, KV cache), SwiGLU MLP, dropping-MoE.
+
+Parameters are plain dict pytrees; layer functions are pure.  Compute in
+bf16, normalization/softmax statistics in f32, params in f32 (cast on
+entry).  Every array creation states its dtype explicitly (the package
+enables x64 for the crypto core).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.sharding import ctx
+
+CDTYPE = jnp.bfloat16
+
+
+def _cast(x):
+    return x.astype(CDTYPE)
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# RMSNorm
+# --------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), dtype=jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE / M-RoPE
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64) / head_dim))
+
+
+def apply_rope(x, positions, theta: float, sections: tuple[int, ...] = ()):
+    """x: (B, S, H, Dh); positions: (B, S) or (3, B, S) for M-RoPE.
+
+    M-RoPE (qwen2-vl §3): the head_dim/2 frequency slots are split into
+    `sections` (temporal / height / width), each rotated by its own
+    position stream.  With a text-only stream all three position ids are
+    equal and the math degenerates to standard RoPE (the vision frontend
+    stub supplies equal ids; the *datapath* is the sectioned one).
+    """
+    B, S, H, Dh = x.shape
+    half = Dh // 2
+    freqs = jnp.asarray(rope_freqs(Dh, theta), dtype=jnp.float32)  # (half,)
+    if sections:
+        assert sum(sections) == half, (sections, half)
+        if positions.ndim == 2:
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        pos_parts = []
+        start = 0
+        for si, sec in enumerate(sections):
+            p = positions[si].astype(jnp.float32)  # (B, S)
+            pos_parts.append(p[:, :, None] * freqs[None, None, start : start + sec])
+            start += sec
+        ang = jnp.concatenate(pos_parts, axis=-1)  # (B, S, half)
+    else:
+        ang = positions.astype(jnp.float32)[:, :, None] * freqs[None, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]  # (B, S, 1, half)
+    sin = jnp.sin(ang)[:, :, None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., :half], xf[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA; optional sliding window + softcap; prefill & decode)
+# --------------------------------------------------------------------------
+
+
+def attention_init(key, cfg: ModelConfig):
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h * dh)),
+        "wk": dense_init(ks[1], (d, hk * dh)),
+        "wv": dense_init(ks[2], (d, hk * dh)),
+        "wo": dense_init(ks[3], (h * dh, d)),
+    }
+
+
+def _softcap(logits, cap: float):
+    if cap and cap > 0:
+        return jnp.tanh(logits / cap) * cap
+    return logits
+
+
+def _attn_scores(q, k, cfg: ModelConfig, q_pos, k_pos, window, causal: bool):
+    """q: (B,Sq,Hk,G,Dh), k: (B,Sk,Hk,Dh) -> masked logits (B,Hk,G,Sq,Sk)."""
+    # python float (weak type): np.float64 here promotes the whole S^2
+    # softmax chain to f64 under x64 — 2x HBM on the dominant tensors
+    # (caught by the §Perf hillclimb, iteration B2)
+    scale = float(1.0 / np.sqrt(cfg.head_dim_))
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(jnp.float32) * scale
+    logits = _softcap(logits, cfg.attn_softcap)
+    dq = q_pos[:, :, None]  # (B, Sq, 1)
+    dk = k_pos[:, None, :]  # (B, 1, Sk)
+    mask = jnp.ones(dq.shape[:2] + dk.shape[-1:], dtype=bool)
+    if causal:
+        mask = mask & (dk <= dq)
+    if window is not None:
+        # window == 0 means global: keep everything
+        mask = mask & ((dk > dq - window) | (window == 0))
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    return logits
+
+
+def attention_apply(
+    params,
+    x,
+    cfg: ModelConfig,
+    positions,
+    *,
+    layer_window=None,  # traced scalar or None: sliding window size (0 = global)
+    kv_cache: Optional[dict] = None,  # {"k","v": (B,T,Hk,Dh), "pos": scalar}
+    cross_kv=None,  # (k, v) for cross-attention (enc-dec)
+    causal: bool = True,
+):
+    """Returns (out, new_kv_cache)."""
+    B, S, _ = x.shape
+    h, hk, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    g = h // hk
+    xq = _cast(x) @ _cast(params["wq"])
+    q = xq.reshape(B, S, h, dh)
+    if cross_kv is None:
+        k = (_cast(x) @ _cast(params["wk"])).reshape(B, S, hk, dh)
+        v = (_cast(x) @ _cast(params["wv"])).reshape(B, S, hk, dh)
+        rope_pos = positions
+        q = apply_rope(q, rope_pos, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, rope_pos, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        k, v = cross_kv
+
+    new_cache = None
+    if kv_cache is not None and cross_kv is None:
+        pos = kv_cache["pos"]  # scalar int: #valid entries
+        z = jnp.zeros((), jnp.int32)
+        idx = (z, pos.astype(jnp.int32), z, z)
+        ck = jax.lax.dynamic_update_slice(kv_cache["k"], k, idx)
+        cv = jax.lax.dynamic_update_slice(kv_cache["v"], v, idx)
+        new_cache = {"k": ck, "v": cv, "pos": pos + S}
+        k, v = ck, cv
+        T = k.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+        # entries beyond pos+S are invalid -> mask via causal (q_pos < them)
+    else:
+        Sk = k.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(Sk, dtype=jnp.int32)[None], (B, Sk))
+
+    q_pos = positions if positions.ndim == 2 else positions[0]
+    qg = q.reshape(B, S, hk, g, dh)
+    window = None
+    if layer_window is not None:
+        window = layer_window
+    logits = _attn_scores(qg, k, cfg, q_pos, k_pos, window, causal and cross_kv is None)
+    probs = jax.nn.softmax(logits, axis=-1).astype(CDTYPE)
+    ctx = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    ctx = ctx.reshape(B, S, h * dh)
+    out = ctx @ _cast(params["wo"])
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, f: int):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, f)),
+        "w_up": dense_init(ks[1], (d, f)),
+        "w_down": dense_init(ks[2], (f, d)),
+    }
+
+
+def mlp_apply(params, x):
+    xc = _cast(x)
+    h = jax.nn.silu(xc @ _cast(params["w_gate"])) * (xc @ _cast(params["w_up"]))
+    return h @ _cast(params["w_down"])
+
+
+# --------------------------------------------------------------------------
+# Dropping MoE (mesh-TF style dispatch/combine einsums; capacity-bounded)
+# --------------------------------------------------------------------------
+
+
+def moe_init(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), scale=0.02),
+        "we_gate": dense_init(ks[1], (e, d, f)),
+        "we_up": dense_init(ks[2], (e, d, f)),
+        "we_down": dense_init(ks[3], (e, f, d)),
+    }
+    if cfg.moe_shared_expert:
+        p["shared"] = mlp_init(ks[4], d, f)
+    return p
+
+
+def moe_apply(params, x, cfg: ModelConfig):
+    """x: (B, S, D).  Top-k routing, capacity-bounded with token dropping.
+
+    Dispatch is PER BATCH ROW: every row owns an (E, C_row) slot buffer
+    (C_row = ceil(S*K/E * cf)) filled with a vmapped LOCAL scatter.  This
+    makes the dispatch shardable by construction — the batch dim shards
+    over `data`, so the scatter never crosses devices, and the only
+    cross-device movement is the (B, E, C_row, D) expert exchange over
+    `model` (the canonical MoE all-to-all).  A single global-capacity
+    scatter is unshardable for GSPMD: it replicates the buffer and then
+    either 16x's the expert FLOPs or all-reduces (C, F) partial sums
+    (measured; EXPERIMENTS §Perf cell A iterations 1-3).
+
+    Compute is O(tokens * K * cf * D * F) — proportional to *active*
+    parameters.  Deterministic shapes -> dryrun friendly."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = max(1, int(np.ceil(S * K / E * cfg.capacity_factor)))  # per row
+    logits = x.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (B,S,E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # (B,S,K)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9, None)
+    flat_e = gate_idx.reshape(B, S * K)  # expert id per assignment, per row
+    gates = gate_vals.reshape(B, S * K).astype(CDTYPE)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (B, SK, E)
+    pos = jnp.cumsum(onehot, axis=1) - onehot
+    my_pos = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]  # (B, SK)
+    keep = my_pos < C
+    slot = jnp.where(keep, flat_e * C + my_pos, E * C)  # sentinel slot drops
+    tok = jnp.arange(S * K, dtype=jnp.int32) // K
+    xk = _cast(x)[:, tok, :] * keep[..., None].astype(CDTYPE)  # (B, SK, D)
+
+    # shard_map'd per-row scatter: batch-local, zero collectives (see
+    # ctx.moe_scatter for why a plain batched scatter cannot be sharded)
+    buf = ctx.moe_scatter(slot, xk, E * C + 1)  # (B, E*C+1, D)
+    xe = buf[:, : E * C].reshape(B, E, C, D)
+    xe = ctx.constrain(xe, "moe_tokens")  # a2a: batch->data, experts->model
+    # FSDP-stored expert weights are GATHERED for use (weight all-gather,
+    # ~0.5 GB/layer); without this, GSPMD contracts the FSDP-sharded dim
+    # and all-reduces (C, F)-sized grad partial sums (28 GB x 2 x L).
+    w_gate = ctx.constrain(_cast(params["we_gate"]), "moe_w")
+    w_up = ctx.constrain(_cast(params["we_up"]), "moe_w")
+    w_down = ctx.constrain(_cast(params["we_down"]), "moe_w")
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, w_gate))
+    h = h * jnp.einsum("becd,edf->becf", xe, w_up)
+    eout = jnp.einsum("becf,efd->becd", h, w_down)
+    eout = ctx.constrain(eout, "moe_tokens")
+    eout = jnp.concatenate(
+        [eout.reshape(B, E * C, D), jnp.zeros((B, 1, D), dtype=CDTYPE)], axis=1
+    )
+    y = ctx.moe_gather(eout, slot) * gates[..., None]
+    out = y.reshape(B, S, K, D).sum(axis=2)
+    if cfg.moe_shared_expert:
+        out = out + mlp_apply(params["shared"], x)
+    return out

@@ -1,0 +1,161 @@
+"""Family dispatch: one API over dense / moe / ssm / hybrid / encdec.
+
+    init_params(key, cfg)                        -> params
+    forward(params, cfg, batch, remat=False)     -> logits (B, S, V)
+    init_cache(cfg, batch, max_len, enc_len=0)   -> decode cache
+    decode_step(params, cfg, cache, batch)       -> (logits, cache)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models import transformer as tfm
+
+
+# --------------------------------------------------------------------------
+# pure-SSM (mamba2) decoder-only model
+# --------------------------------------------------------------------------
+
+
+def _ssm_init(key, cfg: ModelConfig):
+    k_e, k_m, k_h = jax.random.split(key, 3)
+    layers = jax.vmap(
+        lambda k: {"ln": L.rmsnorm_init(cfg.d_model), "mixer": ssm.mamba2_init(k, cfg)}
+    )(jax.random.split(k_m, cfg.n_layers))
+    return {
+        "embed": L.dense_init(k_e, (cfg.padded_vocab, cfg.d_model), scale=0.02),
+        "layers": layers,
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+        "lm_head": L.dense_init(k_h, (cfg.d_model, cfg.padded_vocab)),
+    }
+
+
+def _ssm_forward(params, cfg: ModelConfig, batch, *, remat=False,
+                 remat_group: int = 1, last_only: bool = False):
+    x = tfm.embed_inputs(params, cfg, batch)
+
+    def one(x, lp):
+        h, _ = ssm.mamba2_apply(
+            lp["mixer"], L.rmsnorm(lp["ln"], x, cfg.norm_eps), cfg
+        )
+        return x + h
+
+    stack = params["layers"]
+    if remat_group > 1 and cfg.n_layers % remat_group == 0:
+        stack = jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers // remat_group, remat_group) + a.shape[1:]),
+            stack,
+        )
+
+        def body(x, lps):
+            for i in range(remat_group):
+                x = one(x, jax.tree.map(lambda a: a[i], lps))
+            return x, None
+
+    else:
+
+        def body(x, lp):
+            return one(x, lp), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, stack)
+    if last_only:
+        x = x[:, -1:]
+    return tfm.unembed(params, cfg, x)
+
+
+def _ssm_init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    d_in, H, P, N = ssm.dims(cfg)
+    conv_dim = d_in + 2 * N
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros(
+            (cfg.n_layers, batch, cfg.conv_kernel - 1, conv_dim), L.CDTYPE
+        ),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _ssm_decode(params, cfg: ModelConfig, cache, batch):
+    x = tfm.embed_inputs(params, cfg, batch)
+
+    def body(x, inp):
+        lp, s, c = inp
+        h, (ns, nc) = ssm.mamba2_apply(
+            lp["mixer"], L.rmsnorm(lp["ln"], x, cfg.norm_eps), cfg,
+            ssm_state=s, conv_state=c,
+        )
+        return x + h, (ns, nc)
+
+    x, (ns, nc) = jax.lax.scan(body, x, (params["layers"], cache["ssm"], cache["conv"]))
+    new_cache = {"ssm": ns, "conv": nc, "pos": cache["pos"] + x.shape[1]}
+    return tfm.unembed(params, cfg, x), new_cache
+
+
+# --------------------------------------------------------------------------
+# dispatch
+# --------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig):
+    if cfg.family in ("dense", "moe"):
+        return tfm.init_params(key, cfg)
+    if cfg.family == "ssm":
+        return _ssm_init(key, cfg)
+    if cfg.family == "hybrid":
+        return hybrid.init_params(key, cfg)
+    if cfg.family == "encdec":
+        return encdec.init_params(key, cfg)
+    raise ValueError(cfg.family)
+
+
+def forward(params, cfg: ModelConfig, batch, *, remat: bool = False,
+            remat_group: int = 1, last_only: bool = False):
+    if cfg.family in ("dense", "moe"):
+        return tfm.forward(params, cfg, batch, remat=remat,
+                           remat_group=remat_group, last_only=last_only)
+    if cfg.family == "ssm":
+        return _ssm_forward(params, cfg, batch, remat=remat,
+                            remat_group=remat_group, last_only=last_only)
+    if cfg.family == "hybrid":
+        return hybrid.forward(params, cfg, batch, remat=remat, last_only=last_only)
+    if cfg.family == "encdec":
+        return encdec.forward(params, cfg, batch, remat=remat, last_only=last_only)
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0):
+    if cfg.family in ("dense", "moe"):
+        return tfm.init_cache(cfg, batch, max_len)
+    if cfg.family == "ssm":
+        return _ssm_init_cache(cfg, batch, max_len)
+    if cfg.family == "hybrid":
+        return hybrid.init_cache(cfg, batch, max_len)
+    if cfg.family == "encdec":
+        return encdec.init_cache(cfg, batch, max_len, enc_len or max_len)
+    raise ValueError(cfg.family)
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch):
+    if cfg.family in ("dense", "moe"):
+        logits, cache = tfm.decode_step(params, cfg, cache, batch)
+    elif cfg.family == "ssm":
+        logits, cache = _ssm_decode(params, cfg, cache, batch)
+    elif cfg.family == "hybrid":
+        logits, cache = hybrid.decode_step(params, cfg, cache, batch)
+    elif cfg.family == "encdec":
+        logits, cache = encdec.decode_step(params, cfg, cache, batch)
+    else:
+        raise ValueError(cfg.family)
+    # decode emits true-vocab logits (tiny slice; samplers index real ids)
+    return logits[..., : cfg.vocab], cache
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

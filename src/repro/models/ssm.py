@@ -1,0 +1,178 @@
+"""Mamba2 SSD (state-space duality) block — chunked parallel form for
+train/prefill, recurrent form for decode (arXiv:2405.21060).
+
+Layout (ngroups = 1):
+  in_proj -> [z (d_in), xBC (d_in + 2*N), dt (H)]
+  causal depthwise conv over xBC, SiLU
+  SSD: X (B,S,H,P), B/C (B,S,N), dt (B,S,H), A (H,) < 0
+  y = SSD(X, dt, A, B, C) + D * X ; out = out_proj(rmsnorm(y * silu(z)))
+
+The chunked algorithm (intra-chunk quadratic + inter-chunk state scan) is
+validated against the naive per-step recurrence in tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import CDTYPE, _cast, dense_init, rmsnorm, rmsnorm_init
+from repro.sharding import ctx
+
+
+def dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_headdim
+    return d_in, H, cfg.ssm_headdim, cfg.ssm_state
+
+
+def mamba2_init(key, cfg: ModelConfig):
+    d_in, H, P, N = dims(cfg)
+    conv_dim = d_in + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (cfg.d_model, 2 * d_in + 2 * N + H)),
+        "conv_w": dense_init(ks[1], (cfg.conv_kernel, conv_dim), scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": rmsnorm_init(d_in),
+        "out_proj": dense_init(ks[2], (d_in, cfg.d_model)),
+    }
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    d_in, H, P, N = dims(cfg)
+    z = proj[..., :d_in]
+    xBC = proj[..., d_in : 2 * d_in + 2 * N]
+    dt = proj[..., 2 * d_in + 2 * N :]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv along S.  xBC: (B,S,Cd); w: (K,Cd)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC, dtype=jnp.float32)
+    for k in range(K):
+        out = out + pad[:, k : k + xBC.shape[1], :].astype(jnp.float32) * w[k][None, None, :]
+    return out + b[None, None, :]
+
+
+def _ssd_chunked(X, dt, A, Bm, Cm, chunk: int, h0=None):
+    """Chunked SSD.  X: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,N).
+    Returns (Y: (B,S,H,P), h_final: (B,H,P,N))."""
+    Bsz, S, H, P = X.shape
+    N = Bm.shape[-1]
+    Q = chunk
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    # reshape into chunks
+    Xc = X.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+    dA = dtc * A[None, None, None, :]  # (B,nc,Q,H), negative
+    cs = jnp.cumsum(dA, axis=2)  # inclusive cumsum within chunk
+    seg_end = cs[:, :, -1:, :]  # (B,nc,1,H)
+    # intra-chunk: L[i,j] = exp(cs_i - cs_j) for i >= j
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    ii = np.arange(Q)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(diff), 0.0)  # (B,nc,Q,Q,H)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)  # (B,nc,Q,Q)
+    M = scores[..., None] * L  # (B,nc,Q,Q,H)
+    Y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", M, dtc, Xc)
+    # chunk states: S_c = sum_j exp(seg_end - cs_j) * dt_j * B_j (x) X_j
+    decay_state = jnp.exp(seg_end - cs)  # (B,nc,Q,H)
+    states = jnp.einsum("bcqh,bcqh,bcqn,bcqhp->bchpn", decay_state, dtc, Bc, Xc)
+    # inter-chunk scan: h_{c} = exp(sum dA_c) h_{c-1} + S_c
+    seg_all = jnp.exp(seg_end[:, :, 0, :])  # (B,nc,H)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), dtype=X.dtype)
+
+    def step(h, inp):
+        decay, s_c = inp  # (B,H), (B,H,P,N)
+        h_new = (h * decay[:, :, None, None] + s_c).astype(h.dtype)
+        return h_new, h
+
+    (h_final, h_prevs) = jax.lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(seg_all, 1, 0), jnp.moveaxis(states, 1, 0)),
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (B,nc,H,P,N) state BEFORE chunk
+    # inter-chunk contribution: y_i += C_i . (exp(cs_i) * h_prev)
+    decay_in = jnp.exp(cs)  # (B,nc,Q,H)
+    Y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc, h_prevs, decay_in)
+    Y = (Y_intra + Y_inter).reshape(Bsz, S, H, P)
+    return Y, h_final
+
+
+def _ssd_recurrent_step(h, x, dt, A, Bv, Cv):
+    """One decode step.  h: (B,H,P,N); x: (B,H,P); dt: (B,H); Bv/Cv: (B,N)."""
+    dA = jnp.exp(dt * A[None, :])  # (B,H)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, Bv, x)
+    h = h * dA[:, :, None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cv, h)
+    return h, y
+
+
+def mamba2_apply(params, x, cfg: ModelConfig, *, ssm_state=None, conv_state=None):
+    """x: (B,S,D).  If states are provided (decode), S is the new-token
+    count (typically 1) and updated states are returned.
+
+    Returns (out, (ssm_state, conv_state))."""
+    Bsz, S, D = x.shape
+    d_in, H, P, N = dims(cfg)
+    proj = _cast(x) @ _cast(params["in_proj"])  # (B,S,2*d_in+2N+H)
+    z, xBC, dt = _split_proj(proj, cfg)
+    K = cfg.conv_kernel
+    if conv_state is None:
+        conv_in = xBC
+        new_conv_state = xBC[:, -(K - 1) :, :] if S >= K - 1 else jnp.pad(
+            xBC, ((0, 0), (K - 1 - S, 0), (0, 0))
+        )
+        conv = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+    else:
+        full = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)
+        conv = _causal_conv(full, params["conv_w"], params["conv_b"])[:, K - 1 :, :]
+        new_conv_state = full[:, -(K - 1) :, :]
+    conv = jax.nn.silu(conv)
+    Xf = conv[..., :d_in].astype(jnp.float32).reshape(Bsz, S, H, P)
+    Bm = conv[..., d_in : d_in + N].astype(jnp.float32)
+    Cm = conv[..., d_in + N :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None, :])
+    A = -jnp.exp(params["A_log"])  # (H,)
+
+    if ssm_state is None and S > 1:
+        Q = min(cfg.ssm_chunk, S)
+        pad = (-S) % Q
+        if pad:
+            Xp = jnp.pad(Xf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bp = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cp = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        else:
+            Xp, dtp, Bp, Cp = Xf, dt, Bm, Cm
+        Y, h_final = _ssd_chunked(Xp, dtp, A, Bp, Cp, Q)
+        Y = Y[:, :S]
+    else:
+        h = (
+            ssm_state
+            if ssm_state is not None
+            else jnp.zeros((Bsz, H, P, N), dtype=jnp.float32)
+        )
+        ys = []
+        for s in range(S):  # S == 1 in decode
+            h, y = _ssd_recurrent_step(h, Xf[:, s], dt[:, s], A, Bm[:, s], Cm[:, s])
+            ys.append(y)
+        Y = jnp.stack(ys, axis=1)
+        h_final = h
+    Y = Y + Xf * params["D"][None, None, :, None]
+    Y = Y.reshape(Bsz, S, d_in).astype(CDTYPE)
+    gated = Y * jax.nn.silu(_cast(z))
+    out = rmsnorm(params["norm"], gated, cfg.norm_eps) @ _cast(params["out_proj"])
+    return ctx.constrain(out, "btd"), (h_final, new_conv_state)

@@ -1,0 +1,256 @@
+"""Decoder-only transformer family: dense (yi, deepseek, mistral-large),
+GQA + M-RoPE backbone (qwen2-vl), local/global + softcap (gemma2), and
+MoE variants (llama4-maverick with interleaved dense/MoE, dbrx all-MoE).
+
+Layers are stacked and executed with lax.scan (compile time stays flat in
+depth — 88-layer mistral-large lowers as one loop).  Mixed llama4 stacks
+scan over (dense, moe) super-blocks.  KV caches are stacked per layer and
+threaded through the scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding import ctx
+
+
+def _moe_every(cfg: ModelConfig) -> int:
+    """llama4-style interleaving: every k-th layer is MoE (k=2 for llama4);
+    1 means every layer (dbrx); 0 means dense model."""
+    if cfg.n_experts == 0:
+        return 0
+    return cfg.moe_every
+
+
+def block_init(key, cfg: ModelConfig, *, moe: bool, dense_ff: int | None = None):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    p = {
+        "ln1": L.rmsnorm_init(d),
+        "attn": L.attention_init(ks[0], cfg),
+        "ln2": L.rmsnorm_init(d),
+    }
+    if moe:
+        p["ffn"] = L.moe_init(ks[1], cfg)
+    else:
+        p["ffn"] = L.mlp_init(ks[1], d, dense_ff or cfg.d_ff)
+    return p
+
+
+def block_apply(p, x, cfg: ModelConfig, positions, *, window=None, cache=None, moe: bool):
+    a, new_cache = L.attention_apply(
+        p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps), cfg, positions,
+        layer_window=window, kv_cache=cache,
+    )
+    x = x + a
+    h_in = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    h = L.moe_apply(p["ffn"], h_in, cfg) if moe else L.mlp_apply(p["ffn"], h_in)
+    return ctx.constrain(x + h, "btd"), new_cache
+
+
+# --------------------------------------------------------------------------
+# model
+# --------------------------------------------------------------------------
+
+
+def _windows(cfg: ModelConfig, n: int) -> np.ndarray:
+    """Per-layer sliding-window sizes (0 = global attention)."""
+    if cfg.sliding_window and cfg.local_global_alternate:
+        return np.array(
+            [cfg.sliding_window if i % 2 == 0 else 0 for i in range(n)], np.int32
+        )
+    if cfg.sliding_window:
+        return np.full((n,), cfg.sliding_window, np.int32)
+    return np.zeros((n,), np.int32)
+
+
+def init_params(key, cfg: ModelConfig):
+    me = _moe_every(cfg)
+    d = cfg.d_model
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    if me == 2:
+        n_blocks = cfg.n_layers // 2
+        keys = jax.random.split(k_layers, n_blocks)
+        layers = jax.vmap(
+            lambda k: {
+                "dense": block_init(
+                    jax.random.fold_in(k, 0), cfg, moe=False, dense_ff=2 * cfg.d_ff
+                ),
+                "moe": block_init(jax.random.fold_in(k, 1), cfg, moe=True),
+            }
+        )(keys)
+    else:
+        keys = jax.random.split(k_layers, cfg.n_layers)
+        layers = jax.vmap(lambda k: block_init(k, cfg, moe=me == 1))(keys)
+    p = {
+        "embed": L.dense_init(k_embed, (cfg.padded_vocab, d), scale=0.02),
+        "layers": layers,
+        "final_norm": L.rmsnorm_init(d),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(k_head, (d, cfg.padded_vocab))
+    return p
+
+
+def embed_inputs(params, cfg: ModelConfig, batch):
+    """tokens (B,S) -> embeddings; or pass-through precomputed frontend
+    embeddings (vlm/audio stubs)."""
+    if "embeddings" in batch:
+        x = batch["embeddings"].astype(L.CDTYPE)
+    else:
+        x = params["embed"][batch["tokens"]].astype(L.CDTYPE)
+    if cfg.attn_softcap:  # gemma2 scales embeddings
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), L.CDTYPE)
+    return ctx.constrain(x, "btd")
+
+
+def unembed(params, cfg: ModelConfig, x):
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(L.CDTYPE)).astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    # NOTE: returns PADDED-vocab logits (padded_vocab columns).  The loss
+    # masks the padding classes; decode paths slice to cfg.vocab.  Keeping
+    # the padded width preserves vocab-sharding over the model axis
+    # (slicing to 50280 of 50432 would force an all-gather of the logits —
+    # observed 13 GB/step in the first dry-run).
+    return logits
+
+
+def _grouped(stack, windows, group: int):
+    """Reshape a stacked-layer pytree (L, ...) into (L/group, group, ...)."""
+    lead = windows.shape[0]
+    assert lead % group == 0, (lead, group)
+    f = lambda a: a.reshape((lead // group, group) + a.shape[1:])
+    return jax.tree.map(f, stack), windows.reshape(lead // group, group)
+
+
+def forward(params, cfg: ModelConfig, batch, *, remat: bool = False,
+            remat_group: int = 1, last_only: bool = False):
+    """Training/prefill forward -> logits (B,S,V).
+
+    remat_group > 1 checkpoints only every `group`-th layer boundary
+    (sqrt-depth activation memory at sqrt-depth recompute — the standard
+    large-model memory lever, see EXPERIMENTS §Perf)."""
+    x = embed_inputs(params, cfg, batch)
+    B, S = x.shape[:2]
+    positions = batch.get(
+        "positions",
+        jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S)),
+    )
+    me = _moe_every(cfg)
+    if me == 2:
+        windows = jnp.asarray(_windows(cfg, cfg.n_layers // 2))
+
+        def one(x, lp, w):
+            x, _ = block_apply(lp["dense"], x, cfg, positions, window=w, moe=False)
+            x, _ = block_apply(lp["moe"], x, cfg, positions, window=w, moe=True)
+            return x
+
+    else:
+        windows = jnp.asarray(_windows(cfg, cfg.n_layers))
+
+        def one(x, lp, w):
+            x, _ = block_apply(lp, x, cfg, positions, window=w, moe=me == 1)
+            return x
+
+    stack = params["layers"]
+    if remat_group > 1 and windows.shape[0] % remat_group == 0:
+        stack, windows = _grouped(stack, windows, remat_group)
+
+        def body(x, inp):
+            lps, ws = inp
+            for i in range(remat_group):
+                x = one(x, jax.tree.map(lambda a: a[i], lps), ws[i])
+            return x, None
+
+    else:
+
+        def body(x, inp):
+            lp, w = inp
+            return one(x, lp, w), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, (stack, windows))
+    if last_only:
+        x = x[:, -1:]
+    return unembed(params, cfg, x)
+
+
+# --------------------------------------------------------------------------
+# decode path
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    hk, dh = cfg.n_kv_heads, cfg.head_dim_
+    me = _moe_every(cfg)
+    n_slots = cfg.n_layers if me != 2 else cfg.n_layers  # 2 per super-block
+    shape = (n_slots, batch, max_len, hk, dh)
+    return {
+        "k": jnp.zeros(shape, L.CDTYPE),
+        "v": jnp.zeros(shape, L.CDTYPE),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, cache, batch):
+    """One token step.  batch: {"tokens": (B,1)} (or embeddings), cache as
+    from init_cache (possibly prefilled).  Returns (logits (B,1,V), cache)."""
+    x = embed_inputs(params, cfg, batch)
+    B, S = x.shape[:2]
+    pos = cache["pos"]
+    positions = pos + jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    me = _moe_every(cfg)
+
+    if me == 2:
+        windows = jnp.asarray(_windows(cfg, cfg.n_layers // 2))
+        kk = cache["k"].reshape((cfg.n_layers // 2, 2) + cache["k"].shape[1:])
+        vv = cache["v"].reshape((cfg.n_layers // 2, 2) + cache["v"].shape[1:])
+
+        def body(x, inp):
+            lp, w, ck, cv = inp
+            x, nc1 = block_apply(
+                lp["dense"], x, cfg, positions, window=w, moe=False,
+                cache={"k": ck[0], "v": cv[0], "pos": pos},
+            )
+            x, nc2 = block_apply(
+                lp["moe"], x, cfg, positions, window=w, moe=True,
+                cache={"k": ck[1], "v": cv[1], "pos": pos},
+            )
+            return x, (
+                jnp.stack([nc1["k"], nc2["k"]]),
+                jnp.stack([nc1["v"], nc2["v"]]),
+            )
+
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], windows, kk, vv))
+        new_cache = {
+            "k": nk.reshape(cache["k"].shape),
+            "v": nv.reshape(cache["v"].shape),
+            "pos": pos + S,
+        }
+    else:
+        windows = jnp.asarray(_windows(cfg, cfg.n_layers))
+
+        def body(x, inp):
+            lp, w, ck, cv = inp
+            x, nc = block_apply(
+                lp, x, cfg, positions, window=w, moe=me == 1,
+                cache={"k": ck, "v": cv, "pos": pos},
+            )
+            return x, (nc["k"], nc["v"])
+
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["layers"], windows, cache["k"], cache["v"])
+        )
+        new_cache = {"k": nk, "v": nv, "pos": pos + S}
+    return unembed(params, cfg, x), new_cache

@@ -1,0 +1,73 @@
+"""Batched serving engine: prefill + decode with fixed batch slots
+(continuous-batching style admission), greedy or temperature sampling.
+
+The decode step is the ``serve_step`` the dry-run lowers for the
+``decode_*`` / ``long_*`` shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # (S,) int32
+    max_new: int = 16
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *, batch_slots: int = 4, max_len: int = 256):
+        self.cfg, self.params = cfg, params
+        self.B, self.T = batch_slots, max_len
+        self._decode = jax.jit(
+            lambda p, c, b: M.decode_step(p, cfg, c, b)
+        )
+
+    def generate(self, prompts: list[np.ndarray], max_new: int = 16, greedy=True):
+        """Simple batched generation: pads prompts into the slot batch,
+        prefills token-by-token (shared path with decode for correctness),
+        then decodes max_new tokens."""
+        assert len(prompts) <= self.B
+        reqs = [Request(p, max_new) for p in prompts]
+        while len(reqs) < self.B:
+            reqs.append(Request(np.zeros(1, np.int32), 0, done=True))
+        maxlen = max(len(r.prompt) for r in reqs)
+        cache = M.init_cache(self.cfg, self.B, self.T)
+        toks = np.zeros((self.B, maxlen), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, maxlen - len(r.prompt) :] = r.prompt  # left-pad
+        logits, cache = self._prefill(toks, cache)
+        last = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        for _ in range(max_new):
+            for i, r in enumerate(reqs):
+                if not r.done:
+                    r.out.append(int(last[i]))
+            logits, cache = self._decode(
+                self.params, cache, {"tokens": last[:, None]}
+            )
+            last = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        return [r.out for r in reqs if not r.done]
+
+    def _prefill(self, toks, cache):
+        # chunked prefill through the decode path (exactness over speed on CPU)
+        logits = None
+        B, S = toks.shape
+        logits, cache = self._decode(self.params, cache, {"tokens": jnp.asarray(toks)})
+        return logits, cache
+
+
+def decode_throughput_model(cfg: ModelConfig, batch: int, kv_len: int) -> dict:
+    """Analytical bytes/token for the decode step (roofline helper)."""
+    hk, dh = cfg.n_kv_heads, cfg.head_dim_
+    kv_bytes = 2 * cfg.n_layers * batch * kv_len * hk * dh * 2  # bf16
+    param_bytes = 0  # filled by caller with actual param count
+    return {"kv_bytes_per_step": kv_bytes}

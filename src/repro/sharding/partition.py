@@ -1,0 +1,173 @@
+"""Partitioning rules: param/optimizer/activation PartitionSpecs per arch.
+
+Mesh axes:
+  * ``pod``   — inter-pod data parallel (multi-pod mesh only)
+  * ``data``  — intra-pod data parallel; doubles as the FSDP axis
+                (params/optimizer state shard their d_model-ish dim here)
+  * ``model`` — tensor parallel (attention heads / FFN hidden / vocab /
+                MoE experts / RNS channels for the crypto workload)
+
+Rules key off parameter-leaf names.  2-D+ weights shard (fsdp_dim -> data,
+tp_dim -> model); GSPMD pads non-divisible dims (e.g. 28 heads on 16-way
+model axis shards the flattened head*dim columns).  Stacked-layer leading
+axes get a None prepended automatically.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# leaf-name -> spec for the *trailing* (unstacked) dims
+_RULES: dict[str, P] = {
+    # embeddings / heads
+    "embed": P("model", "data"),
+    "lm_head": P("data", "model"),
+    # attention
+    "wq": P("data", "model"),
+    "wk": P("data", "model"),
+    "wv": P("data", "model"),
+    "wo": P("model", "data"),
+    # dense mlp
+    "w_gate": P("data", "model"),
+    "w_up": P("data", "model"),
+    "w_down": P("model", "data"),
+    # moe (leading experts dim -> model = expert parallelism)
+    "router": P("data", None),
+    "we_gate": P("model", "data", None),
+    "we_up": P("model", "data", None),
+    "we_down": P("model", None, "data"),
+    # mamba
+    "in_proj": P("data", None),  # mixed z/xBC/dt columns: not 16-divisible
+    "out_proj": P("model", "data"),
+    "conv_w": P(None, "model"),
+    "conv_b": P("model"),
+    # scalars / vectors replicate
+    "scale": P(),
+    "A_log": P(),
+    "D": P(),
+    "dt_bias": P(),
+}
+
+def _leaf_spec(path, leaf) -> P:
+    name = None
+    for part in reversed(path):
+        if isinstance(part, jax.tree_util.DictKey):
+            name = part.key
+            break
+    shape = leaf.shape
+    ndim = len(shape)
+    # stacked layer dims: any leading dims beyond the rule's spec length
+    if name in _RULES:
+        base = _RULES[name]
+        pad = ndim - len(base)
+        if pad < 0:  # e.g. 1-D bias matched by 2-D rule
+            return P()
+        return P(*([None] * pad + list(base)))
+    return P()  # replicate unknown leaves (norms, biases)
+
+
+def enforce_divisibility(spec_tree, shape_tree, mesh: Mesh):
+    """Drop sharding on any dim the mesh axes don't divide evenly (jit
+    input shardings require divisibility)."""
+
+    def fix(spec, leaf):
+        dims = []
+        for i, axes in enumerate(tuple(spec) + (None,) * (len(leaf.shape) - len(spec))):
+            dims.append(_fit(mesh, leaf.shape[i], axes))
+        return P(*dims)
+
+    return jax.tree.map(fix, spec_tree, shape_tree)
+
+
+def param_specs(params):
+    """Pytree of PartitionSpecs matching ``params``."""
+    return jax.tree_util.tree_map_with_path(_leaf_spec, params)
+
+
+def param_shardings(params, mesh: Mesh):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), param_specs(params)
+    )
+
+
+def batch_spec(mesh: Mesh, *, ndim: int = 2) -> P:
+    """Token batches: batch dim over (pod, data); rest replicated."""
+    ba = batch_axes(mesh)
+    return P(ba, *([None] * (ndim - 1)))
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh: Mesh, dim: int, axes):
+    """Axes if the dim divides evenly, else replicate (jit input shardings
+    require divisibility)."""
+    return axes if dim % _axes_size(mesh, axes) == 0 else None
+
+
+def batch_shard_spec(mesh: Mesh, shape) -> P:
+    ba = batch_axes(mesh)
+    first = _fit(mesh, shape[0], ba)
+    return P(first, *([None] * (len(shape) - 1)))
+
+
+def cache_specs(cache, mesh: Mesh):
+    """Decode-state sharding.  Batch over (pod, data); a head-ish dim over
+    model (falling back to head_dim / replication when kv-heads don't
+    divide the 16-way axis):
+      k/v/ck/cv : (L, B, T, Hk, Dh) -> P(None, ba, None, 'model'|fallback)
+      ssm       : (L, B, H, P, N)   -> P(None, ba, 'model'|fallback, ...)
+      conv      : (L, B, K-1, Cd)   -> P(None, ba, None, 'model')
+      pos       : scalar            -> P()
+    """
+    ba = batch_axes(mesh)
+
+    def spec(path, leaf):
+        name = None
+        for part in reversed(path):
+            if isinstance(part, jax.tree_util.DictKey):
+                name = part.key
+                break
+        shp = leaf.shape
+        nd = len(shp)
+        if nd < 2:
+            return P(*([None] * nd))
+        b_ax = _fit(mesh, shp[1], ba)
+        if name in ("k", "v", "ck", "cv") and nd == 5:
+            # Flash-decoding layout: shard the SEQUENCE dim.  Attention
+            # logits/probs stay seq-sharded and the softmax/PV reductions
+            # are tiny (B,H)-sized all-reduces; the token write is a
+            # predicated local DUS.  Sharding kv-heads or head_dim instead
+            # makes the contraction gather the whole cache (17 GB/step
+            # observed on yi-6b decode_32k; §Perf cell D).
+            if shp[2] % mesh.shape["model"] == 0:
+                return P(None, b_ax, "model", None, None)
+            if shp[3] % mesh.shape["model"] == 0:
+                return P(None, b_ax, None, "model", None)
+            if shp[4] % mesh.shape["model"] == 0:
+                return P(None, b_ax, None, None, "model")
+            return P(None, b_ax, None, None, None)
+        if name == "ssm" and nd == 5:
+            if shp[2] % mesh.shape["model"] == 0:
+                return P(None, b_ax, "model", None, None)
+            if shp[3] % mesh.shape["model"] == 0:
+                return P(None, b_ax, None, "model", None)
+            return P(None, b_ax, None, None, None)
+        if name == "conv" and nd == 4:
+            return P(None, b_ax, None, _fit(mesh, shp[3], "model"))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(spec, cache)

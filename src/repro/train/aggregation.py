@@ -1,0 +1,146 @@
+"""Cross-pod gradient aggregation paths (distributed-optimization tricks):
+
+1. ``compressed_psum``  — int8 stochastic-rounding gradient compression for
+   the inter-pod hop (16x less ICI traffic than f32, 4x less than bf16);
+   wraps a shard_map psum over the ``pod`` axis.
+2. HE-secured aggregation — the paper's own motivating application [1]:
+   gradients are quantized, packed into R_{n,q} plaintext polynomials,
+   BFV-encrypted, summed *as ciphertexts* (the untrusted reducer never
+   sees plaintext gradients), then decrypted by the trusted party.
+   Every homomorphic op rides the PaReNTT multiplier.
+
+At container scale these run on a 1-device mesh / host loop; the dry-run
+exercises the multi-pod lowering of (1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bfv
+
+
+# --------------------------------------------------------------------------
+# int8 stochastic-rounding compression
+# --------------------------------------------------------------------------
+
+
+def quantize_int8(x: jax.Array, key) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor scale, stochastic rounding (unbiased)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    y = xf / scale
+    lo = jnp.floor(y)
+    p = y - lo
+    r = jax.random.uniform(key, x.shape)
+    q = lo + (r < p).astype(jnp.float32)
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(grads, key, mesh, axis: str = "pod"):
+    """All-reduce ``grads`` over ``axis`` with int8 payload.  Scales are
+    reduced in f32 (tiny); values int32-summed after widening (sum of int8
+    over <= 2^23 pods cannot overflow int32)."""
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = list(jax.random.split(key, len(leaves)))
+
+    def body(*leaves_in):
+        out = []
+        for leaf, k in zip(leaves_in, keys):
+            q, s = quantize_int8(leaf, k)
+            ssum = jax.lax.psum(s, axis)
+            qsum = jax.lax.psum(q.astype(jnp.int32), axis)
+            n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+            # unbiased mean: each pod's scale averaged; payload mean
+            out.append((qsum.astype(jnp.float32) * (ssum / n) / n).astype(leaf.dtype))
+        return tuple(out)
+
+    specs = tuple(P() for _ in leaves)  # grads replicated over pod axis here
+    fn = shard_map(body, mesh=mesh, in_specs=specs, out_specs=specs)
+    return jax.tree.unflatten(treedef, list(fn(*leaves)))
+
+
+# --------------------------------------------------------------------------
+# HE-secured aggregation (BFV, PaReNTT-powered)
+# --------------------------------------------------------------------------
+
+
+class HeAggregator:
+    """Packs flat gradients into BFV plaintexts and aggregates ciphertexts.
+
+    Quantization: symmetric fixed-point with ``frac_bits``; the plaintext
+    modulus must hold sum_i |q_i| < pt_mod/2 across workers."""
+
+    def __init__(self, n: int = 1024, t: int = 3, v: int = 30,
+                 pt_mod: int = 1 << 24, frac_bits: int = 12):
+        self.ctx = bfv.make_context(n=n, t=t, v=v, pt_mod=pt_mod)
+        self.frac = frac_bits
+        self.n = n
+
+    def keygen(self, key):
+        return bfv.keygen(key, self.ctx)
+
+    def _quantize(self, flat: np.ndarray) -> np.ndarray:
+        q = np.round(flat * (1 << self.frac)).astype(np.int64)
+        lim = self.ctx.pt_mod // 4
+        return np.clip(q, -lim, lim)
+
+    def _pack(self, qvals: np.ndarray) -> np.ndarray:
+        pad = (-len(qvals)) % self.n
+        qp = np.pad(qvals, (0, pad))
+        # signed -> mod pt
+        return (qp % self.ctx.pt_mod).reshape(-1, self.n)
+
+    def encrypt_grads(self, key, flat: np.ndarray, keys) -> bfv.Ciphertext:
+        polys = self._pack(self._quantize(flat))
+        return bfv.encrypt(key, jnp.asarray(polys), keys, self.ctx)
+
+    def aggregate(self, cts: Sequence[bfv.Ciphertext]) -> bfv.Ciphertext:
+        """The untrusted-reducer step: ciphertext-only addition."""
+        return bfv.add_many(list(cts), self.ctx)
+
+    def decrypt_mean(self, ct, keys, num_workers: int, size: int) -> np.ndarray:
+        dec = bfv.decrypt(ct, keys, self.ctx)  # (num_ct, n) in [0, pt)
+        flat = np.asarray(dec).reshape(-1)[:size].astype(np.int64)
+        half = self.ctx.pt_mod // 2
+        signed = np.where(flat > half, flat - self.ctx.pt_mod, flat)
+        return signed.astype(np.float64) / (1 << self.frac) / num_workers
+
+
+def he_aggregate_gradients(agg: HeAggregator, worker_grads, key, keys):
+    """Full round: each worker encrypts its flat gradient; the reducer sums
+    ciphertexts; returns the decrypted mean.  worker_grads: list of
+    same-structure pytrees."""
+    flats = []
+    for g in worker_grads:
+        leaves = [np.asarray(x, dtype=np.float32).ravel() for x in jax.tree.leaves(g)]
+        flats.append(np.concatenate(leaves))
+    size = len(flats[0])
+    cts = [
+        agg.encrypt_grads(jax.random.fold_in(key, i), f, keys)
+        for i, f in enumerate(flats)
+    ]
+    summed = agg.aggregate(cts)
+    mean = agg.decrypt_mean(summed, keys, len(flats), size)
+    # unflatten back into the gradient structure
+    out_leaves = []
+    off = 0
+    ref_leaves, treedef = jax.tree.flatten(worker_grads[0])
+    for ref in ref_leaves:
+        k = int(np.prod(ref.shape)) if ref.ndim else 1
+        out_leaves.append(
+            jnp.asarray(mean[off : off + k].reshape(ref.shape), dtype=jnp.float32)
+        )
+        off += k
+    return jax.tree.unflatten(treedef, out_leaves)

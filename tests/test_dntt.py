@@ -1,0 +1,93 @@
+"""Four-step distributed NWC NTT: correctness vs schoolbook, factorization
+invariance, roundtrip, and consistency with the single-step transform."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import dntt, ntt as ntt_mod
+from repro.core import polymul as pm
+
+Q = 0x3FDE0001  # 30-bit special prime, 2*4096 | q-1
+
+
+class TestFourStep:
+    @pytest.mark.parametrize("n,n1", [(64, 8), (256, 16), (1024, 32), (4096, 64)])
+    def test_negacyclic_mul_matches_schoolbook(self, n, n1):
+        t = dntt.make_fourstep_tables(Q, n, n1)
+        rng = np.random.default_rng(n)
+        a = rng.integers(0, Q, size=n)
+        b = rng.integers(0, Q, size=n)
+        got = dntt.negacyclic_mul_fourstep(jnp.asarray(a), jnp.asarray(b), t)
+        want = pm.schoolbook_negacyclic(a.tolist(), b.tolist(), Q)
+        assert np.asarray(got).tolist() == want
+
+    @pytest.mark.parametrize("n1", [4, 16, 64, 256])
+    def test_factorization_invariance(self, n1):
+        n = 1024
+        rng = np.random.default_rng(n1)
+        a = rng.integers(0, Q, size=n)
+        b = rng.integers(0, Q, size=n)
+        t = dntt.make_fourstep_tables(Q, n, n1)
+        got = np.asarray(
+            dntt.negacyclic_mul_fourstep(jnp.asarray(a), jnp.asarray(b), t)
+        )
+        tb = ntt_mod.make_tables(Q, n)
+        want = np.asarray(
+            ntt_mod.negacyclic_mul(jnp.asarray(a), jnp.asarray(b), tb)
+        )
+        assert np.array_equal(got, want)
+
+    def test_roundtrip(self):
+        n, n1 = 512, 16
+        t = dntt.make_fourstep_tables(Q, n, n1)
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.integers(0, Q, size=(3, n)))
+        back = dntt.fourstep_intt(dntt.fourstep_ntt(a, t), t)
+        assert np.array_equal(np.asarray(back), np.asarray(a))
+
+    def test_spectrum_is_permutation_of_single_step(self):
+        """Same multiset of spectral values as the 1-step NWC transform."""
+        n, n1 = 256, 16
+        t = dntt.make_fourstep_tables(Q, n, n1)
+        tb = ntt_mod.make_tables(Q, n)
+        rng = np.random.default_rng(1)
+        a = rng.integers(0, Q, size=n)
+        f4 = np.sort(np.asarray(dntt.fourstep_ntt(jnp.asarray(a), t)))
+        f1 = np.sort(np.asarray(ntt_mod.ntt(jnp.asarray(a), tb)))
+        assert np.array_equal(f4, f1)
+
+    def test_batched(self):
+        n, n1 = 128, 8
+        t = dntt.make_fourstep_tables(Q, n, n1)
+        rng = np.random.default_rng(2)
+        a = rng.integers(0, Q, size=(2, 3, n))
+        b = rng.integers(0, Q, size=(2, 3, n))
+        got = np.asarray(
+            dntt.negacyclic_mul_fourstep(jnp.asarray(a), jnp.asarray(b), t)
+        )
+        for i in range(2):
+            for j in range(3):
+                want = pm.schoolbook_negacyclic(
+                    a[i, j].tolist(), b[i, j].tolist(), Q
+                )
+                assert got[i, j].tolist() == want
+
+    def test_sharded_constrain_single_device(self):
+        """The shard-constrained path is numerically identical (1-dev mesh)."""
+        import jax
+        from jax.sharding import Mesh
+
+        mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+        n, n1 = 256, 16
+        t = dntt.make_fourstep_tables(Q, n, n1)
+        rng = np.random.default_rng(3)
+        a = rng.integers(0, Q, size=n)
+        b = rng.integers(0, Q, size=n)
+        with mesh:
+            cons = dntt.make_shard_constrain(mesh)
+            got = dntt.negacyclic_mul_fourstep(
+                jnp.asarray(a), jnp.asarray(b), t, cons
+            )
+        want = pm.schoolbook_negacyclic(a.tolist(), b.tolist(), Q)
+        assert np.asarray(got).tolist() == want

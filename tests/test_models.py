@@ -1,0 +1,211 @@
+"""Per-arch reduced-config smoke tests + model behaviour tests
+(decode/prefill consistency, SSD chunked-vs-recurrent equivalence, MoE)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models import ssm
+
+ARCH_IDS = sorted(registry.ARCHS)
+
+
+def _smoke_batch(cfg: ModelConfig, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {}
+    if cfg.family == "encdec":
+        batch["enc_embeddings"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)).astype(np.float32)
+        )
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    elif cfg.frontend:
+        batch["embeddings"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)).astype(np.float32)
+        )
+    else:
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    batch["labels"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_shapes_and_finite(self, arch):
+        cfg = registry.get(arch).reduced()
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        batch = _smoke_batch(cfg)
+        logits = M.forward(params, cfg, batch)
+        assert logits.shape == (2, 16, cfg.vocab)
+        assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+    def test_train_step_reduces_loss_shape(self, arch):
+        """One SGD step on CPU: loss is finite and grads flow."""
+        cfg = registry.get(arch).reduced()
+        params = M.init_params(jax.random.PRNGKey(1), cfg)
+        batch = _smoke_batch(cfg, seed=1)
+
+        def loss_fn(p):
+            logits = M.forward(p, cfg, batch, remat=True)
+            lab = batch["labels"]
+            lp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(lp, lab[..., None], axis=-1)
+            return nll.mean()
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        assert bool(jnp.isfinite(loss))
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads))
+        )
+        assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+        # one step changes the params
+        new = jax.tree.map(lambda p, g: p - 0.1 * g.astype(p.dtype), params, grads)
+        l2 = loss_fn(new)
+        assert bool(jnp.isfinite(l2))
+
+
+@pytest.mark.parametrize(
+    "arch", [a for a in ARCH_IDS if registry.get(a).family != "encdec"]
+)
+def test_decode_matches_prefill(arch):
+    """Greedy decode token-by-token == teacher-forced forward logits."""
+    cfg = registry.get(arch).reduced()
+    if cfg.frontend:
+        pytest.skip("frontend stubs decode over embeddings; covered separately")
+    if cfg.n_experts:
+        # dropping-MoE capacity competition is per-call; equality requires
+        # a no-drop capacity factor (documented semantic of dropping MoE)
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    params = M.init_params(jax.random.PRNGKey(2), cfg)
+    rng = np.random.default_rng(2)
+    B, S = 2, 8
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    full = M.forward(params, cfg, {"tokens": tokens})
+    cache = M.init_cache(cfg, B, max_len=S)
+    outs = []
+    for s in range(S):
+        logits, cache = M.decode_step(params, cfg, cache, {"tokens": tokens[:, s : s + 1]})
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec), np.asarray(full), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_encdec_decode_matches_forward():
+    cfg = registry.get("seamless-m4t-medium").reduced()
+    params = M.init_params(jax.random.PRNGKey(3), cfg)
+    rng = np.random.default_rng(3)
+    B, Se, Sd = 2, 12, 6
+    enc = jnp.asarray(rng.normal(size=(B, Se, cfg.d_model)).astype(np.float32))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, Sd)), jnp.int32)
+    full = M.forward(params, cfg, {"enc_embeddings": enc, "tokens": toks})
+    from repro.models import encdec
+
+    memory = encdec.encode(params, cfg, enc)
+    cache = M.init_cache(cfg, B, max_len=Sd, enc_len=Se)
+    cache = encdec.prefill_cross(params, cfg, cache, memory)
+    outs = []
+    for s in range(Sd):
+        logits, cache = encdec.decode_step(params, cfg, cache, {"tokens": toks[:, s : s + 1]})
+        outs.append(logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), rtol=2e-2, atol=2e-2)
+
+
+class TestSsd:
+    def test_chunked_equals_recurrent(self):
+        """The SSD chunked algorithm == naive per-step recurrence."""
+        B, S, H, P, N = 2, 32, 3, 8, 16
+        rng = np.random.default_rng(0)
+        X = jnp.asarray(rng.normal(size=(B, S, H, P)).astype(np.float32))
+        dt = jnp.asarray(rng.uniform(0.1, 0.9, size=(B, S, H)).astype(np.float32))
+        A = -jnp.asarray(rng.uniform(0.5, 1.5, size=(H,)).astype(np.float32))
+        Bm = jnp.asarray(rng.normal(size=(B, S, N)).astype(np.float32))
+        Cm = jnp.asarray(rng.normal(size=(B, S, N)).astype(np.float32))
+        Yc, hc = ssm._ssd_chunked(X, dt, A, Bm, Cm, chunk=8)
+        h = jnp.zeros((B, H, P, N))
+        ys = []
+        for s in range(S):
+            h, y = ssm._ssd_recurrent_step(h, X[:, s], dt[:, s], A, Bm[:, s], Cm[:, s])
+            ys.append(y)
+        Yr = jnp.stack(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(Yc), np.asarray(Yr), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(hc), np.asarray(h), rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("chunk", [4, 8, 16, 32])
+    def test_chunk_size_invariance(self, chunk):
+        B, S, H, P, N = 1, 32, 2, 4, 8
+        rng = np.random.default_rng(chunk)
+        X = jnp.asarray(rng.normal(size=(B, S, H, P)).astype(np.float32))
+        dt = jnp.asarray(rng.uniform(0.1, 0.9, size=(B, S, H)).astype(np.float32))
+        A = -jnp.ones((H,), jnp.float32)
+        Bm = jnp.asarray(rng.normal(size=(B, S, N)).astype(np.float32))
+        Cm = jnp.asarray(rng.normal(size=(B, S, N)).astype(np.float32))
+        Y1, _ = ssm._ssd_chunked(X, dt, A, Bm, Cm, chunk=chunk)
+        Y2, _ = ssm._ssd_chunked(X, dt, A, Bm, Cm, chunk=S)
+        np.testing.assert_allclose(np.asarray(Y1), np.asarray(Y2), rtol=1e-4, atol=1e-4)
+
+
+class TestMoe:
+    def test_moe_routes_and_keeps_shape(self):
+        cfg = registry.get("dbrx-132b").reduced()
+        key = jax.random.PRNGKey(0)
+        p = L.moe_init(key, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.float32)
+        out = L.moe_apply(p, x, cfg)
+        assert out.shape == x.shape
+        assert bool(jnp.isfinite(out).all())
+
+    def test_moe_capacity_drops_dont_nan(self):
+        cfg = registry.get("dbrx-132b").reduced()
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, capacity_factor=0.25)  # force drops
+        p = L.moe_init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.float32)
+        out = L.moe_apply(p, x, cfg)
+        assert bool(jnp.isfinite(out).all())
+
+    def test_top1_vs_topk_paths(self):
+        cfg = registry.get("llama4-maverick-400b-a17b").reduced()
+        p = L.moe_init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model), jnp.float32)
+        out = L.moe_apply(p, x, cfg)
+        assert out.shape == x.shape
+
+
+class TestAttentionVariants:
+    def test_sliding_window_masks_past(self):
+        cfg = registry.get("gemma2-2b").reduced()
+        p = L.attention_init(jax.random.PRNGKey(0), cfg)
+        B, S = 1, 32
+        x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        out_w, _ = L.attention_apply(p, x, cfg, pos, layer_window=jnp.int32(4))
+        out_g, _ = L.attention_apply(p, x, cfg, pos, layer_window=jnp.int32(0))
+        # early tokens agree (window covers full history), late ones differ
+        assert np.allclose(np.asarray(out_w[:, :3]), np.asarray(out_g[:, :3]), atol=1e-3)
+        assert not np.allclose(np.asarray(out_w[:, -1]), np.asarray(out_g[:, -1]), atol=1e-4)
+
+    def test_mrope_equals_rope_for_text(self):
+        """With equal position streams M-RoPE degenerates to RoPE."""
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 32), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32)[None], (2, 8))
+        a = L.apply_rope(x, pos, 10_000.0, sections=())
+        b = L.apply_rope(x, pos, 10_000.0, sections=(4, 6, 6))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+    def test_softcap_bounds_logits(self):
+        cfg = registry.get("gemma2-2b").reduced()
+        assert cfg.logit_softcap > 0
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        batch = _smoke_batch(cfg)
+        logits = M.forward(params, cfg, batch)
+        assert float(jnp.max(jnp.abs(logits))) <= cfg.logit_softcap + 1e-3

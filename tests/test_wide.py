@@ -1,0 +1,110 @@
+"""Wide-modulus (v=45) arithmetic: digit-split mul_mod vs Python bigints,
+wide NTT vs schoolbook, and the paper's full t=4/v=45 multiplier."""
+import random
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import params as params_mod
+from repro.core import polymul as pm
+from repro.core import primes as primes_mod
+from repro.core import wide
+from repro.core import ntt as ntt_mod
+
+
+@pytest.fixture(scope="module")
+def spec45():
+    p = primes_mod.default_prime_set(64, 4, 45)[0]
+    return wide.from_special(p)
+
+
+class TestWideMulMod:
+    @given(st.integers(0, 2**45), st.integers(0, 2**45))
+    @settings(max_examples=200, deadline=None)
+    def test_matches_bigint(self, a, b):
+        p = primes_mod.default_prime_set(64, 4, 45)[0]
+        spec = wide.from_special(p)
+        a %= spec.q
+        b %= spec.q
+        got = int(wide.mul_mod(jnp.int64(a), jnp.int64(b), spec))
+        assert got == (a * b) % spec.q
+
+    def test_adversarial_values(self, spec45):
+        q = spec45.q
+        vals = [0, 1, 2, q - 1, q - 2, q // 2, (1 << 45) % q, (1 << 23) - 1,
+                (1 << 23), (1 << 44) + 12345]
+        for a in vals:
+            for b in vals:
+                got = int(wide.mul_mod(jnp.int64(a % q), jnp.int64(b % q), spec45))
+                assert got == ((a % q) * (b % q)) % q, (a, b)
+
+    def test_vectorized(self, spec45):
+        rng = np.random.default_rng(0)
+        a = rng.integers(0, spec45.q, size=256)
+        b = rng.integers(0, spec45.q, size=256)
+        got = np.asarray(wide.mul_mod(jnp.asarray(a), jnp.asarray(b), spec45))
+        want = (a.astype(object) * b.astype(object)) % spec45.q
+        assert got.astype(object).tolist() == want.tolist()
+
+    def test_all_four_primes(self):
+        for p in primes_mod.default_prime_set(64, 4, 45):
+            spec = wide.from_special(p)
+            rng = np.random.default_rng(p.q & 0xFFFF)
+            a = rng.integers(0, spec.q, size=64)
+            b = rng.integers(0, spec.q, size=64)
+            got = np.asarray(wide.mul_mod(jnp.asarray(a), jnp.asarray(b), spec))
+            want = (a.astype(object) * b.astype(object)) % spec.q
+            assert got.astype(object).tolist() == want.tolist()
+
+
+class TestWideNtt:
+    @pytest.mark.parametrize("n", [16, 64, 256])
+    def test_negacyclic_matches_schoolbook(self, n):
+        p = primes_mod.default_prime_set(n, 4, 45)[0]
+        spec = wide.from_special(p)
+        tb = ntt_mod.make_tables(spec.q, n)
+        rng = np.random.default_rng(n)
+        a = rng.integers(0, spec.q, size=n)
+        b = rng.integers(0, spec.q, size=n)
+        got = wide.negacyclic_mul(
+            jnp.asarray(a), jnp.asarray(b), jnp.asarray(tb.fwd), jnp.asarray(tb.inv), spec
+        )
+        want = pm.schoolbook_negacyclic(a.tolist(), b.tolist(), spec.q)
+        assert np.asarray(got).tolist() == want
+
+    def test_roundtrip(self):
+        n = 128
+        p = primes_mod.default_prime_set(n, 4, 45)[0]
+        spec = wide.from_special(p)
+        tb = ntt_mod.make_tables(spec.q, n)
+        rng = np.random.default_rng(1)
+        a = jnp.asarray(rng.integers(0, spec.q, size=(3, n)))
+        back = wide.intt_raw(
+            wide.ntt_raw(a, jnp.asarray(tb.fwd), spec), jnp.asarray(tb.inv), spec
+        )
+        assert np.array_equal(np.asarray(back), np.asarray(a))
+
+
+class TestWideMultiplier:
+    def test_t4_v45_full_pipeline(self):
+        """The paper's t=4, v=45, 180-bit configuration — in-JAX jit path."""
+        p = params_mod.make_params(n=64, t=4, v=45)
+        assert p.q.bit_length() == 180
+        m = wide.WideParenttMultiplier(p)
+        rng = random.Random(4)
+        a = [rng.randrange(p.q) for _ in range(64)]
+        b = [rng.randrange(p.q) for _ in range(64)]
+        got = m.multiply_ints(a, b)
+        want = pm.schoolbook_negacyclic(a, b, p.q)
+        assert got == want
+
+    def test_matches_oracle(self):
+        p = params_mod.make_params(n=32, t=4, v=45)
+        m = wide.WideParenttMultiplier(p)
+        rng = random.Random(5)
+        a = [rng.randrange(p.q) for _ in range(32)]
+        b = [rng.randrange(p.q) for _ in range(32)]
+        assert m.multiply_ints(a, b) == pm.oracle_multiply(a, b, p)
