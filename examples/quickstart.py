@@ -20,15 +20,22 @@ from repro.core import polymul as pm
 
 def main():
     # --- 1. correctness (small n so the O(n^2) oracle is fast) -----------
+    # One switch selects the datapath for the whole pipeline:
+    #   "jnp"          pure-jnp reference (always available)
+    #   "pallas"       per-stage Pallas kernels (product round-trips HBM)
+    #   "pallas_fused" the paper's fused NTT -> ⊙ -> iNTT cascade, one
+    #                  kernel, NTT-domain product never leaves VMEM
     p = params_mod.make_params(n=256, t=3, v=30)
     rng = random.Random(0)
     a = [rng.randrange(p.q) for _ in range(p.n)]
     b = [rng.randrange(p.q) for _ in range(p.n)]
-    mult = pm.ParenttMultiplier(p)
-    got = mult.multiply_ints(a, b)
     want = pm.schoolbook_negacyclic(a, b, p.q)
-    assert got == want, "pipeline mismatch!"
-    print(f"[ok] n=256, q={p.q.bit_length()}-bit: PaReNTT == schoolbook")
+    for backend in params_mod.BACKENDS:
+        mult = pm.ParenttMultiplier(p, backend=backend)
+        got = mult.multiply_ints(a, b)
+        assert got == want, f"pipeline mismatch on backend={backend}!"
+        print(f"[ok] n=256, q={p.q.bit_length()}-bit, backend={backend}: "
+              "PaReNTT == schoolbook")
 
     # --- 2. the paper's configuration ------------------------------------
     p = params_mod.make_params(n=4096, t=6, v=30)

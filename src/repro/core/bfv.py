@@ -28,8 +28,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bigint, ntt as ntt_mod, rns as rns_mod
+from repro.core import bigint, rns as rns_mod
 from repro.core.params import ParenttParams, make_params
+from repro.kernels import ops as ops_mod
 
 
 class BfvContext(NamedTuple):
@@ -51,9 +52,10 @@ class Ciphertext:
 
 
 def make_context(
-    n: int = 4096, t: int = 6, v: int = 30, pt_mod: int = 1 << 24
+    n: int = 4096, t: int = 6, v: int = 30, pt_mod: int = 1 << 24,
+    backend: str = "jnp",
 ) -> BfvContext:
-    params = make_params(n=n, t=t, v=v)
+    params = make_params(n=n, t=t, v=v, backend=backend)
     delta = params.q // pt_mod
     delta_res = np.array([delta % int(q) for q in params.plan.qs], dtype=np.int64)
     return BfvContext(
@@ -113,10 +115,9 @@ def keygen(key: jax.Array, ctx: BfvContext) -> KeyPair:
     s_res = _lift(s, qs)
     a = _uniform_res(k_a, ctx, (n,))
     e = _lift(_noise(k_e, (n,), ctx.noise_bound), qs)
-    tabs = ctx.params.tables
     q_b = qs[:, None]
     # pk0 = -(a*s + e)
-    as_ = ntt_mod.negacyclic_mul_channels(a, s_res, tabs)
+    as_ = ops_mod.negacyclic_mul(a, s_res, ctx.params)
     pk0 = (q_b - (as_ + e) % q_b) % q_b
     return KeyPair(sk=s_res, pk=jnp.stack([pk0, a]))
 
@@ -130,15 +131,14 @@ def encrypt(key: jax.Array, m: jax.Array, kp: KeyPair, ctx: BfvContext) -> Ciphe
     u = _lift(_ternary(k_u, lead + (n,)), qs)
     e1 = _lift(_noise(k_e1, lead + (n,), ctx.noise_bound), qs)
     e2 = _lift(_noise(k_e2, lead + (n,), ctx.noise_bound), qs)
-    tabs = ctx.params.tables
     q_b = qs.reshape((-1,) + (1,) * (len(lead) + 1))
     pk0 = kp.pk[0].reshape((ctx.params.t,) + (1,) * len(lead) + (n,))
     pk1 = kp.pk[1].reshape((ctx.params.t,) + (1,) * len(lead) + (n,))
     pk0 = jnp.broadcast_to(pk0, (ctx.params.t,) + lead + (n,))
     pk1 = jnp.broadcast_to(pk1, (ctx.params.t,) + lead + (n,))
     dm = (m[None, ...] % ctx.pt_mod) * jnp.asarray(ctx.delta_res).reshape(q_b.shape)
-    c0 = (ntt_mod.negacyclic_mul_channels(pk0, u, tabs) + e1 + dm % q_b) % q_b
-    c1 = (ntt_mod.negacyclic_mul_channels(pk1, u, tabs) + e2) % q_b
+    c0 = (ops_mod.negacyclic_mul(pk0, u, ctx.params) + e1 + dm % q_b) % q_b
+    c1 = (ops_mod.negacyclic_mul(pk1, u, ctx.params) + e2) % q_b
     return Ciphertext(c=jnp.stack([c0, c1]))
 
 
@@ -165,7 +165,7 @@ def _phase(ct: Ciphertext, kp: KeyPair, ctx: BfvContext) -> jax.Array:
         (ctx.params.t,) + lead + (n,),
     )
     q_b = qs.reshape((-1,) + (1,) * (len(lead) + 1))
-    c1s = ntt_mod.negacyclic_mul_channels(ct.c[1], sk, ctx.params.tables)
+    c1s = ops_mod.negacyclic_mul(ct.c[1], sk, ctx.params)
     return (ct.c[0] + c1s) % q_b
 
 
@@ -219,7 +219,6 @@ def mul_plain(ct: Ciphertext, pt_poly: jax.Array, ctx: BfvContext) -> Ciphertext
     while w.ndim < len(tgt):
         w = w[:, None]
     w = jnp.broadcast_to(w, tgt)
-    tabs = ctx.params.tables
-    c0 = ntt_mod.negacyclic_mul_channels(ct.c[0], w, tabs)
-    c1 = ntt_mod.negacyclic_mul_channels(ct.c[1], w, tabs)
+    c0 = ops_mod.negacyclic_mul(ct.c[0], w, ctx.params)
+    c1 = ops_mod.negacyclic_mul(ct.c[1], w, ctx.params)
     return Ciphertext(c=jnp.stack([c0, c1]))

@@ -1,0 +1,111 @@
+"""Single source of truth for modular scalar arithmetic (int64 lanes).
+
+Both datapaths import from here — the pure-jnp reference oracle
+(:mod:`repro.core.ntt`, :mod:`repro.core.rns`) and the Pallas kernels
+(:mod:`repro.kernels.ntt`, :mod:`repro.kernels.crt`) — so the oracle the
+kernels are validated against can never drift from the kernel math.
+
+Two reduction strategies for the butterfly multiply:
+
+* generic ``%`` — correct for any modulus, but lowers to an integer
+  divide on every butterfly (the hot-loop cost the paper's Barrett PEs
+  exist to avoid);
+* precomputed Barrett — ``eps = floor(2^(2b) / q)`` per channel (b =
+  bit-length of q), shift/multiply/3-conditional-subtract.  Valid for
+  products ``x*y`` with ``x, y < q < 2^31`` and requires
+  ``2*(b+1) <= 63`` (b <= 30, the paper's preferred v=30 operating
+  point).  The (s1, s2) shift pair is static per configuration; only
+  ``eps`` varies per RNS channel, so the same vectorized code serves all
+  t channels.
+
+Every helper accepts scalars or broadcastable arrays for ``q`` / ``eps``
+so one implementation serves single-modulus, vmapped multi-channel, and
+in-kernel (Pallas ref-value) call sites.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# add / sub / halve
+# --------------------------------------------------------------------------
+
+
+def add_mod(x, y, q):
+    """(x + y) mod q for x, y in [0, q)."""
+    s = x + y
+    return jnp.where(s >= q, s - q, s)
+
+
+def sub_mod(x, y, q):
+    """(x - y) mod q for x, y in [0, q)."""
+    d = x - y
+    return jnp.where(d < 0, d + q, d)
+
+
+def div2_mod(x, q_half):
+    """x * 2^{-1} mod q via paper Eq 24: (x >> 1) + (x & 1) * (q+1)/2.
+    Result < q whenever x < q (no reduction needed)."""
+    return (x >> 1) + (x & 1) * q_half
+
+
+# --------------------------------------------------------------------------
+# Barrett reduction
+# --------------------------------------------------------------------------
+
+
+def barrett_constants(q: int, c: int, v: int) -> tuple[int, int, int]:
+    """Constants for reducing x < 2^c mod q (q of v bits), 63-bit safe.
+
+    q_hat = ((x >> (v-1)) * eps) >> (c - v + 1),  eps = floor(2^c / q).
+    Requires 2*(c - v + 1) <= 63.  Quotient undershoots by < 4 =>
+    three conditional subtractions complete the reduction.
+    """
+    assert 2 * (c - v + 1) <= 63, (q, c, v)
+    eps = (1 << c) // q
+    return eps, v - 1, c - v + 1
+
+
+def barrett_reduce(x, q, eps, s1: int, s2: int):
+    """x mod q for x < 2^c (see barrett_constants). Arrays or scalars."""
+    qhat = ((x >> s1) * eps) >> s2
+    r = x - qhat * q
+    for _ in range(3):
+        r = jnp.where(r >= q, r - q, r)
+    return r
+
+
+def mul_barrett_constants(qs) -> tuple[np.ndarray, tuple[int, int]] | tuple[None, None]:
+    """Per-channel constants for reducing residue products x*y, x, y < q_i.
+
+    Returns ``(eps, (s1, s2))`` with ``eps`` an int64 array aligned with
+    ``qs`` and one static shift pair shared by all channels, or
+    ``(None, None)`` when the configuration is outside the 63-bit-safe
+    envelope (mixed modulus widths, or q >= 2^31 — those paths keep the
+    generic ``%``).
+    """
+    qs = np.atleast_1d(np.asarray(qs, dtype=np.int64))
+    widths = {int(q).bit_length() for q in qs}
+    if len(widths) != 1:
+        return None, None
+    b = widths.pop()
+    c = 2 * b
+    if 2 * (c - b + 1) > 63:
+        return None, None
+    eps = np.array([(1 << c) // int(q) for q in qs], dtype=np.int64)
+    return eps, (b - 1, b + 1)
+
+
+def mul_mod(x, y, q, eps=None, shifts: tuple[int, int] | None = None):
+    """(x * y) mod q for x, y in [0, q).
+
+    With ``eps``/``shifts`` (from :func:`mul_barrett_constants`,
+    broadcastable against x*y) the reduction is the paper's Barrett PE;
+    without them it falls back to a generic ``%``.
+    """
+    p = x * y
+    if eps is None:
+        return p % q
+    s1, s2 = shifts
+    return barrett_reduce(p, q, eps, s1, s2)

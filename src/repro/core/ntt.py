@@ -17,6 +17,12 @@ Design notes
   data-flow-level content of the paper's different-folding-sets trick
   (the hardware folding/latency model itself lives in
   :mod:`repro.core.schedule`).
+* Butterfly reduction: the scalar helpers live in
+  :mod:`repro.core.modmath` (shared with the Pallas kernels so the two
+  datapaths cannot drift).  When a configuration's moduli fit the
+  63-bit-safe envelope (q < 2^31, uniform width — the paper's v=30
+  preferred point), the butterfly multiply reduces with a precomputed
+  per-channel Barrett constant instead of a generic ``%``.
 
 All arithmetic is int64; residues must satisfy q < 2**31 so products fit
 (the v<=30 fast path; the paper's preferred config).  The v=45 config is
@@ -24,10 +30,12 @@ served by the numpy-object oracle in :mod:`repro.core.polymul`.
 
 Shapes: transforms operate on the last axis; any leading batch dims.  The
 `*_channels` variants vmap over a leading RNS-channel axis with per-channel
-moduli/tables.
+moduli/tables; twiddles and moduli are device-resident (uploaded once per
+table object, not per call).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import NamedTuple
 
@@ -35,7 +43,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import modmath
 from repro.core import primes as primes_mod
+
+# Re-exported so existing call sites (benchmarks, notebooks) keep working;
+# the implementations live in modmath.
+add_mod = modmath.add_mod
+sub_mod = modmath.sub_mod
+mul_mod = modmath.mul_mod
+div2_mod = modmath.div2_mod
 
 
 def bit_reverse_indices(n: int) -> np.ndarray:
@@ -57,6 +73,8 @@ class NttTables(NamedTuple):
     fwd: np.ndarray  # (n,)  fwd[i] = psi^{brv(i)}    (CT/DIT stage tables)
     inv: np.ndarray  # (n,)  inv[i] = psi^{-brv(i)}   (mirror-order inverse)
     half: int  # (q + 1) / 2, for the div-by-2 PE (Eq 24)
+    mul_eps: int | None = None  # Barrett eps for residue products (q<2^31)
+    mul_shifts: tuple[int, int] | None = None
 
 
 @functools.lru_cache(maxsize=None)
@@ -67,41 +85,26 @@ def make_tables(q: int, n: int) -> NttTables:
     fwd = np.array([pow(psi, int(b), q) for b in brv], dtype=np.int64)
     psi_inv = pow(psi, q - 2, q)
     inv = np.array([pow(psi_inv, int(b), q) for b in brv], dtype=np.int64)
-    return NttTables(q=q, n=n, psi=psi, fwd=fwd, inv=inv, half=(q + 1) // 2)
+    eps, shifts = modmath.mul_barrett_constants([q])
+    return NttTables(
+        q=q,
+        n=n,
+        psi=psi,
+        fwd=fwd,
+        inv=inv,
+        half=(q + 1) // 2,
+        mul_eps=int(eps[0]) if eps is not None else None,
+        mul_shifts=shifts,
+    )
 
 
 # --------------------------------------------------------------------------
-# Modular helper ops (int64, q < 2**31).  q / half may be python ints or
-# (broadcastable) arrays so the same code serves single- and multi-channel.
+# Transforms (single modulus; q/half/eps scalars or 0-d arrays, shifts
+# static python ints)
 # --------------------------------------------------------------------------
 
 
-def add_mod(x, y, q):
-    s = x + y
-    return jnp.where(s >= q, s - q, s)
-
-
-def sub_mod(x, y, q):
-    d = x - y
-    return jnp.where(d < 0, d + q, d)
-
-
-def mul_mod(x, y, q):
-    return (x * y) % q
-
-
-def div2_mod(x, q_half):
-    """x * 2^{-1} mod q via Eq 24: (x >> 1) + (x & 1) * (q+1)/2.
-    Result < q whenever x < q (no reduction needed)."""
-    return (x >> 1) + (x & 1) * q_half
-
-
-# --------------------------------------------------------------------------
-# Transforms (single modulus; q/half scalars or 0-d arrays)
-# --------------------------------------------------------------------------
-
-
-def ntt_raw(a: jax.Array, fwd: jax.Array, q) -> jax.Array:
+def ntt_raw(a: jax.Array, fwd: jax.Array, q, eps=None, shifts=None) -> jax.Array:
     """Forward NWC NTT, natural-in, bit-reversed-out. Last-axis transform."""
     n = a.shape[-1]
     lead = a.shape[:-1]
@@ -111,14 +114,14 @@ def ntt_raw(a: jax.Array, fwd: jax.Array, q) -> jax.Array:
         w = fwd[m : 2 * m]  # static slice
         x = a.reshape(lead + (m, 2, t))
         u = x[..., 0, :]
-        v = mul_mod(x[..., 1, :], w[:, None], q)
+        v = mul_mod(x[..., 1, :], w[:, None], q, eps, shifts)
         a = jnp.stack([add_mod(u, v, q), sub_mod(u, v, q)], axis=-2)
         a = a.reshape(lead + (n,))
         m *= 2
     return a
 
 
-def intt_raw(a: jax.Array, inv: jax.Array, q, half) -> jax.Array:
+def intt_raw(a: jax.Array, inv: jax.Array, q, half, eps=None, shifts=None) -> jax.Array:
     """Inverse NWC NTT, bit-reversed-in, natural-out; n^{-1} folded into the
     per-stage halving (paper Fig 9 / Eq 20-25)."""
     n = a.shape[-1]
@@ -129,7 +132,7 @@ def intt_raw(a: jax.Array, inv: jax.Array, q, half) -> jax.Array:
         x = a.reshape(lead + (h, 2, t))
         u, v = x[..., 0, :], x[..., 1, :]
         s = add_mod(u, v, q)
-        d = mul_mod(sub_mod(u, v, q), w[:, None], q)
+        d = mul_mod(sub_mod(u, v, q), w[:, None], q, eps, shifts)
         a = jnp.stack([div2_mod(s, half), div2_mod(d, half)], axis=-2)
         a = a.reshape(lead + (n,))
         h //= 2
@@ -138,18 +141,28 @@ def intt_raw(a: jax.Array, inv: jax.Array, q, half) -> jax.Array:
 
 
 def ntt(a: jax.Array, tables: NttTables) -> jax.Array:
-    return ntt_raw(a, jnp.asarray(tables.fwd), tables.q)
+    return ntt_raw(
+        a, jnp.asarray(tables.fwd), tables.q, tables.mul_eps, tables.mul_shifts
+    )
 
 
 def intt(a: jax.Array, tables: NttTables) -> jax.Array:
-    return intt_raw(a, jnp.asarray(tables.inv), tables.q, tables.half)
+    return intt_raw(
+        a,
+        jnp.asarray(tables.inv),
+        tables.q,
+        tables.half,
+        tables.mul_eps,
+        tables.mul_shifts,
+    )
 
 
 def negacyclic_mul(a: jax.Array, b: jax.Array, tables: NttTables) -> jax.Array:
     """The no-shuffle cascade: NTT(a) ⊙ NTT(b) -> iNTT, zero permutations."""
     fa = ntt(a, tables)
     fb = ntt(b, tables)
-    return intt(mul_mod(fa, fb, tables.q), tables)
+    prod = mul_mod(fa, fb, tables.q, tables.mul_eps, tables.mul_shifts)
+    return intt(prod, tables)
 
 
 # --------------------------------------------------------------------------
@@ -159,11 +172,23 @@ def negacyclic_mul(a: jax.Array, b: jax.Array, tables: NttTables) -> jax.Array:
 # --------------------------------------------------------------------------
 
 
-class ChannelTables(NamedTuple):
+@dataclasses.dataclass(frozen=True, eq=False)  # identity hash: jit-static-safe
+class ChannelTables:
+    """Stacked per-channel twiddle tables + Barrett mul constants.
+
+    Host arrays are the canonical values; the ``*_d`` cached properties
+    hold the device-resident copies, uploaded exactly once per table
+    object (call sites must NOT re-wrap the host arrays in
+    ``jnp.asarray`` — that is the per-call H2D re-upload this class
+    exists to eliminate).
+    """
+
     qs: np.ndarray  # (t,)
     fwd: np.ndarray  # (t, n)
     inv: np.ndarray  # (t, n)
     half: np.ndarray  # (t,)
+    mul_eps: np.ndarray | None = None  # (t,) Barrett eps, None outside envelope
+    mul_shifts: tuple[int, int] | None = None  # static shift pair
 
     @property
     def n(self) -> int:
@@ -173,34 +198,64 @@ class ChannelTables(NamedTuple):
     def t(self) -> int:
         return self.fwd.shape[0]
 
+    # -- device-resident copies, uploaded once at construction time.
+    # Eager (not lazy/cached) on purpose: a lazy first touch could happen
+    # inside a jit trace, where jnp.asarray yields a tracer that must not
+    # be cached.  Constructed host-side, these are concrete device arrays
+    # that close over traces as constants.
+    def __post_init__(self):
+        object.__setattr__(self, "qs_d", jnp.asarray(self.qs))
+        object.__setattr__(self, "fwd_d", jnp.asarray(self.fwd))
+        object.__setattr__(self, "inv_d", jnp.asarray(self.inv))
+        object.__setattr__(self, "half_d", jnp.asarray(self.half))
+        object.__setattr__(
+            self,
+            "mul_eps_d",
+            None if self.mul_eps is None else jnp.asarray(self.mul_eps),
+        )
+
 
 def make_channel_tables(qs, n: int) -> ChannelTables:
     tabs = [make_tables(int(q), n) for q in qs]
+    eps, shifts = modmath.mul_barrett_constants([t.q for t in tabs])
     return ChannelTables(
         qs=np.array([t.q for t in tabs], dtype=np.int64),
         fwd=np.stack([t.fwd for t in tabs]),
         inv=np.stack([t.inv for t in tabs]),
         half=np.array([t.half for t in tabs], dtype=np.int64),
+        mul_eps=eps,
+        mul_shifts=shifts,
     )
+
+
+def _eps_axes(ct: ChannelTables):
+    """(eps array | dummy, vmap axis) — vmap needs a concrete operand."""
+    if ct.mul_eps is None:
+        return None, None
+    return ct.mul_eps_d, 0
 
 
 def ntt_channels(a: jax.Array, ct: ChannelTables) -> jax.Array:
     """a: (t, ..., n) -> (t, ..., n), channel c transformed mod qs[c]."""
-    return jax.vmap(ntt_raw, in_axes=(0, 0, 0))(
-        a, jnp.asarray(ct.fwd), jnp.asarray(ct.qs)
-    )
+    eps, ax = _eps_axes(ct)
+    fn = functools.partial(ntt_raw, shifts=ct.mul_shifts)
+    return jax.vmap(fn, in_axes=(0, 0, 0, ax))(a, ct.fwd_d, ct.qs_d, eps)
 
 
 def intt_channels(a: jax.Array, ct: ChannelTables) -> jax.Array:
-    return jax.vmap(intt_raw, in_axes=(0, 0, 0, 0))(
-        a, jnp.asarray(ct.inv), jnp.asarray(ct.qs), jnp.asarray(ct.half)
+    eps, ax = _eps_axes(ct)
+    fn = functools.partial(intt_raw, shifts=ct.mul_shifts)
+    return jax.vmap(fn, in_axes=(0, 0, 0, 0, ax))(
+        a, ct.inv_d, ct.qs_d, ct.half_d, eps
     )
 
 
 def negacyclic_mul_channels(a, b, ct: ChannelTables) -> jax.Array:
     """(t, ..., n) x (t, ..., n) — the full RNS-parallel no-shuffle cascade."""
-    qs = jnp.asarray(ct.qs)
-    q_b = qs.reshape((ct.t,) + (1,) * (a.ndim - 1))
+    bshape = (ct.t,) + (1,) * (a.ndim - 1)
+    q_b = ct.qs_d.reshape(bshape)
+    eps_b = None if ct.mul_eps is None else ct.mul_eps_d.reshape(bshape)
     fa = ntt_channels(a, ct)
     fb = ntt_channels(b, ct)
-    return intt_channels(mul_mod(fa, fb, q_b), ct)
+    prod = mul_mod(fa, fb, q_b, eps_b, ct.mul_shifts)
+    return intt_channels(prod, ct)

@@ -15,6 +15,18 @@ from repro.core import primes as primes_mod
 from repro.core import rns as rns_mod
 
 
+# Datapath selection for the whole stack (see repro.kernels.ops, which
+# dispatches on this): pure-jnp reference, per-stage Pallas kernels, or
+# the fused single-kernel NTT -> ⊙ -> iNTT cascade (paper contribution 1).
+BACKENDS = ("jnp", "pallas", "pallas_fused")
+
+
+def validate_backend(backend: str) -> str:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}: expected one of {BACKENDS}")
+    return backend
+
+
 @dataclasses.dataclass(frozen=True)
 class ParenttParams:
     n: int
@@ -23,6 +35,7 @@ class ParenttParams:
     primes: tuple[primes_mod.SpecialPrime, ...]
     plan: rns_mod.RnsPlan
     tables: ntt_mod.ChannelTables | None  # None for v > 31 (oracle-only)
+    backend: str = "jnp"  # default datapath; per-call backend= overrides
 
     @property
     def q(self) -> int:
@@ -32,9 +45,12 @@ class ParenttParams:
     def qs(self):
         return self.plan.qs
 
+    def with_backend(self, backend: str) -> "ParenttParams":
+        return dataclasses.replace(self, backend=validate_backend(backend))
+
 
 @functools.lru_cache(maxsize=None)
-def make_params(n: int = 4096, t: int = 6, v: int = 30) -> ParenttParams:
+def _make_params_base(n: int, t: int, v: int) -> ParenttParams:
     specials = primes_mod.default_prime_set(n, t, v)
     qs = [s.q for s in specials]
     plan = rns_mod.make_plan(
@@ -42,6 +58,15 @@ def make_params(n: int = 4096, t: int = 6, v: int = 30) -> ParenttParams:
     )
     tables = ntt_mod.make_channel_tables(qs, n) if v <= 31 else None
     return ParenttParams(n=n, v=v, t=t, primes=specials, plan=plan, tables=tables)
+
+
+def make_params(
+    n: int = 4096, t: int = 6, v: int = 30, backend: str = "jnp"
+) -> ParenttParams:
+    """Build (cached) params.  Backend variants of the same (n, t, v)
+    share one plan / table set, so twiddles upload to device once."""
+    base = _make_params_base(n, t, v)
+    return base if backend == "jnp" else base.with_backend(backend)
 
 
 # Small presets used across tests (fast to build).

@@ -17,8 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bigint, ntt as ntt_mod, rns as rns_mod
+from repro.core import bigint, rns as rns_mod
 from repro.core.params import ParenttParams
+from repro.kernels import ops as ops_mod
 
 # --------------------------------------------------------------------------
 # Oracles (host, exact)
@@ -79,30 +80,50 @@ class ParenttMultiplier:
 
     All methods operate on the last axis = polynomial coefficients; the
     RNS channel axis is the leading axis of residue-domain arrays.
+
+    ``backend`` selects the datapath for all three steps (see
+    :mod:`repro.kernels.ops`): ``"jnp"`` (pure-jnp reference),
+    ``"pallas"`` (per-stage kernels) or ``"pallas_fused"`` (the paper's
+    single-kernel NTT -> ⊙ -> iNTT cascade).  ``None`` defers to
+    ``params.backend``.
     """
 
-    def __init__(self, params: ParenttParams, use_sau: bool = True):
+    def __init__(
+        self,
+        params: ParenttParams,
+        use_sau: bool = True,
+        backend: str | None = None,
+    ):
         if params.tables is None:
-            raise ValueError("v > 31: use oracle_multiply")
+            raise ValueError(
+                f"ParenttMultiplier requires int64-safe NTT tables, but params "
+                f"(n={params.n}, t={params.t}, v={params.v}) have none: v > 31 "
+                f"means residue products overflow int64.  Use "
+                f"polymul.oracle_multiply (exact host bigints, any v) or "
+                f"repro.core.wide.WideParenttMultiplier (digit-split v=45 "
+                f"datapath) instead."
+            )
         self.params = params
         self.use_sau = use_sau
+        self.backend = ops_mod.resolve_backend(params, backend)
 
     # -- step 1: pre-processing ------------------------------------------
     def preprocess(self, z: jax.Array) -> jax.Array:
         """z: (..., n, S) segments -> residues (t, ..., n)."""
-        fn = rns_mod.decompose_sau if self.use_sau else rns_mod.decompose
-        return fn(z, self.params.plan)
+        return ops_mod.rns_decompose(
+            z, self.params, backend=self.backend, use_sau=self.use_sau
+        )
 
     # -- step 2: evaluation in the residue domain ------------------------
     def residue_mul(self, ra: jax.Array, rb: jax.Array) -> jax.Array:
         """(t, ..., n) x (t, ..., n) -> (t, ..., n): parallel no-shuffle
         NTT cascades, one per RNS channel."""
-        return ntt_mod.negacyclic_mul_channels(ra, rb, self.params.tables)
+        return ops_mod.negacyclic_mul(ra, rb, self.params, backend=self.backend)
 
     # -- step 3: post-processing ------------------------------------------
     def postprocess(self, residues: jax.Array) -> jax.Array:
         """(t, ..., n) -> (..., n, L) limbs of p mod q."""
-        return rns_mod.compose(residues, self.params.plan)
+        return ops_mod.rns_compose(residues, self.params, backend=self.backend)
 
     # -- full pipeline ----------------------------------------------------
     @functools.partial(jax.jit, static_argnums=0)

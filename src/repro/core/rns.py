@@ -30,31 +30,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bigint
-
-# --------------------------------------------------------------------------
-# Barrett reduction (int64-safe hi-part variant)
-# --------------------------------------------------------------------------
-
-
-def barrett_constants(q: int, c: int, v: int) -> tuple[int, int, int]:
-    """Constants for reducing x < 2^c mod q (q of v bits), 63-bit safe.
-
-    q_hat = ((x >> (v-1)) * eps) >> (c - v + 1),  eps = floor(2^c / q).
-    Requires 2*(c - v + 1) <= 63.  Quotient undershoots by < 4 =>
-    three conditional subtractions complete the reduction.
-    """
-    assert 2 * (c - v + 1) <= 63, (q, c, v)
-    eps = (1 << c) // q
-    return eps, v - 1, c - v + 1
-
-
-def barrett_reduce(x, q, eps, s1: int, s2: int):
-    """x mod q for x < 2^c (see barrett_constants). Arrays or scalars."""
-    qhat = ((x >> s1) * eps) >> s2
-    r = x - qhat * q
-    for _ in range(3):
-        r = jnp.where(r >= q, r - q, r)
-    return r
+from repro.core.modmath import barrett_constants, barrett_reduce  # noqa: F401
+# ^ canonical implementations live in modmath (shared with the Pallas
+#   kernels); re-exported here because the RNS datapaths and their tests
+#   historically import them from this module.
 
 
 # --------------------------------------------------------------------------
@@ -89,6 +68,16 @@ class RnsPlan:
         """int64 datapaths require q_i < 2^31; v=45 is served by the
         Python-bigint oracle in polymul.py."""
         return self.v <= 31
+
+    # -- device-resident constants, uploaded once at construction time.
+    # Eager on purpose: a lazy first touch could happen inside a jit
+    # trace, where jnp.asarray yields a tracer that must not be cached.
+    def __post_init__(self):
+        object.__setattr__(self, "qs_d", jnp.asarray(self.qs))
+        object.__setattr__(self, "beta_pows_d", jnp.asarray(self.beta_pows))
+        object.__setattr__(self, "qi_tilde_d", jnp.asarray(self.qi_tilde))
+        object.__setattr__(self, "qi_star_limbs_d", jnp.asarray(self.qi_star_limbs))
+        object.__setattr__(self, "q_limbs_d", jnp.asarray(self.q_limbs))
 
 
 def make_plan(qs: list[int], n: int, v: int, beta_terms, t_prime: int = 3) -> RnsPlan:
@@ -144,8 +133,8 @@ def decompose(z: jnp.ndarray, plan: RnsPlan) -> jnp.ndarray:
     """Generic residue computation.  z: (..., S) base-2^v segments (each
     < 2^v) -> residues (t, ...)."""
     assert plan.jnp_safe
-    qs = jnp.asarray(plan.qs)  # (t,)
-    bp = jnp.asarray(plan.beta_pows)  # (t, S)
+    qs = plan.qs_d  # (t,)
+    bp = plan.beta_pows_d  # (t, S)
     terms = (z[..., None, :] * bp) % qs[:, None]  # (..., t, S)
     r = terms.sum(axis=-1) % qs  # (..., t)
     return jnp.moveaxis(r, -1, 0)
@@ -223,14 +212,14 @@ def compose(residues: jnp.ndarray, plan: RnsPlan) -> jnp.ndarray:
 
     No full-width Barrett over q: the t-term sum is < t*q and is finished
     with (t-1) conditional subtractions (Fig 16(b))."""
-    qs = jnp.asarray(plan.qs).reshape((plan.t,) + (1,) * (residues.ndim - 1))
-    y = (residues * jnp.asarray(plan.qi_tilde).reshape(qs.shape)) % qs  # (t, ...)
-    star = jnp.asarray(plan.qi_star_limbs)  # (t, L)
+    qs = plan.qs_d.reshape((plan.t,) + (1,) * (residues.ndim - 1))
+    y = (residues * plan.qi_tilde_d.reshape(qs.shape)) % qs  # (t, ...)
+    star = plan.qi_star_limbs_d  # (t, L)
     star_b = star.reshape((plan.t,) + (1,) * (residues.ndim - 1) + (plan.L,))
     contrib = y[..., None] * star_b  # (t, ..., L), products < 2^58
     acc = contrib.sum(axis=0)  # (..., L), < t * 2^58
     acc = bigint.carry_normalize(acc, plan.w)
-    q_limbs = jnp.asarray(plan.q_limbs)
+    q_limbs = plan.q_limbs_d
     q_b = q_limbs.reshape((1,) * (acc.ndim - 1) + (plan.L,))
     return bigint.mod_by_subtraction(acc, jnp.broadcast_to(q_b, acc.shape), plan.w, plan.t - 1)
 

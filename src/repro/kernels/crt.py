@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import modmath
 from repro.core import rns as rns_mod
 
 BLK = 256  # coefficients per grid step
@@ -36,8 +37,8 @@ def _make_decompose_kernel(qi: int, v: int, beta_terms, seg_count: int, t_prime:
     """Returns a kernel closure with the channel's SAU circuit baked in."""
     v1 = beta_terms[0][0]
     c_sau = v + v1 + 3
-    eps, s1, s2 = rns_mod.barrett_constants(qi, c_sau, v)
-    epsa, sa1, sa2 = rns_mod.barrett_constants(qi, v + 3, v)
+    eps, s1, s2 = modmath.barrett_constants(qi, c_sau, v)
+    epsa, sa1, sa2 = modmath.barrett_constants(qi, v + 3, v)
     n_blocks = -(-seg_count // t_prime)
 
     def sau(z):
@@ -47,7 +48,7 @@ def _make_decompose_kernel(qi: int, v: int, beta_terms, seg_count: int, t_prime:
         return acc
 
     def red(x):
-        return rns_mod.barrett_reduce(x, qi, eps, s1, s2)
+        return modmath.barrett_reduce(x, qi, eps, s1, s2)
 
     def kernel(z_ref, o_ref):
         z = z_ref[...]  # (blk, S)
@@ -68,7 +69,7 @@ def _make_decompose_kernel(qi: int, v: int, beta_terms, seg_count: int, t_prime:
                 acc = acc + blk
             else:
                 acc = acc + (blk * int(block_consts[rho])) % qi
-        o_ref[...] = rns_mod.barrett_reduce(acc, qi, epsa, sa1, sa2)
+        o_ref[...] = modmath.barrett_reduce(acc, qi, epsa, sa1, sa2)
 
     return kernel
 
@@ -175,9 +176,9 @@ def compose_pallas(residues, *, plan: rns_mod.RnsPlan, interpret: bool = True):
         interpret=interpret,
     )(
         rp,
-        jnp.asarray(plan.qs).reshape(t, 1),
-        jnp.asarray(plan.qi_tilde).reshape(t, 1),
-        jnp.asarray(plan.qi_star_limbs),
-        jnp.asarray(plan.q_limbs).reshape(1, L),
+        plan.qs_d.reshape(t, 1),
+        plan.qi_tilde_d.reshape(t, 1),
+        plan.qi_star_limbs_d,
+        plan.q_limbs_d.reshape(1, L),
     )
     return out[:rows]

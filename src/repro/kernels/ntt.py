@@ -6,7 +6,8 @@ TPU mapping
 -----------
 * One grid step processes a (ROWS, n) tile of polynomials for one RNS
   channel, resident in VMEM; twiddles (n,) for that channel are also VMEM
-  blocks.  Per-channel moduli arrive as (1, 1) SMEM-style scalar blocks.
+  blocks.  Per-channel moduli and Barrett constants arrive as (1, 1)
+  SMEM-style scalar blocks.
 * The fused kernel runs NTT(a), NTT(b), the pointwise product and the
   iNTT inside ONE pallas_call: the NTT-domain product never exists in HBM.
   This is the TPU analogue of the paper's buffer-free NTT->iNTT cascade —
@@ -17,6 +18,11 @@ TPU mapping
   for stride < 128 a real-TPU deployment flips to the transposed-tile
   schedule (see DESIGN.md §6) — numerically identical, validated here in
   interpret mode.
+* Butterfly modular arithmetic is imported from
+  :mod:`repro.core.modmath` — the same helpers the pure-jnp reference
+  oracle uses, so kernel and oracle cannot drift.  When ``shifts`` is
+  given (static), the per-channel Barrett constant ``eps`` replaces the
+  generic ``%`` in the butterfly multiply (paper's Barrett PE).
 
 VMEM budget per grid step (n = 4096, ROWS = 8, int64):
   a, b tiles 2 x 256 KiB + twiddles 2 x 32 KiB + scratch ≈ 0.8 MiB << 128 MiB.
@@ -29,10 +35,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.modmath import add_mod, div2_mod, mul_mod, sub_mod
+
 DEFAULT_ROWS = 8
 
 
-def _fwd_stages(a, fwd, q):
+def _fwd_stages(a, fwd, q, eps=None, shifts=None):
     """CT/DIT stages on the last axis of a (rows, n) tile."""
     rows, n = a.shape
     m, t = 1, n
@@ -41,17 +49,13 @@ def _fwd_stages(a, fwd, q):
         w = jax.lax.slice_in_dim(fwd, m, 2 * m)  # static bounds
         x = a.reshape(rows, m, 2, t)
         u = x[:, :, 0, :]
-        v = (x[:, :, 1, :] * w[None, :, None]) % q
-        s = u + v
-        s = jnp.where(s >= q, s - q, s)
-        d = u - v
-        d = jnp.where(d < 0, d + q, d)
-        a = jnp.stack([s, d], axis=2).reshape(rows, n)
+        v = mul_mod(x[:, :, 1, :], w[None, :, None], q, eps, shifts)
+        a = jnp.stack([add_mod(u, v, q), sub_mod(u, v, q)], axis=2).reshape(rows, n)
         m *= 2
     return a
 
 
-def _inv_stages(a, inv, q, half):
+def _inv_stages(a, inv, q, half, eps=None, shifts=None):
     """Mirror-order GS stages with the per-stage halving (Fig 9 PE)."""
     rows, n = a.shape
     h, t = n // 2, 1
@@ -59,42 +63,43 @@ def _inv_stages(a, inv, q, half):
         w = jax.lax.slice_in_dim(inv, h, 2 * h)
         x = a.reshape(rows, h, 2, t)
         u, v = x[:, :, 0, :], x[:, :, 1, :]
-        s = u + v
-        s = jnp.where(s >= q, s - q, s)
-        d = u - v
-        d = jnp.where(d < 0, d + q, d)
-        d = (d * w[None, :, None]) % q
-        s = (s >> 1) + (s & 1) * half
-        d = (d >> 1) + (d & 1) * half
-        a = jnp.stack([s, d], axis=2).reshape(rows, n)
+        s = add_mod(u, v, q)
+        d = mul_mod(sub_mod(u, v, q), w[None, :, None], q, eps, shifts)
+        a = jnp.stack([div2_mod(s, half), div2_mod(d, half)], axis=2).reshape(rows, n)
         h //= 2
         t *= 2
     return a
 
 
 # --------------------------------------------------------------------------
-# kernels
+# kernels (shifts is a static closure arg; eps_ref is a dummy zero block
+# when shifts is None and the butterflies fall back to generic %)
 # --------------------------------------------------------------------------
 
 
-def _ntt_kernel(q_ref, fwd_ref, a_ref, o_ref):
+def _ntt_kernel(q_ref, eps_ref, fwd_ref, a_ref, o_ref, *, shifts):
     q = q_ref[0]
-    o_ref[...] = _fwd_stages(a_ref[...], fwd_ref[...], q)
+    eps = eps_ref[0] if shifts is not None else None
+    o_ref[...] = _fwd_stages(a_ref[...], fwd_ref[...], q, eps, shifts)
 
 
-def _intt_kernel(q_ref, half_ref, inv_ref, a_ref, o_ref):
+def _intt_kernel(q_ref, eps_ref, half_ref, inv_ref, a_ref, o_ref, *, shifts):
     q = q_ref[0]
+    eps = eps_ref[0] if shifts is not None else None
     half = half_ref[0]
-    o_ref[...] = _inv_stages(a_ref[...], inv_ref[...], q, half)
+    o_ref[...] = _inv_stages(a_ref[...], inv_ref[...], q, half, eps, shifts)
 
 
-def _fused_kernel(q_ref, half_ref, fwd_ref, inv_ref, a_ref, b_ref, o_ref):
+def _fused_kernel(
+    q_ref, eps_ref, half_ref, fwd_ref, inv_ref, a_ref, b_ref, o_ref, *, shifts
+):
     q = q_ref[0]
+    eps = eps_ref[0] if shifts is not None else None
     half = half_ref[0]
-    fa = _fwd_stages(a_ref[...], fwd_ref[...], q)
-    fb = _fwd_stages(b_ref[...], fwd_ref[...], q)
-    prod = (fa * fb) % q  # never leaves VMEM
-    o_ref[...] = _inv_stages(prod, inv_ref[...], q, half)
+    fa = _fwd_stages(a_ref[...], fwd_ref[...], q, eps, shifts)
+    fb = _fwd_stages(b_ref[...], fwd_ref[...], q, eps, shifts)
+    prod = mul_mod(fa, fb, q, eps, shifts)  # never leaves VMEM
+    o_ref[...] = _inv_stages(prod, inv_ref[...], q, half, eps, shifts)
 
 
 # --------------------------------------------------------------------------
@@ -119,42 +124,54 @@ def _pad_rows(x, row_blk):
     return x, rows
 
 
-@functools.partial(jax.jit, static_argnames=("row_blk", "interpret"))
-def ntt_channels_pallas(a, qs, fwd, *, row_blk: int = DEFAULT_ROWS, interpret: bool = True):
+def _eps_block(eps, qs, t):
+    """(t, 1) Barrett-eps block; zeros (same dtype as qs) when unused."""
+    if eps is None:
+        return jnp.zeros_like(qs).reshape(t, 1)
+    return eps.reshape(t, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("shifts", "row_blk", "interpret"))
+def ntt_channels_pallas(
+    a, qs, fwd, eps=None, *, shifts=None, row_blk: int = DEFAULT_ROWS, interpret: bool = True
+):
     """a: (t, rows, n) -> forward NTT per channel.  qs: (t,), fwd: (t, n)."""
     t, _, n = a.shape
     a, rows = _pad_rows(a, row_blk)
     scalar, table, data = _grid_specs(t, a.shape[1], n, row_blk)
     out = pl.pallas_call(
-        _ntt_kernel,
-        grid=(t, a.shape[1] // row_blk),
-        in_specs=[scalar, table, data],
-        out_specs=data,
-        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
-        interpret=interpret,
-    )(qs.reshape(t, 1), fwd, a)
-    return out[:, :rows]
-
-
-@functools.partial(jax.jit, static_argnames=("row_blk", "interpret"))
-def intt_channels_pallas(a, qs, half, inv, *, row_blk: int = DEFAULT_ROWS, interpret: bool = True):
-    t, _, n = a.shape
-    a, rows = _pad_rows(a, row_blk)
-    scalar, table, data = _grid_specs(t, a.shape[1], n, row_blk)
-    out = pl.pallas_call(
-        _intt_kernel,
+        functools.partial(_ntt_kernel, shifts=shifts),
         grid=(t, a.shape[1] // row_blk),
         in_specs=[scalar, scalar, table, data],
         out_specs=data,
         out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
         interpret=interpret,
-    )(qs.reshape(t, 1), half.reshape(t, 1), inv, a)
+    )(qs.reshape(t, 1), _eps_block(eps, qs, t), fwd, a)
     return out[:, :rows]
 
 
-@functools.partial(jax.jit, static_argnames=("row_blk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("shifts", "row_blk", "interpret"))
+def intt_channels_pallas(
+    a, qs, half, inv, eps=None, *, shifts=None, row_blk: int = DEFAULT_ROWS, interpret: bool = True
+):
+    t, _, n = a.shape
+    a, rows = _pad_rows(a, row_blk)
+    scalar, table, data = _grid_specs(t, a.shape[1], n, row_blk)
+    out = pl.pallas_call(
+        functools.partial(_intt_kernel, shifts=shifts),
+        grid=(t, a.shape[1] // row_blk),
+        in_specs=[scalar, scalar, scalar, table, data],
+        out_specs=data,
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=interpret,
+    )(qs.reshape(t, 1), _eps_block(eps, qs, t), half.reshape(t, 1), inv, a)
+    return out[:, :rows]
+
+
+@functools.partial(jax.jit, static_argnames=("shifts", "row_blk", "interpret"))
 def fused_polymul_pallas(
-    a, b, qs, half, fwd, inv, *, row_blk: int = DEFAULT_ROWS, interpret: bool = True
+    a, b, qs, half, fwd, inv, eps=None, *, shifts=None,
+    row_blk: int = DEFAULT_ROWS, interpret: bool = True,
 ):
     """(t, rows, n) x (t, rows, n) -> negacyclic products, fused cascade."""
     t, _, n = a.shape
@@ -162,11 +179,19 @@ def fused_polymul_pallas(
     b, _ = _pad_rows(b, row_blk)
     scalar, table, data = _grid_specs(t, a.shape[1], n, row_blk)
     out = pl.pallas_call(
-        _fused_kernel,
+        functools.partial(_fused_kernel, shifts=shifts),
         grid=(t, a.shape[1] // row_blk),
-        in_specs=[scalar, scalar, table, table, data, data],
+        in_specs=[scalar, scalar, scalar, table, table, data, data],
         out_specs=data,
         out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
         interpret=interpret,
-    )(qs.reshape(t, 1), half.reshape(t, 1), fwd, inv, a, b)
+    )(
+        qs.reshape(t, 1),
+        _eps_block(eps, qs, t),
+        half.reshape(t, 1),
+        fwd,
+        inv,
+        a,
+        b,
+    )
     return out[:, :rows]

@@ -1,82 +1,234 @@
-"""jit'd public wrappers for the Pallas kernels with a pure-jnp fallback.
+"""Backend-dispatch layer: ONE switch selects the datapath for the whole
+stack (``ParenttMultiplier``, the BFV layer, benchmarks, examples).
 
-`use_pallas=True` (default) runs the kernels in interpret mode on CPU and
-compiled mode on TPU; `use_pallas=False` routes to the ref oracles (used
-by the dry-run lowering, where interpret-mode python loops would bloat
-the HLO on the 512-device mesh).
+Backends
+--------
+* ``"jnp"``          — pure-jnp reference datapath (vmapped channel NTTs,
+  SAU/Barrett RNS pre/post).  Always available; the oracle the kernels
+  are validated against.
+* ``"pallas"``       — per-stage Pallas kernels: NTT(a), NTT(b), the
+  pointwise product and the iNTT are separate ``pallas_call``s, so the
+  NTT-domain product round-trips HBM between stages (the Fig 11(a)-style
+  baseline for the fusion win).
+* ``"pallas_fused"`` — the paper's contribution-1 datapath: the whole
+  NTT -> ⊙ -> iNTT cascade runs inside one kernel and the NTT-domain
+  product never leaves VMEM.
+
+The backend is threaded through :class:`repro.core.params.ParenttParams`
+(``make_params(..., backend=...)``) and may be overridden per call with
+the ``backend=`` keyword.  The legacy ``use_pallas=`` bool is kept as a
+deprecated alias (True -> the Pallas path, False -> ``"jnp"``).
+
+Pallas kernels run in interpret mode off-TPU and compiled mode on TPU.
+The ``"jnp"`` backend is also what the dry-run lowering uses on the
+512-device mesh, where interpret-mode python loops would bloat the HLO.
+
+Shape contracts (match :mod:`repro.core.rns` / :mod:`repro.core.ntt`;
+violations raise immediately so a backend mismatch fails loudly):
+
+* residues are ``(t, ..., n)`` — RNS channel leading, coefficients last;
+* segment arrays are ``(..., S)`` with ``S = plan.seg_count``;
+* limb arrays are ``(..., L)``.
+
+The Pallas kernels internally operate on flattened ``(t, rows, n)`` /
+``(rows, S)`` tiles; this layer folds/unfolds the batch dims, so callers
+may pass any leading shape (``ParenttMultiplier.preprocess`` passes
+``(..., n, S)``).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import modmath
 from repro.core import ntt as ntt_mod
-from repro.core.params import ParenttParams
+from repro.core import rns as rns_mod
+from repro.core.params import BACKENDS, ParenttParams, validate_backend
 from repro.kernels import crt as crt_kernels
 from repro.kernels import ntt as ntt_kernels
-from repro.kernels import ref
+
+__all__ = [
+    "BACKENDS",
+    "resolve_backend",
+    "ntt_forward",
+    "ntt_inverse",
+    "negacyclic_mul",
+    "rns_decompose",
+    "rns_compose",
+]
 
 
 def _is_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def ntt_forward(a, params: ParenttParams, *, use_pallas: bool = True):
-    """a: (t, rows, n) -> NTT per RNS channel."""
-    ct = params.tables
-    if use_pallas:
-        return ntt_kernels.ntt_channels_pallas(
-            a, jnp.asarray(ct.qs), jnp.asarray(ct.fwd), interpret=not _is_tpu()
+def resolve_backend(
+    params: ParenttParams | None = None,
+    backend: str | None = None,
+    use_pallas: bool | None = None,
+) -> str:
+    """Pick the datapath: explicit ``backend`` > legacy ``use_pallas`` >
+    ``params.backend`` > ``"jnp"``."""
+    if backend is None and use_pallas is not None:
+        backend = "pallas_fused" if use_pallas else "jnp"
+    if backend is None:
+        backend = getattr(params, "backend", None) or "jnp"
+    return validate_backend(backend)
+
+
+# --------------------------------------------------------------------------
+# shape contracts
+# --------------------------------------------------------------------------
+
+
+def _check_residues(x, params: ParenttParams, fn: str):
+    if x.ndim < 2 or x.shape[0] != params.t or x.shape[-1] != params.n:
+        raise ValueError(
+            f"{fn}: expected residues (t={params.t}, ..., n={params.n}), "
+            f"got shape {tuple(x.shape)}"
         )
-    return ntt_mod.ntt_channels(a, ct)
 
 
-def ntt_inverse(a, params: ParenttParams, *, use_pallas: bool = True):
-    ct = params.tables
-    if use_pallas:
-        return ntt_kernels.intt_channels_pallas(
-            a,
-            jnp.asarray(ct.qs),
-            jnp.asarray(ct.half),
-            jnp.asarray(ct.inv),
-            interpret=not _is_tpu(),
+def _check_segments(z, params: ParenttParams, fn: str):
+    S = params.plan.seg_count
+    if z.ndim < 1 or z.shape[-1] != S:
+        raise ValueError(
+            f"{fn}: expected base-2^{params.v} segments (..., S={S}), "
+            f"got shape {tuple(z.shape)}"
         )
-    return ntt_mod.intt_channels(a, ct)
 
 
-def negacyclic_mul(a, b, params: ParenttParams, *, use_pallas: bool = True):
-    """(t, rows, n) x (t, rows, n): the fused no-shuffle cascade."""
-    ct = params.tables
-    if use_pallas:
-        return ntt_kernels.fused_polymul_pallas(
-            a,
-            b,
-            jnp.asarray(ct.qs),
-            jnp.asarray(ct.half),
-            jnp.asarray(ct.fwd),
-            jnp.asarray(ct.inv),
-            interpret=not _is_tpu(),
+def _require_tables(params: ParenttParams, fn: str) -> ntt_mod.ChannelTables:
+    if params.tables is None:
+        raise ValueError(
+            f"{fn}: params (n={params.n}, t={params.t}, v={params.v}) have no "
+            "int64-safe NTT tables (v > 31); use polymul.oracle_multiply or "
+            "core.wide.WideParenttMultiplier"
         )
-    return ntt_mod.negacyclic_mul_channels(a, b, ct)
+    return params.tables
 
 
-def rns_decompose(z, params: ParenttParams, *, use_pallas: bool = True):
-    """z: (rows, S) -> (t, rows)."""
-    if use_pallas:
-        return crt_kernels.decompose_pallas(
-            z, plan=params.plan, interpret=not _is_tpu()
+def _fold_rows(x):
+    """(t, ..., n) -> ((t, rows, n), unfold)"""
+    t, n = x.shape[0], x.shape[-1]
+    lead = x.shape[1:-1]
+    return x.reshape(t, -1, n), lead
+
+
+# --------------------------------------------------------------------------
+# NTT / cascade dispatch
+# --------------------------------------------------------------------------
+
+
+def ntt_forward(a, params: ParenttParams, *, backend: str | None = None,
+                use_pallas: bool | None = None):
+    """a: (t, ..., n) -> forward NTT per RNS channel."""
+    backend = resolve_backend(params, backend, use_pallas)
+    ct = _require_tables(params, "ntt_forward")
+    _check_residues(a, params, "ntt_forward")
+    if backend == "jnp":
+        return ntt_mod.ntt_channels(a, ct)
+    a3, lead = _fold_rows(a)
+    out = ntt_kernels.ntt_channels_pallas(
+        a3, ct.qs_d, ct.fwd_d, ct.mul_eps_d,
+        shifts=ct.mul_shifts, interpret=not _is_tpu(),
+    )
+    return out.reshape(a.shape[:1] + lead + a.shape[-1:])
+
+
+def ntt_inverse(a, params: ParenttParams, *, backend: str | None = None,
+                use_pallas: bool | None = None):
+    """a: (t, ..., n) bit-reversed spectra -> natural-order coefficients."""
+    backend = resolve_backend(params, backend, use_pallas)
+    ct = _require_tables(params, "ntt_inverse")
+    _check_residues(a, params, "ntt_inverse")
+    if backend == "jnp":
+        return ntt_mod.intt_channels(a, ct)
+    a3, lead = _fold_rows(a)
+    out = ntt_kernels.intt_channels_pallas(
+        a3, ct.qs_d, ct.half_d, ct.inv_d, ct.mul_eps_d,
+        shifts=ct.mul_shifts, interpret=not _is_tpu(),
+    )
+    return out.reshape(a.shape[:1] + lead + a.shape[-1:])
+
+
+def negacyclic_mul(a, b, params: ParenttParams, *, backend: str | None = None,
+                   use_pallas: bool | None = None):
+    """(t, ..., n) x (t, ..., n) -> negacyclic products per RNS channel
+    (the no-shuffle NTT -> ⊙ -> iNTT cascade)."""
+    backend = resolve_backend(params, backend, use_pallas)
+    ct = _require_tables(params, "negacyclic_mul")
+    _check_residues(a, params, "negacyclic_mul")
+    _check_residues(b, params, "negacyclic_mul")
+    if a.shape != b.shape:
+        raise ValueError(
+            f"negacyclic_mul: operand shapes differ: {tuple(a.shape)} vs "
+            f"{tuple(b.shape)}"
         )
-    from repro.core import rns as rns_mod
-
-    return rns_mod.decompose_sau(z, params.plan)
-
-
-def rns_compose(residues, params: ParenttParams, *, use_pallas: bool = True):
-    """(t, rows) -> (rows, L)."""
-    if use_pallas:
-        return crt_kernels.compose_pallas(
-            residues, plan=params.plan, interpret=not _is_tpu()
+    if backend == "jnp":
+        return ntt_mod.negacyclic_mul_channels(a, b, ct)
+    a3, lead = _fold_rows(a)
+    b3, _ = _fold_rows(b)
+    interpret = not _is_tpu()
+    if backend == "pallas_fused":
+        out = ntt_kernels.fused_polymul_pallas(
+            a3, b3, ct.qs_d, ct.half_d, ct.fwd_d, ct.inv_d, ct.mul_eps_d,
+            shifts=ct.mul_shifts, interpret=interpret,
         )
-    from repro.core import rns as rns_mod
+    else:  # "pallas": per-stage kernels, product round-trips HBM
+        fa = ntt_kernels.ntt_channels_pallas(
+            a3, ct.qs_d, ct.fwd_d, ct.mul_eps_d,
+            shifts=ct.mul_shifts, interpret=interpret,
+        )
+        fb = ntt_kernels.ntt_channels_pallas(
+            b3, ct.qs_d, ct.fwd_d, ct.mul_eps_d,
+            shifts=ct.mul_shifts, interpret=interpret,
+        )
+        q_b = ct.qs_d[:, None, None]
+        eps_b = None if ct.mul_eps is None else ct.mul_eps_d[:, None, None]
+        prod = modmath.mul_mod(fa, fb, q_b, eps_b, ct.mul_shifts)
+        out = ntt_kernels.intt_channels_pallas(
+            prod, ct.qs_d, ct.half_d, ct.inv_d, ct.mul_eps_d,
+            shifts=ct.mul_shifts, interpret=interpret,
+        )
+    return out.reshape(a.shape[:1] + lead + a.shape[-1:])
 
-    return rns_mod.compose(residues, params.plan)
+
+# --------------------------------------------------------------------------
+# RNS pre/post dispatch
+# --------------------------------------------------------------------------
+
+
+def rns_decompose(z, params: ParenttParams, *, backend: str | None = None,
+                  use_pallas: bool | None = None, use_sau: bool = True):
+    """z: (..., S) base-2^v segments -> residues (t, ...)."""
+    backend = resolve_backend(params, backend, use_pallas)
+    _check_segments(z, params, "rns_decompose")
+    if backend == "jnp":
+        fn = rns_mod.decompose_sau if use_sau else rns_mod.decompose
+        return fn(z, params.plan)
+    lead = z.shape[:-1]
+    z2 = z.reshape(-1, z.shape[-1])
+    out = crt_kernels.decompose_pallas(
+        z2, plan=params.plan, interpret=not _is_tpu()
+    )  # (t, rows)
+    return out.reshape((params.t,) + lead)
+
+
+def rns_compose(residues, params: ParenttParams, *, backend: str | None = None,
+                use_pallas: bool | None = None):
+    """residues: (t, ...) -> (..., L) base-2^w limbs of the composed value."""
+    backend = resolve_backend(params, backend, use_pallas)
+    if residues.ndim < 1 or residues.shape[0] != params.t:
+        raise ValueError(
+            f"rns_compose: expected residues (t={params.t}, ...), got shape "
+            f"{tuple(residues.shape)}"
+        )
+    if backend == "jnp":
+        return rns_mod.compose(residues, params.plan)
+    lead = residues.shape[1:]
+    r2 = residues.reshape(params.t, -1)
+    out = crt_kernels.compose_pallas(
+        r2, plan=params.plan, interpret=not _is_tpu()
+    )  # (rows, L)
+    return out.reshape(lead + (params.plan.L,))

@@ -24,7 +24,7 @@ def fused_polymul_ref(a, b, fwd, inv, q, half):
     """NTT(a) ⊙ NTT(b) -> iNTT, one modulus."""
     fa = ntt_mod.ntt_raw(a, fwd, q)
     fb = ntt_mod.ntt_raw(b, fwd, q)
-    return ntt_mod.intt_raw((fa * fb) % q, inv, q, half)
+    return ntt_mod.intt_raw(ntt_mod.mul_mod(fa, fb, q), inv, q, half)
 
 
 def decompose_channel_ref(z, beta_pows_i, qi):

@@ -19,9 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import ntt as ntt_mod
-from repro.core import rns as rns_mod
 from repro.core.params import make_params
+from repro.kernels import ops as ops_mod
 from repro.launch import analysis, hlo_analyzer
 from repro.launch.mesh import make_production_mesh
 
@@ -32,11 +31,14 @@ ARTIFACTS = os.path.normpath(
 
 def polymul_step(za, zb, params):
     """segments (B, n, S) x2 -> product limbs (B, n, L).  The full paper
-    pipeline: decompose -> per-channel no-shuffle NTT cascade -> Eq 10."""
-    ra = rns_mod.decompose(za, params.plan)  # (t, B, n)
-    rb = rns_mod.decompose(zb, params.plan)
-    rp = ntt_mod.negacyclic_mul_channels(ra, rb, params.tables)
-    return rns_mod.compose(rp, params.plan)
+    pipeline: decompose -> per-channel no-shuffle NTT cascade -> Eq 10.
+    Routed through the backend-dispatch layer, pinned to the pure-jnp
+    datapath: interpret-mode Pallas loops would bloat the lowered HLO on
+    the 512-device mesh."""
+    ra = ops_mod.rns_decompose(za, params, backend="jnp", use_sau=False)
+    rb = ops_mod.rns_decompose(zb, params, backend="jnp", use_sau=False)
+    rp = ops_mod.negacyclic_mul(ra, rb, params, backend="jnp")
+    return ops_mod.rns_compose(rp, params, backend="jnp")
 
 
 def run(mesh_kind: str, batch: int, out_dir: str):

@@ -57,7 +57,10 @@ def moe_scatter(slot, xk, n_rows: int):
     mesh = getattr(pol, "mesh", None) if pol is not None else None
     if mesh is None:
         return scatter_rows(slot, xk)
-    from jax import shard_map
+    try:
+        from jax import shard_map
+    except ImportError:  # jax < 0.5: pre-promotion location
+        from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     ba = pol.batch_axes
@@ -86,7 +89,10 @@ def moe_gather(eout, slot):
     mesh = getattr(pol, "mesh", None) if pol is not None else None
     if mesh is None:
         return gather_rows(eout, slot)
-    from jax import shard_map
+    try:
+        from jax import shard_map
+    except ImportError:  # jax < 0.5: pre-promotion location
+        from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     ba = pol.batch_axes

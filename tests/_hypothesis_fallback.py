@@ -1,0 +1,52 @@
+"""Degrade-to-skip stand-ins for ``hypothesis`` (see pyproject `test` extra).
+
+The property-test modules guard their import (the tier-1 suite previously
+died at collection with ``ModuleNotFoundError: hypothesis``).  When the
+real package is absent, these stubs keep every non-property test running
+and turn each ``@given`` test into an individual skip instead of a
+module-level collection error.
+"""
+from __future__ import annotations
+
+import pytest
+
+
+class _AnyStrategy:
+    """Accepts any ``st.<name>(...)`` call chain; never generates values."""
+
+    def __getattr__(self, name):
+        def make(*args, **kwargs):
+            return self
+
+        return make
+
+    def __call__(self, *args, **kwargs):
+        return self
+
+    def map(self, fn):
+        return self
+
+    def filter(self, fn):
+        return self
+
+
+st = _AnyStrategy()
+
+
+def given(*_args, **_kwargs):
+    def deco(fn):
+        def skipped(*args, **kwargs):
+            pytest.skip("hypothesis not installed")
+
+        skipped.__name__ = getattr(fn, "__name__", "skipped_property_test")
+        skipped.__doc__ = getattr(fn, "__doc__", None)
+        return skipped
+
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    def deco(fn):
+        return fn
+
+    return deco

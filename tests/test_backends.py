@@ -1,0 +1,135 @@
+"""Backend-dispatch layer: the one switch that selects the datapath for
+the whole stack (jnp / pallas / pallas_fused), its shape contracts, and
+the regression gate that keeps the fused Pallas cascade bit-exact
+against the Python bigint oracles."""
+import os
+import random
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import params as params_mod
+from repro.core import polymul as pm
+from repro.kernels import ops
+
+PRESETS = [(3, 30, 64), (6, 30, 256)]
+
+
+def _rand_ints(p, seed):
+    rng = random.Random(seed)
+    a = [rng.randrange(p.q) for _ in range(p.n)]
+    b = [rng.randrange(p.q) for _ in range(p.n)]
+    return a, b
+
+
+class TestFusedBitExact:
+    """The paper's headline datapath must match the exact oracles."""
+
+    @pytest.mark.parametrize("t,v,n", PRESETS)
+    def test_pallas_fused_vs_oracles(self, t, v, n):
+        p = params_mod.make_params(n=n, t=t, v=v)
+        a, b = _rand_ints(p, seed=n)
+        got = pm.ParenttMultiplier(p, backend="pallas_fused").multiply_ints(a, b)
+        assert got == pm.oracle_multiply(a, b, p)
+        assert got == pm.schoolbook_negacyclic(a, b, p.q)
+
+    @pytest.mark.parametrize("t,v,n", PRESETS)
+    def test_backends_agree(self, t, v, n):
+        p = params_mod.make_params(n=n, t=t, v=v)
+        a, b = _rand_ints(p, seed=7 * n)
+        outs = [
+            pm.ParenttMultiplier(p, backend=bk).multiply_ints(a, b)
+            for bk in ops.BACKENDS
+        ]
+        assert outs[0] == outs[1] == outs[2]
+
+
+class TestDispatch:
+    def test_params_carry_backend(self):
+        p = params_mod.make_params(n=64, t=3, v=30, backend="pallas_fused")
+        assert p.backend == "pallas_fused"
+        assert pm.ParenttMultiplier(p).backend == "pallas_fused"
+        # backend variants share one table/plan object (single H2D upload)
+        pj = params_mod.make_params(n=64, t=3, v=30)
+        assert p.tables is pj.tables and p.plan is pj.plan
+
+    def test_unknown_backend_rejected(self):
+        p = params_mod.make_params(n=64, t=3, v=30)
+        with pytest.raises(ValueError, match="unknown backend"):
+            pm.ParenttMultiplier(p, backend="cuda")
+        with pytest.raises(ValueError, match="unknown backend"):
+            params_mod.make_params(n=64, t=3, v=30, backend="nope")
+
+    def test_v45_error_names_params_and_oracle(self):
+        p45 = params_mod.make_params(n=64, t=4, v=45)
+        with pytest.raises(ValueError) as ei:
+            pm.ParenttMultiplier(p45)
+        msg = str(ei.value)
+        assert "v=45" in msg and "t=4" in msg and "n=64" in msg
+        assert "oracle_multiply" in msg and "WideParenttMultiplier" in msg
+
+    def test_residue_shape_mismatch_fails_loudly(self):
+        p = params_mod.make_params(n=64, t=3, v=30)
+        good = jnp.zeros((3, 2, 64), dtype=jnp.int64)
+        bad_t = jnp.zeros((4, 2, 64), dtype=jnp.int64)
+        bad_n = jnp.zeros((3, 2, 32), dtype=jnp.int64)
+        with pytest.raises(ValueError, match="expected residues"):
+            ops.negacyclic_mul(bad_t, bad_t, p)
+        with pytest.raises(ValueError, match="expected residues"):
+            ops.ntt_forward(bad_n, p)
+        with pytest.raises(ValueError, match="shapes differ"):
+            ops.negacyclic_mul(good, jnp.zeros((3, 3, 64), dtype=jnp.int64), p)
+
+    def test_segment_shape_mismatch_fails_loudly(self):
+        p = params_mod.make_params(n=64, t=3, v=30)
+        with pytest.raises(ValueError, match="segments"):
+            ops.rns_decompose(jnp.zeros((5, p.plan.seg_count + 1), dtype=jnp.int64), p)
+        with pytest.raises(ValueError, match="rns_compose"):
+            ops.rns_compose(jnp.zeros((p.t + 1, 5), dtype=jnp.int64), p)
+
+    @pytest.mark.parametrize("backend", ["pallas", "pallas_fused"])
+    def test_arbitrary_leading_batch_dims(self, backend):
+        """(t, B1, B2, n) residues work on the kernel backends (which fold
+        to (t, rows, n) tiles internally) and match jnp exactly."""
+        p = params_mod.make_params(n=64, t=3, v=30)
+        rng = np.random.default_rng(3)
+        shape = (2, 3, 64)
+        a = jnp.asarray(
+            np.stack([rng.integers(0, int(q), size=shape) for q in p.plan.qs])
+        )
+        b = jnp.asarray(
+            np.stack([rng.integers(0, int(q), size=shape) for q in p.plan.qs])
+        )
+        got = ops.negacyclic_mul(a, b, p, backend=backend)
+        want = ops.negacyclic_mul(a, b, p, backend="jnp")
+        assert got.shape == a.shape
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestCollection:
+    @pytest.mark.slow  # subprocess full-suite collection (~30 s); the CI
+    # fast lane runs the same check as a dedicated workflow step
+    def test_collect_only_is_clean(self):
+        """Collection errors can never silently return: `pytest
+        --collect-only` over the whole suite must exit 0."""
+        repo = Path(__file__).resolve().parent.parent
+        env = dict(os.environ)
+        src = str(repo / "src")
+        env["PYTHONPATH"] = src + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+        )
+        proc = subprocess.run(
+            [sys.executable, "-m", "pytest", "--collect-only", "-q", "tests"],
+            cwd=repo,
+            env=env,
+            capture_output=True,
+            text=True,
+            timeout=300,
+        )
+        # pytest exits 2 on collection errors, 0 when everything collects
+        assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-2000:]

@@ -12,7 +12,15 @@ Q = 0x3FDE0001  # 30-bit special prime, 2*4096 | q-1
 
 
 class TestFourStep:
-    @pytest.mark.parametrize("n,n1", [(64, 8), (256, 16), (1024, 32), (4096, 64)])
+    @pytest.mark.parametrize(
+        "n,n1",
+        [
+            (64, 8),
+            (256, 16),
+            pytest.param(1024, 32, marks=pytest.mark.slow),
+            pytest.param(4096, 64, marks=pytest.mark.slow),
+        ],
+    )
     def test_negacyclic_mul_matches_schoolbook(self, n, n1):
         t = dntt.make_fourstep_tables(Q, n, n1)
         rng = np.random.default_rng(n)
@@ -22,7 +30,10 @@ class TestFourStep:
         want = pm.schoolbook_negacyclic(a.tolist(), b.tolist(), Q)
         assert np.asarray(got).tolist() == want
 
-    @pytest.mark.parametrize("n1", [4, 16, 64, 256])
+    @pytest.mark.parametrize(
+        "n1",
+        [pytest.param(4, marks=pytest.mark.slow), 16, 64, 256],
+    )
     def test_factorization_invariance(self, n1):
         n = 1024
         rng = np.random.default_rng(n1)

@@ -40,6 +40,7 @@ class TestNttKernels:
         want = ops.ntt_inverse(a, p, use_pallas=False)
         assert np.array_equal(np.asarray(got), np.asarray(want))
 
+    @pytest.mark.slow  # interpret-mode Pallas sweep over presets x rows
     @pytest.mark.parametrize("rows", [1, 5, 8])
     def test_fused_matches_ref_and_schoolbook(self, p, rows):
         a = _rand_res(p, rows, 20 + rows)
