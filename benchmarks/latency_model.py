@@ -15,7 +15,8 @@ from repro.core import schedule as sched
 
 
 def _timeit(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    warm = fn(*args)
+    warm[0].block_until_ready() if isinstance(warm, tuple) else jax.block_until_ready(warm)
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))

@@ -9,7 +9,6 @@ import jax.numpy as jnp
 
 from repro.configs import registry
 from repro.configs.base import RunConfig
-from repro.models import model as M
 from repro.train import train_step as ts_mod
 
 

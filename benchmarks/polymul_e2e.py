@@ -10,10 +10,21 @@ re-derived from the cycle model.
 
 Note on absolute numbers: off-TPU the Pallas kernels run in *interpret*
 mode, so their wall-clock here measures the emulation, not the silicon;
-the comparison that matters off-TPU is the HBM-traffic model at the
-bottom (the fused cascade's win) plus bit-exactness of both paths.
+the comparison that matters off-TPU is the HBM round-trip model (bytes
+crossing kernel boundaries per backend, ``ops.hbm_traffic_model``) plus
+bit-exactness of every kernel path.
+
+``python -m benchmarks.polymul_e2e --ci-smoke --out BENCH_ci.json`` runs
+the small-preset interpret-mode smoke used by the ``bench-smoke`` CI
+job: it records wall-clock + modeled HBM bytes for all four backends,
+checks the fused-e2e path bit-exact against the bigint oracle, and
+exits non-zero if the fused-e2e path moves more HBM bytes than the
+three-kernel path.
 """
+import argparse
+import json
 import random
+import sys
 import time
 
 import numpy as np
@@ -24,6 +35,7 @@ import jax.numpy as jnp
 from repro.core import params as params_mod
 from repro.core import polymul as pm
 from repro.core import schedule as sched
+from repro.kernels import ops as ops_mod
 
 FREQ = 240e6  # paper's post-pipelining clock
 
@@ -79,6 +91,44 @@ def run():
             "pallas_fused bit-exact vs oracle_multiply + schoolbook (n=256, t=6, v=30)",
         )
     )
+    e2e_ints = pm.ParenttMultiplier(
+        pchk, backend="pallas_fused_e2e"
+    ).multiply_ints(ca, cb)
+    if e2e_ints != oracle_ints:
+        raise AssertionError("pallas_fused_e2e != bigint oracle at n=256/t=6/v=30")
+    out.append(
+        (
+            "fused_e2e_vs_bigint_oracle_n256",
+            0.0,
+            "pallas_fused_e2e bit-exact vs oracle_multiply (n=256, t=6, v=30)",
+        )
+    )
+    # HBM round-trip delta across all four backends (n=256, t=6, batch=4):
+    # wall-clock through the public dispatch layer + the bytes-moved model
+    # (what the paper's feed-forward datapath eliminates; exact by
+    # construction of the dispatch layer, see ops.hbm_traffic_model).
+    rng_s = np.random.default_rng(1)
+    bs = 4
+    zs = [
+        jnp.asarray(
+            rng_s.integers(0, 1 << 30, size=(bs, pchk.n, pchk.plan.seg_count))
+        )
+        for _ in range(2)
+    ]
+    base = ops_mod.hbm_traffic_model(pchk, rows=bs, backend="pallas")
+    for bk in ops_mod.BACKENDS:
+        us_bk = _time_backend(pchk, bk, zs[0], zs[1])
+        m = ops_mod.hbm_traffic_model(pchk, rows=bs, backend=bk)
+        out.append(
+            (
+                f"hbm_roundtrips_n256_{bk}",
+                us_bk,
+                f"hbm_bytes={m['hbm_bytes']} ({m['kernel_launches']} kernel "
+                f"launches, {m['intermediate_bytes']} intermediate) "
+                f"vs 3-kernel path {base['hbm_bytes']}: "
+                f"{base['hbm_bytes'] / m['hbm_bytes']:.2f}x less traffic",
+            )
+        )
     # measured: full pipeline (t=6, v=30, n=4096), both datapaths through
     # the public backend-dispatch layer
     p = params_mod.make_params(n=4096, t=6, v=30)
@@ -156,3 +206,104 @@ def run():
         )
     )
     return out
+
+
+# --------------------------------------------------------------------------
+# CI smoke (the `bench-smoke` job): small preset, interpret mode
+# --------------------------------------------------------------------------
+
+
+def run_ci_smoke(out_path: str, n: int = 64, t: int = 3, v: int = 30,
+                 batch: int = 2) -> dict:
+    """Benchmark the small preset across all four backends, write the
+    result JSON, and enforce the fusion invariant: the fused-e2e path
+    must move FEWER HBM bytes than the three-kernel (``pallas``) path
+    and be bit-exact against the Python bigint oracle."""
+    p = params_mod.make_params(n=n, t=t, v=v)
+    rng = random.Random(7)
+    a = [rng.randrange(p.q) for _ in range(p.n)]
+    b = [rng.randrange(p.q) for _ in range(p.n)]
+    oracle = pm.oracle_multiply(a, b, p)
+    rng_np = np.random.default_rng(7)
+    za = jnp.asarray(
+        rng_np.integers(0, 1 << v, size=(batch, n, p.plan.seg_count))
+    )
+    zb = jnp.asarray(
+        rng_np.integers(0, 1 << v, size=(batch, n, p.plan.seg_count))
+    )
+    rec = {
+        "preset": {"n": n, "t": t, "v": v, "batch": batch},
+        "mode": "compiled" if jax.default_backend() == "tpu" else "interpret",
+        "backends": {},
+    }
+    for bk in ops_mod.BACKENDS:
+        us = _time_backend(p, bk, za, zb, iters=1)
+        model = ops_mod.hbm_traffic_model(p, rows=batch, backend=bk)
+        exact = (
+            pm.ParenttMultiplier(p, backend=bk).multiply_ints(a, b) == oracle
+        )
+        rec["backends"][bk] = {
+            "us_per_poly": us,
+            "hbm_bytes": model["hbm_bytes"],
+            "kernel_launches": model["kernel_launches"],
+            # structural ground truth: pallas_call eqns in the traced
+            # computation; must equal the model's claim or the gate fails
+            "traced_pallas_calls": ops_mod.count_pallas_launches(
+                p, backend=bk, rows=batch
+            ),
+            "intermediate_bytes": model["intermediate_bytes"],
+            "bit_exact_vs_oracle": exact,
+        }
+    fused = rec["backends"]["pallas_fused_e2e"]
+    three = rec["backends"]["pallas"]
+    rec["fused_e2e_hbm_reduction_vs_pallas"] = (
+        three["hbm_bytes"] / fused["hbm_bytes"]
+    )
+    failures = []
+    if fused["hbm_bytes"] >= three["hbm_bytes"]:
+        failures.append(
+            f"fused-e2e moves {fused['hbm_bytes']} HBM bytes but the "
+            f"three-kernel path moves {three['hbm_bytes']}: fusion regressed"
+        )
+    for bk, r in rec["backends"].items():
+        if r["traced_pallas_calls"] != r["kernel_launches"]:
+            failures.append(
+                f"backend {bk}: traffic model claims "
+                f"{r['kernel_launches']} kernel launches but the traced "
+                f"computation contains {r['traced_pallas_calls']} "
+                f"pallas_calls — the model no longer matches the dispatch"
+            )
+        if not r["bit_exact_vs_oracle"]:
+            failures.append(f"backend {bk} is not bit-exact vs the bigint oracle")
+    if fused["traced_pallas_calls"] != 1:
+        failures.append(
+            f"fused-e2e path traces to {fused['traced_pallas_calls']} "
+            "pallas_calls, expected exactly 1: the e2e fusion was undone"
+        )
+    rec["failures"] = failures
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps(rec, indent=1))
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ci-smoke", action="store_true",
+                    help="small-preset smoke for the bench-smoke CI job")
+    ap.add_argument("--out", default="BENCH_ci.json",
+                    help="JSON output path for --ci-smoke")
+    args = ap.parse_args(argv)
+    if args.ci_smoke:
+        rec = run_ci_smoke(args.out)
+        for msg in rec["failures"]:
+            print(f"[FAIL] {msg}", file=sys.stderr)
+        return 1 if rec["failures"] else 0
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f'{name},{us:.1f},"{derived}"')
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -31,7 +31,8 @@ def run():
     out = []
     for d in load("single"):
         if d.get("status") != "ok":
-            out.append((f"roofline_{d['arch']}_{d['shape']}", 0.0, f"ERROR {d.get('error','')[:60]}"))
+            name = f"roofline_{d['arch']}_{d['shape']}"
+            out.append((name, 0.0, f"ERROR {d.get('error', '')[:60]}"))
             continue
         r = d["roofline"]
         out.append(

@@ -13,7 +13,6 @@ import jax.numpy as jnp
 
 from repro.configs import registry
 from repro.configs.base import RunConfig
-from repro.models import model as M
 from repro.train import aggregation as agg_mod
 from repro.train import data as data_mod
 from repro.train import optimizer as opt_mod

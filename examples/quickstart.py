@@ -21,10 +21,13 @@ from repro.core import polymul as pm
 def main():
     # --- 1. correctness (small n so the O(n^2) oracle is fast) -----------
     # One switch selects the datapath for the whole pipeline:
-    #   "jnp"          pure-jnp reference (always available)
-    #   "pallas"       per-stage Pallas kernels (product round-trips HBM)
-    #   "pallas_fused" the paper's fused NTT -> ⊙ -> iNTT cascade, one
-    #                  kernel, NTT-domain product never leaves VMEM
+    #   "jnp"              pure-jnp reference (always available)
+    #   "pallas"           per-stage Pallas kernels (product round-trips HBM)
+    #   "pallas_fused"     the paper's fused NTT -> ⊙ -> iNTT cascade, one
+    #                      kernel, NTT-domain product never leaves VMEM
+    #   "pallas_fused_e2e" the whole decompose -> cascade -> compose
+    #                      pipeline in ONE kernel: residues never touch
+    #                      HBM, only segments in / product limbs out
     p = params_mod.make_params(n=256, t=3, v=30)
     rng = random.Random(0)
     a = [rng.randrange(p.q) for _ in range(p.n)]

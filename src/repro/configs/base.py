@@ -8,7 +8,6 @@ CPU smoke tests.  ``RunConfig`` carries the execution-level knobs
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

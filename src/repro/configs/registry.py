@@ -15,7 +15,7 @@ from repro.configs import (
     yi_6b,
     zamba2_2p7b,
 )
-from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.configs.base import SHAPES, ModelConfig
 
 ARCHS: dict[str, ModelConfig] = {
     c.name: c

@@ -15,6 +15,13 @@ with relinearization requires the BFV scaling step; a bigint reference
 implementation lives in :mod:`repro.core.bfv_ref` (host-side, tested) —
 matching paper scope, which cites HPS [33] for the full RNS variant.
 
+``make_context(..., backend=...)`` threads the datapath switch of
+:mod:`repro.kernels.ops` through every homomorphic product.  Because the
+BFV layer works on residue-domain tensors (it never re-enters segment
+form between ops), ``backend="pallas_fused_e2e"`` degrades here to the
+fused cascade for each product — the end-to-end single-kernel path
+serves the segments->limbs pipeline of :class:`ParenttMultiplier`.
+
 SECURITY NOTE: parameters here are sized for systems evaluation, not for
 a production 128-bit security level (that needs the full error analysis
 of an audited library).

@@ -97,6 +97,26 @@ def mul_barrett_constants(qs) -> tuple[np.ndarray, tuple[int, int]] | tuple[None
     return eps, (b - 1, b + 1)
 
 
+def channel_mul_constants(qs):
+    """Static per-channel ``(qi, half, eps)`` triples plus the shared
+    shift pair, as plain python ints.
+
+    This is the scalar layout kernels that specialize per channel bake
+    into their closures (one circuit per RNS channel, paper-style): the
+    fused e2e kernel unrolls its channel loop over these, so no scalar
+    SMEM blocks are needed.  ``eps`` entries are None outside the
+    63-bit-safe Barrett envelope (the butterflies then fall back to
+    generic ``%``).
+    """
+    eps, shifts = mul_barrett_constants(qs)
+    qs = np.atleast_1d(np.asarray(qs, dtype=np.int64))
+    triples = tuple(
+        (int(q), (int(q) + 1) // 2, None if eps is None else int(eps[i]))
+        for i, q in enumerate(qs)
+    )
+    return triples, shifts
+
+
 def mul_mod(x, y, q, eps=None, shifts: tuple[int, int] | None = None):
     """(x * y) mod q for x, y in [0, q).
 

@@ -16,9 +16,12 @@ from repro.core import rns as rns_mod
 
 
 # Datapath selection for the whole stack (see repro.kernels.ops, which
-# dispatches on this): pure-jnp reference, per-stage Pallas kernels, or
-# the fused single-kernel NTT -> ⊙ -> iNTT cascade (paper contribution 1).
-BACKENDS = ("jnp", "pallas", "pallas_fused")
+# dispatches on this): pure-jnp reference, per-stage Pallas kernels, the
+# fused single-kernel NTT -> ⊙ -> iNTT cascade (paper contribution 1), or
+# the fully fused decompose -> cascade -> compose end-to-end kernel (the
+# paper's complete feed-forward datapath, Fig 10 — residues never touch
+# HBM).
+BACKENDS = ("jnp", "pallas", "pallas_fused", "pallas_fused_e2e")
 
 
 def validate_backend(backend: str) -> str:

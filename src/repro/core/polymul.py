@@ -83,9 +83,12 @@ class ParenttMultiplier:
 
     ``backend`` selects the datapath for all three steps (see
     :mod:`repro.kernels.ops`): ``"jnp"`` (pure-jnp reference),
-    ``"pallas"`` (per-stage kernels) or ``"pallas_fused"`` (the paper's
-    single-kernel NTT -> ⊙ -> iNTT cascade).  ``None`` defers to
-    ``params.backend``.
+    ``"pallas"`` (per-stage kernels), ``"pallas_fused"`` (the paper's
+    single-kernel NTT -> ⊙ -> iNTT cascade) or ``"pallas_fused_e2e"``
+    (the full decompose -> cascade -> compose pipeline in ONE kernel —
+    under it, ``__call__`` fuses end to end while the three stage
+    methods degrade to the closest per-stage kernels).  ``None`` defers
+    to ``params.backend``.
     """
 
     def __init__(
@@ -128,11 +131,15 @@ class ParenttMultiplier:
     # -- full pipeline ----------------------------------------------------
     @functools.partial(jax.jit, static_argnums=0)
     def __call__(self, za: jax.Array, zb: jax.Array) -> jax.Array:
-        """za, zb: (..., n, S) segment arrays -> (..., n, L) limb array."""
-        ra = self.preprocess(za)
-        rb = self.preprocess(zb)
-        rp = self.residue_mul(ra, rb)
-        return self.postprocess(rp)
+        """za, zb: (..., n, S) segment arrays -> (..., n, L) limb array.
+
+        Routed through :func:`repro.kernels.ops.fused_polymul_e2e`: on
+        ``backend="pallas_fused_e2e"`` the whole pipeline is one
+        pallas_call (residues never touch HBM); otherwise it is the
+        preprocess/residue_mul/postprocess composition."""
+        return ops_mod.fused_polymul_e2e(
+            za, zb, self.params, backend=self.backend, use_sau=self.use_sau
+        )
 
     # -- host convenience ---------------------------------------------------
     def multiply_ints(self, a: list[int], b: list[int]) -> list[int]:

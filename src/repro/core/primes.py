@@ -28,7 +28,7 @@ import functools
 import itertools
 import math
 import random
-from typing import Iterator, Sequence
+from typing import Iterator
 
 # --------------------------------------------------------------------------
 # Primality (deterministic Miller-Rabin for < 3.3e24, covers all our vt-bit

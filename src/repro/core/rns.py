@@ -41,6 +41,25 @@ from repro.core.modmath import barrett_constants, barrett_reduce  # noqa: F401
 # --------------------------------------------------------------------------
 
 
+@dataclasses.dataclass(frozen=True)
+class ChannelDecompose:
+    """Static pre-processing constants for ONE RNS channel (= one of the
+    paper's specialized SAU circuits).
+
+    Packaged on the plan so every in-kernel decompose stage — the
+    standalone per-channel ``pallas_call`` in :mod:`repro.kernels.crt`
+    and the fully fused e2e kernel in :mod:`repro.kernels.ntt` — bakes
+    the same flat layout of python ints into its closure instead of
+    re-deriving Barrett constants at every call site.
+    """
+
+    qi: int
+    beta_terms: tuple[tuple[int, int], ...]  # signed-PoT terms of beta_i
+    block_consts: tuple[int, ...]  # [beta_i^{t'*rho}]_{q_i} per Alg-2 block
+    sau_barrett: tuple[int, int, int]  # (eps, s1, s2) for SAU/block words
+    acc_barrett: tuple[int, int, int]  # (eps, s1, s2) for the accumulator
+
+
 @dataclasses.dataclass(frozen=True, eq=False)  # identity hash: jit-static-safe
 class RnsPlan:
     """All host-precomputed constants for one (n, v, t) RNS configuration."""
@@ -62,6 +81,11 @@ class RnsPlan:
     qi_tilde: np.ndarray  # (t,): (q/q_i)^{-1} mod q_i
     qi_star_limbs: np.ndarray  # (t, L): q/q_i in base 2^w
     q_limbs: np.ndarray  # (L,)
+    # per-channel in-kernel decompose constants; None when the int64
+    # kernels cannot serve the config (v > 31, or a channel's SAU word
+    # falls outside the 63-bit-safe Barrett window 2*(v1 + 4) <= 63) —
+    # the jnp datapaths still work, the kernel entry points raise
+    dec: tuple[ChannelDecompose, ...] | None = None
 
     @property
     def jnp_safe(self) -> bool:
@@ -105,6 +129,25 @@ def make_plan(qs: list[int], n: int, v: int, beta_terms, t_prime: int = 3) -> Rn
     )
     qi_star_limbs = bigint.ints_to_limbs(qi_star, w, L)
     q_limbs = bigint.int_to_limbs(q, w, L)
+    dec = None
+    # Same windows the constants below assert: SAU words need
+    # 2*(v1 + 4) <= 63 per channel, accumulator words 2*4 <= 63.  Gating
+    # here (instead of letting barrett_constants assert) keeps plan
+    # construction working for every config the jnp datapaths serve —
+    # only the in-kernel decompose circuits become unavailable.
+    if v <= 31 and all(2 * (terms[0][0] + 4) <= 63 for terms in beta_terms):
+        dec = tuple(
+            ChannelDecompose(
+                qi=int(qi),
+                beta_terms=tuple(terms),
+                block_consts=tuple(int(c) for c in block_consts[i]),
+                # SAU output + block-sum headroom: c = v + v1 + 3 bits
+                sau_barrett=barrett_constants(int(qi), v + terms[0][0] + 3, v),
+                # accumulator of <= n_blocks reduced terms: < 2^{v+3}
+                acc_barrett=barrett_constants(int(qi), v + 3, v),
+            )
+            for i, (qi, terms) in enumerate(zip(qs, beta_terms))
+        )
     return RnsPlan(
         n=n,
         v=v,
@@ -121,6 +164,7 @@ def make_plan(qs: list[int], n: int, v: int, beta_terms, t_prime: int = 3) -> Rn
         qi_tilde=qi_tilde,
         qi_star_limbs=qi_star_limbs,
         q_limbs=q_limbs,
+        dec=dec,
     )
 
 

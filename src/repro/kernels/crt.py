@@ -12,6 +12,11 @@ Hardware mapping notes
   network: v-bit x w-bit limb products, a carry ripple (static L-step
   loop), and (t-1) conditional big-int subtractions.  No reduction over
   the wide modulus q ever materializes (Fig 16(b)).
+* Both halves are factored as reusable *in-kernel stages*
+  (:func:`decompose_stage`, :func:`compose_finalize`) so the fused
+  end-to-end kernel in :mod:`repro.kernels.ntt` runs the identical
+  circuits with the residues held in VMEM instead of round-tripping HBM
+  between three pallas_calls.
 """
 from __future__ import annotations
 
@@ -28,48 +33,76 @@ BLK = 256  # coefficients per grid step
 
 
 # --------------------------------------------------------------------------
-# pre-processing (one specialized kernel per channel, SAU network static)
+# pre-processing (one specialized circuit per channel, SAU network static)
 # --------------------------------------------------------------------------
 
 
-def _make_decompose_kernel(qi: int, v: int, beta_terms, seg_count: int, t_prime: int,
-                           block_consts):
-    """Returns a kernel closure with the channel's SAU circuit baked in."""
-    v1 = beta_terms[0][0]
-    c_sau = v + v1 + 3
-    eps, s1, s2 = modmath.barrett_constants(qi, c_sau, v)
-    epsa, sa1, sa2 = modmath.barrett_constants(qi, v + 3, v)
+def decompose_stage(z, ch: rns_mod.ChannelDecompose, *, seg_count: int,
+                    t_prime: int):
+    """In-kernel pre-processing stage for one RNS channel.
+
+    z: (..., S) base-2^v segments -> residues (...) mod ``ch.qi``.  The
+    SAU shift/add network and both Barrett constant sets arrive baked in
+    ``ch`` (a :class:`repro.core.rns.ChannelDecompose` off the plan), so
+    this traces to shifts, adds and the per-block v x v multiply only —
+    usable both from the standalone per-channel ``pallas_call`` below
+    and inside the fused e2e kernel, where the residues it produces stay
+    VMEM-resident.
+    """
+    qi = ch.qi
+    eps, s1, s2 = ch.sau_barrett
+    epsa, sa1, sa2 = ch.acc_barrett
     n_blocks = -(-seg_count // t_prime)
 
-    def sau(z):
-        acc = -z
-        for e, s in beta_terms:
-            acc = acc + s * (z << e)
+    def sau(x):
+        acc = -x
+        for e, s in ch.beta_terms:
+            acc = acc + s * (x << e)
         return acc
 
     def red(x):
         return modmath.barrett_reduce(x, qi, eps, s1, s2)
 
+    acc = jnp.zeros(z.shape[:-1], dtype=z.dtype)
+    for rho in range(n_blocks):
+        blk = z[..., rho * t_prime]
+        if t_prime > 1 and rho * t_prime + 1 < seg_count:
+            blk = blk + sau(z[..., rho * t_prime + 1])
+        for k in range(2, t_prime):
+            if rho * t_prime + k >= seg_count:
+                break
+            x = red(sau(z[..., rho * t_prime + k]))
+            for _ in range(k - 1):
+                x = red(sau(x))
+            blk = blk + x
+        blk = red(blk)
+        if rho == 0:
+            acc = acc + blk
+        else:
+            acc = acc + (blk * ch.block_consts[rho]) % qi
+    return modmath.barrett_reduce(acc, qi, epsa, sa1, sa2)
+
+
+def require_dec(plan: rns_mod.RnsPlan):
+    """The shared guard for every kernel needing in-kernel decompose
+    constants (standalone decompose and the fused e2e kernel)."""
+    if plan.dec is None:
+        raise ValueError(
+            f"plan (v={plan.v}) has no in-kernel decompose constants: the "
+            "int64 Pallas datapaths require v <= 31 and SAU words inside "
+            "the 63-bit-safe Barrett window (2*(v1 + 4) <= 63)"
+        )
+    return plan.dec
+
+
+def _make_decompose_kernel(ch: rns_mod.ChannelDecompose, seg_count: int,
+                           t_prime: int):
+    """Kernel closure with the channel's SAU circuit baked in."""
+
     def kernel(z_ref, o_ref):
-        z = z_ref[...]  # (blk, S)
-        acc = jnp.zeros(z.shape[:-1], dtype=z.dtype)
-        for rho in range(n_blocks):
-            blk = z[..., rho * t_prime]
-            if t_prime > 1 and rho * t_prime + 1 < seg_count:
-                blk = blk + sau(z[..., rho * t_prime + 1])
-            for k in range(2, t_prime):
-                if rho * t_prime + k >= seg_count:
-                    break
-                x = red(sau(z[..., rho * t_prime + k]))
-                for _ in range(k - 1):
-                    x = red(sau(x))
-                blk = blk + x
-            blk = red(blk)
-            if rho == 0:
-                acc = acc + blk
-            else:
-                acc = acc + (blk * int(block_consts[rho])) % qi
-        o_ref[...] = modmath.barrett_reduce(acc, qi, epsa, sa1, sa2)
+        o_ref[...] = decompose_stage(
+            z_ref[...], ch, seg_count=seg_count, t_prime=t_prime
+        )
 
     return kernel
 
@@ -79,18 +112,12 @@ def decompose_pallas(z, *, plan: rns_mod.RnsPlan, interpret: bool = True):
     """z: (rows, S) segments -> residues (t, rows).  One specialized
     pallas_call per RNS channel (= per hardware circuit)."""
     rows, S = z.shape
+    dec = require_dec(plan)
     pad = (-rows) % BLK
     zp = jnp.pad(z, ((0, pad), (0, 0))) if pad else z
     outs = []
     for i in range(plan.t):
-        kern = _make_decompose_kernel(
-            int(plan.qs[i]),
-            plan.v,
-            plan.beta_terms[i],
-            plan.seg_count,
-            plan.t_prime,
-            plan.block_consts[i],
-        )
+        kern = _make_decompose_kernel(dec[i], plan.seg_count, plan.t_prime)
         out = pl.pallas_call(
             kern,
             grid=(zp.shape[0] // BLK,),
@@ -108,9 +135,50 @@ def decompose_pallas(z, *, plan: rns_mod.RnsPlan, interpret: bool = True):
 # --------------------------------------------------------------------------
 
 
-def _make_compose_kernel(plan: rns_mod.RnsPlan):
-    t, L, w = plan.t, plan.L, plan.w
+def compose_finalize(acc, q_limbs, *, w: int, t: int):
+    """In-kernel post-processing tail: raw limb-product sums -> canonical
+    base-2^w limbs of the composed value mod q.
+
+    acc: (..., L) per-limb accumulations of ``y_i * q_i^`` products (each
+    < t * 2^{v+w}); q_limbs: (L,).  Static carry ripple followed by the
+    (t-1) conditional big-int subtractions of Fig 16(b) — no reduction
+    over the wide q ever materializes.  Shared by the standalone compose
+    ``pallas_call`` and the fused e2e kernel.
+    """
+    L = acc.shape[-1]
     mask = (1 << w) - 1
+    # carry ripple (static)
+    outs = []
+    carry = jnp.zeros_like(acc[..., 0])
+    for i in range(L):
+        s = acc[..., i] + carry
+        outs.append(s & mask)
+        carry = s >> w
+    acc = jnp.stack(outs, axis=-1)
+    # (t-1) conditional big-int subtractions of q
+    for _ in range(t - 1):
+        ge = jnp.ones(acc.shape[:-1], dtype=bool)
+        decided = jnp.zeros(acc.shape[:-1], dtype=bool)
+        for i in range(L - 1, -1, -1):
+            gt = acc[..., i] > q_limbs[i]
+            lt = acc[..., i] < q_limbs[i]
+            ge = jnp.where(~decided & gt, True, ge)
+            ge = jnp.where(~decided & lt, False, ge)
+            decided = decided | gt | lt
+        borrow = jnp.zeros_like(acc[..., 0])
+        subbed = []
+        for i in range(L):
+            d = acc[..., i] - q_limbs[i] - borrow
+            neg = d < 0
+            subbed.append(jnp.where(neg, d + (1 << w), d))
+            borrow = neg.astype(acc.dtype)
+        sub = jnp.stack(subbed, axis=-1)
+        acc = jnp.where(ge[..., None], sub, acc)
+    return acc
+
+
+def _make_compose_kernel(plan: rns_mod.RnsPlan):
+    t, w = plan.t, plan.w
 
     def kernel(res_ref, qs_ref, tilde_ref, star_ref, qlimb_ref, o_ref):
         res = res_ref[...]  # (t, blk)
@@ -120,35 +188,7 @@ def _make_compose_kernel(plan: rns_mod.RnsPlan):
         y = (res * tilde) % qs  # (t, blk)
         contrib = y[:, :, None] * star[:, None, :]  # (t, blk, L)
         acc = contrib.sum(axis=0)  # (blk, L)
-        # carry ripple (static)
-        outs = []
-        carry = jnp.zeros_like(acc[:, 0])
-        for i in range(L):
-            s = acc[:, i] + carry
-            outs.append(s & mask)
-            carry = s >> w
-        acc = jnp.stack(outs, axis=-1)
-        # (t-1) conditional big-int subtractions of q
-        qlimbs = qlimb_ref[0]  # (L,)
-        for _ in range(t - 1):
-            ge = jnp.ones(acc.shape[:1], dtype=bool)
-            decided = jnp.zeros(acc.shape[:1], dtype=bool)
-            for i in range(L - 1, -1, -1):
-                gt = acc[:, i] > qlimbs[i]
-                lt = acc[:, i] < qlimbs[i]
-                ge = jnp.where(~decided & gt, True, ge)
-                ge = jnp.where(~decided & lt, False, ge)
-                decided = decided | gt | lt
-            borrow = jnp.zeros_like(acc[:, 0])
-            subbed = []
-            for i in range(L):
-                d = acc[:, i] - qlimbs[i] - borrow
-                neg = d < 0
-                subbed.append(jnp.where(neg, d + (1 << w), d))
-                borrow = neg.astype(acc.dtype)
-            sub = jnp.stack(subbed, axis=-1)
-            acc = jnp.where(ge[:, None], sub, acc)
-        o_ref[...] = acc
+        o_ref[...] = compose_finalize(acc, qlimb_ref[0], w=w, t=t)
 
     return kernel
 

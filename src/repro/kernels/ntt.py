@@ -13,6 +13,11 @@ TPU mapping
   This is the TPU analogue of the paper's buffer-free NTT->iNTT cascade —
   on the FPGA the eliminated resource is the DSD shuffle buffer; here it
   is an HBM round-trip of 2 x ROWS x n x 8 bytes per channel.
+* The fused *e2e* kernel goes one step further (the paper's full
+  feed-forward datapath, Fig 10): CRT pre-processing, the cascade and
+  CRT post-processing in ONE pallas_call, reusing the in-kernel stages
+  of :mod:`repro.kernels.crt` — residue polynomials never exist in HBM
+  either; only segments enter and product limbs leave.
 * Butterfly pairing is expressed as reshapes (m, 2, t) of the trailing
   axis.  Stages with pair stride >= 128 keep the lane dimension intact;
   for stride < 128 a real-TPU deployment flips to the transposed-tile
@@ -35,9 +40,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import modmath
 from repro.core.modmath import add_mod, div2_mod, mul_mod, sub_mod
+from repro.kernels.crt import compose_finalize, decompose_stage, require_dec
 
 DEFAULT_ROWS = 8
+DEFAULT_E2E_ROWS = 1  # polynomials per grid step of the fused e2e kernel
 
 
 def _fwd_stages(a, fwd, q, eps=None, shifts=None):
@@ -100,6 +108,41 @@ def _fused_kernel(
     fb = _fwd_stages(b_ref[...], fwd_ref[...], q, eps, shifts)
     prod = mul_mod(fa, fb, q, eps, shifts)  # never leaves VMEM
     o_ref[...] = _inv_stages(prod, inv_ref[...], q, half, eps, shifts)
+
+
+def _fused_e2e_kernel(
+    fwd_ref, inv_ref, star_ref, qlimb_ref, za_ref, zb_ref, o_ref,
+    *, plan, scalars, shifts
+):
+    """The paper's full feed-forward datapath in ONE kernel: CRT
+    pre-processing, the per-channel NTT -> ⊙ -> iNTT cascade and CRT
+    post-processing, with every residue polynomial VMEM-resident.
+
+    The channel loop is a static unroll: each iteration is one of the
+    paper's t parallel specialized circuits, its moduli/Barrett/SAU
+    constants baked in from the plan (``plan.dec`` + ``scalars``), its
+    twiddles read from the (t, n) VMEM table blocks.  Only the segment
+    tiles enter and the limb tile leaves through HBM.
+    """
+    za = za_ref[...]  # (blk, n, S)
+    zb = zb_ref[...]
+    acc = jnp.zeros(za.shape[:-1] + (plan.L,), dtype=za.dtype)
+    for i, (qi, half, eps) in enumerate(scalars):
+        ch = plan.dec[i]
+        # Step 1: residual computation (Alg 2, SAU circuit)
+        ra = decompose_stage(za, ch, seg_count=plan.seg_count,
+                             t_prime=plan.t_prime)  # (blk, n)
+        rb = decompose_stage(zb, ch, seg_count=plan.seg_count,
+                             t_prime=plan.t_prime)
+        # Step 2: no-shuffle NTT cascade, product never leaves VMEM
+        fa = _fwd_stages(ra, fwd_ref[i], qi, eps, shifts)
+        fb = _fwd_stages(rb, fwd_ref[i], qi, eps, shifts)
+        prod = mul_mod(fa, fb, qi, eps, shifts)
+        pi = _inv_stages(prod, inv_ref[i], qi, half, eps, shifts)
+        # Step 3: this channel's Eq-10 contribution y_i * q_i^
+        y = mul_mod(pi, int(plan.qi_tilde[i]), qi, eps, shifts)
+        acc = acc + y[..., None] * star_ref[i][None, None, :]
+    o_ref[...] = compose_finalize(acc, qlimb_ref[0], w=plan.w, t=plan.t)
 
 
 # --------------------------------------------------------------------------
@@ -195,3 +238,53 @@ def fused_polymul_pallas(
         b,
     )
     return out[:, :rows]
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "row_blk", "interpret"))
+def fused_e2e_polymul_pallas(
+    za, zb, fwd, inv, star, q_limbs, *, plan,
+    row_blk: int = DEFAULT_E2E_ROWS, interpret: bool = True,
+):
+    """za, zb: (rows, n, S) base-2^v segment tiles -> (rows, n, L) limbs
+    of the negacyclic products mod q: decompose -> NTT -> ⊙ -> iNTT ->
+    compose inside ONE pallas_call.
+
+    fwd/inv: (t, n) twiddle tables, star: (t, L) q_i^ limbs, q_limbs:
+    (L,) — all device-resident uploads off the tables/plan.  Grid is
+    (row_blocks,): unlike the per-stage kernels there is no channel grid
+    axis, because the Eq-10 recombination needs all t channels of a
+    coefficient in one grid step; the channel loop unrolls inside.
+
+    VMEM per grid step at the paper's point (n=4096, t=6, S=6, L=7,
+    row_blk=1, int64): segments 2 x 192 KiB + twiddles 2 x 192 KiB +
+    per-channel scratch ~3 x 32 KiB + limb acc 224 KiB ~= 1 MiB << 16 MiB.
+    """
+    require_dec(plan)
+    rows, n, S = za.shape
+    t, L = plan.t, plan.L
+    scalars, shifts = modmath.channel_mul_constants(plan.qs)
+    pad = (-rows) % row_blk
+    if pad:
+        zpad = ((0, pad), (0, 0), (0, 0))
+        za = jnp.pad(za, zpad)
+        zb = jnp.pad(zb, zpad)
+    table = pl.BlockSpec((t, n), lambda r: (0, 0))
+    data = pl.BlockSpec((row_blk, n, S), lambda r: (r, 0, 0))
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_e2e_kernel, plan=plan, scalars=scalars, shifts=shifts
+        ),
+        grid=(za.shape[0] // row_blk,),
+        in_specs=[
+            table,
+            table,
+            pl.BlockSpec((t, L), lambda r: (0, 0)),
+            pl.BlockSpec((1, L), lambda r: (0, 0)),
+            data,
+            data,
+        ],
+        out_specs=pl.BlockSpec((row_blk, n, L), lambda r: (r, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((za.shape[0], n, L), za.dtype),
+        interpret=interpret,
+    )(fwd, inv, star, q_limbs.reshape(1, L), za, zb)
+    return out[:rows]

@@ -12,7 +12,16 @@ Backends
   baseline for the fusion win).
 * ``"pallas_fused"`` — the paper's contribution-1 datapath: the whole
   NTT -> ⊙ -> iNTT cascade runs inside one kernel and the NTT-domain
-  product never leaves VMEM.
+  product never leaves VMEM; decompose/compose are still separate
+  kernels.
+* ``"pallas_fused_e2e"`` — the paper's complete feed-forward datapath
+  (Fig 10): decompose -> cascade -> compose in ONE kernel via
+  :func:`fused_polymul_e2e`; residue polynomials never exist in HBM.
+  Stage-level entry points (``ntt_forward``, ``rns_decompose``, ...)
+  have no single-kernel equivalent, so under this backend they degrade
+  to the closest kernel datapath (the cascade to ``pallas_fused``,
+  everything else to ``pallas``) — only the e2e product gets the full
+  fusion.
 
 The backend is threaded through :class:`repro.core.params.ParenttParams`
 (``make_params(..., backend=...)``) and may be overridden per call with
@@ -55,11 +64,23 @@ __all__ = [
     "negacyclic_mul",
     "rns_decompose",
     "rns_compose",
+    "fused_polymul_e2e",
+    "hbm_traffic_model",
+    "count_pallas_launches",
 ]
 
 
 def _is_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _stage_backend(backend: str, cascade: bool = False) -> str:
+    """Per-stage datapath for a resolved backend: ``pallas_fused_e2e``
+    has no standalone-stage kernels, so stage entry points degrade to the
+    closest kernel path (see module docstring)."""
+    if backend == "pallas_fused_e2e":
+        return "pallas_fused" if cascade else "pallas"
+    return backend
 
 
 def resolve_backend(
@@ -123,7 +144,7 @@ def _fold_rows(x):
 def ntt_forward(a, params: ParenttParams, *, backend: str | None = None,
                 use_pallas: bool | None = None):
     """a: (t, ..., n) -> forward NTT per RNS channel."""
-    backend = resolve_backend(params, backend, use_pallas)
+    backend = _stage_backend(resolve_backend(params, backend, use_pallas))
     ct = _require_tables(params, "ntt_forward")
     _check_residues(a, params, "ntt_forward")
     if backend == "jnp":
@@ -139,7 +160,7 @@ def ntt_forward(a, params: ParenttParams, *, backend: str | None = None,
 def ntt_inverse(a, params: ParenttParams, *, backend: str | None = None,
                 use_pallas: bool | None = None):
     """a: (t, ..., n) bit-reversed spectra -> natural-order coefficients."""
-    backend = resolve_backend(params, backend, use_pallas)
+    backend = _stage_backend(resolve_backend(params, backend, use_pallas))
     ct = _require_tables(params, "ntt_inverse")
     _check_residues(a, params, "ntt_inverse")
     if backend == "jnp":
@@ -156,7 +177,9 @@ def negacyclic_mul(a, b, params: ParenttParams, *, backend: str | None = None,
                    use_pallas: bool | None = None):
     """(t, ..., n) x (t, ..., n) -> negacyclic products per RNS channel
     (the no-shuffle NTT -> ⊙ -> iNTT cascade)."""
-    backend = resolve_backend(params, backend, use_pallas)
+    backend = _stage_backend(
+        resolve_backend(params, backend, use_pallas), cascade=True
+    )
     ct = _require_tables(params, "negacyclic_mul")
     _check_residues(a, params, "negacyclic_mul")
     _check_residues(b, params, "negacyclic_mul")
@@ -202,7 +225,7 @@ def negacyclic_mul(a, b, params: ParenttParams, *, backend: str | None = None,
 def rns_decompose(z, params: ParenttParams, *, backend: str | None = None,
                   use_pallas: bool | None = None, use_sau: bool = True):
     """z: (..., S) base-2^v segments -> residues (t, ...)."""
-    backend = resolve_backend(params, backend, use_pallas)
+    backend = _stage_backend(resolve_backend(params, backend, use_pallas))
     _check_segments(z, params, "rns_decompose")
     if backend == "jnp":
         fn = rns_mod.decompose_sau if use_sau else rns_mod.decompose
@@ -218,7 +241,7 @@ def rns_decompose(z, params: ParenttParams, *, backend: str | None = None,
 def rns_compose(residues, params: ParenttParams, *, backend: str | None = None,
                 use_pallas: bool | None = None):
     """residues: (t, ...) -> (..., L) base-2^w limbs of the composed value."""
-    backend = resolve_backend(params, backend, use_pallas)
+    backend = _stage_backend(resolve_backend(params, backend, use_pallas))
     if residues.ndim < 1 or residues.shape[0] != params.t:
         raise ValueError(
             f"rns_compose: expected residues (t={params.t}, ...), got shape "
@@ -232,3 +255,139 @@ def rns_compose(residues, params: ParenttParams, *, backend: str | None = None,
         r2, plan=params.plan, interpret=not _is_tpu()
     )  # (rows, L)
     return out.reshape(lead + (params.plan.L,))
+
+
+# --------------------------------------------------------------------------
+# end-to-end dispatch (the whole Fig 10 pipeline behind one entry point)
+# --------------------------------------------------------------------------
+
+
+def fused_polymul_e2e(za, zb, params: ParenttParams, *,
+                      backend: str | None = None,
+                      use_pallas: bool | None = None, use_sau: bool = True):
+    """za, zb: (..., n, S) segment arrays -> (..., n, L) product limbs:
+    decompose -> per-channel NTT cascade -> compose.
+
+    On ``backend="pallas_fused_e2e"`` all three steps run inside ONE
+    ``pallas_call`` and the residue polynomials stay VMEM-resident (the
+    paper's feed-forward datapath — two fewer HBM round-trips than
+    ``pallas_fused``, see :func:`hbm_traffic_model`).  On every other
+    backend this composes the three stage dispatchers, so callers can
+    hold one entry point and switch datapaths with one string.
+    ``use_sau`` selects Alg 2 vs generic decompose on the jnp path (the
+    kernel paths always run the SAU circuits).
+    """
+    backend = resolve_backend(params, backend, use_pallas)
+    for name, z in (("za", za), ("zb", zb)):
+        if z.ndim < 2 or z.shape[-2] != params.n:
+            raise ValueError(
+                f"fused_polymul_e2e: expected {name} segments "
+                f"(..., n={params.n}, S={params.plan.seg_count}), got shape "
+                f"{tuple(z.shape)}"
+            )
+        _check_segments(z, params, "fused_polymul_e2e")
+    if za.shape != zb.shape:
+        raise ValueError(
+            f"fused_polymul_e2e: operand shapes differ: {tuple(za.shape)} "
+            f"vs {tuple(zb.shape)}"
+        )
+    if backend != "pallas_fused_e2e":
+        ra = rns_decompose(za, params, backend=backend, use_sau=use_sau)
+        rb = rns_decompose(zb, params, backend=backend, use_sau=use_sau)
+        rp = negacyclic_mul(ra, rb, params, backend=backend)
+        return rns_compose(rp, params, backend=backend)
+    ct = _require_tables(params, "fused_polymul_e2e")
+    plan = params.plan
+    lead = za.shape[:-2]
+    z3a = za.reshape((-1,) + za.shape[-2:])
+    z3b = zb.reshape((-1,) + zb.shape[-2:])
+    out = ntt_kernels.fused_e2e_polymul_pallas(
+        z3a, z3b, ct.fwd_d, ct.inv_d, plan.qi_star_limbs_d, plan.q_limbs_d,
+        plan=plan, interpret=not _is_tpu(),
+    )
+    return out.reshape(lead + (params.n, plan.L))
+
+
+def hbm_traffic_model(params: ParenttParams, rows: int,
+                      backend: str | None = None) -> dict:
+    """Modeled HBM bytes crossing kernel/stage boundaries for ONE
+    end-to-end multiply of ``rows`` polynomials (both operands in, limbs
+    out), per backend.
+
+    Counts every data tensor entering or leaving a ``pallas_call`` AS
+    DISPATCHED ABOVE (device-resident tables excluded) — including the
+    t-fold segment re-read of the per-channel specialized decompose
+    circuits, which each scan all S segments.  For ``"jnp"`` there are
+    no kernel launches; its row is the logical stage-boundary dataflow
+    (XLA may fuse some of it), reported as the unfused reference bound.
+    The ``kernel_launches`` numbers are structural claims about the
+    dispatch and are cross-checked against the traced computation by
+    :func:`count_pallas_launches` in the ``bench-smoke`` CI gate — a
+    refactor that de-fuses a path cannot silently keep its old row.
+    """
+    backend = resolve_backend(params, backend)
+    plan = params.plan
+    t = params.t
+    B = 8  # int64 lanes everywhere in the kernel datapaths
+    seg = rows * params.n * plan.seg_count * B  # one operand's segments
+    res = t * rows * params.n * B  # one full residue tensor
+    limb = rows * params.n * plan.L * B  # composed product limbs
+    if backend == "jnp":
+        # logical stage boundaries: decompose out 2res, NTT/pointwise/
+        # iNTT intermediates 8res, compose in res; no pallas launches
+        launches, seg_in, total = 0, 2 * seg, 2 * seg + 12 * res + limb
+    elif backend == "pallas":
+        # decompose: t calls per operand, each reading all S segments
+        # (2t seg in / 2res out); NTT x2 (res/res each); pointwise
+        # between kernels (2res in / res out); iNTT (res/res); compose
+        # (res in / limb out)
+        launches = 2 * t + 4
+        seg_in = 2 * t * seg
+        total = seg_in + 12 * res + limb
+    elif backend == "pallas_fused":
+        # decompose 2t calls, fused cascade (2res in / res out), compose
+        launches = 2 * t + 2
+        seg_in = 2 * t * seg
+        total = seg_in + 6 * res + limb
+    else:  # pallas_fused_e2e: segments in, limbs out, nothing between
+        launches, seg_in, total = 1, 2 * seg, 2 * seg + limb
+    return {
+        "backend": backend,
+        "rows": rows,
+        "hbm_bytes": total,
+        "kernel_launches": launches,
+        "segment_bytes_in": seg_in,
+        "limb_bytes_out": limb,
+        "intermediate_bytes": total - seg_in - limb,
+    }
+
+
+def count_pallas_launches(params: ParenttParams, backend: str | None = None,
+                          rows: int = 1) -> int:
+    """Count ``pallas_call`` equations in the TRACED e2e multiply.
+
+    This is the structural ground truth for
+    ``hbm_traffic_model(...)['kernel_launches']``: the bench-smoke CI
+    gate and the backend tests assert the two agree, so the traffic
+    model cannot drift from what the dispatch actually launches (e.g. a
+    future change splitting the fused e2e kernel back into stages).
+    """
+    S = params.plan.seg_count
+    z = jnp.zeros((rows, params.n, S), jnp.int64)
+    jaxpr = jax.make_jaxpr(
+        lambda a, b: fused_polymul_e2e(a, b, params, backend=backend)
+    )(z, z)
+
+    def count(jx) -> int:
+        n = 0
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):  # ClosedJaxpr (jit/pjit bodies)
+                    n += count(v.jaxpr)
+                elif hasattr(v, "eqns"):  # raw Jaxpr
+                    n += count(v)
+        return n
+
+    return count(jaxpr.jaxpr)

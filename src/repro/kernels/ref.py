@@ -5,8 +5,6 @@ the same math that the schoolbook-validated pipeline uses.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 from repro.core import ntt as ntt_mod
 from repro.core import rns as rns_mod
 

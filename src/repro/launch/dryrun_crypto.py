@@ -29,19 +29,20 @@ ARTIFACTS = os.path.normpath(
 )
 
 
-def polymul_step(za, zb, params):
+def polymul_step(za, zb, params, backend="jnp"):
     """segments (B, n, S) x2 -> product limbs (B, n, L).  The full paper
-    pipeline: decompose -> per-channel no-shuffle NTT cascade -> Eq 10.
-    Routed through the backend-dispatch layer, pinned to the pure-jnp
-    datapath: interpret-mode Pallas loops would bloat the lowered HLO on
-    the 512-device mesh."""
-    ra = ops_mod.rns_decompose(za, params, backend="jnp", use_sau=False)
-    rb = ops_mod.rns_decompose(zb, params, backend="jnp", use_sau=False)
-    rp = ops_mod.negacyclic_mul(ra, rb, params, backend="jnp")
-    return ops_mod.rns_compose(rp, params, backend="jnp")
+    pipeline: decompose -> per-channel no-shuffle NTT cascade -> Eq 10,
+    through the ONE e2e dispatch entry point.  Defaults to the pure-jnp
+    datapath: interpret-mode Pallas loops (any of the pallas* backends
+    off-TPU, including pallas_fused_e2e) would bloat the lowered HLO on
+    the 512-device mesh; on a real TPU pass --backend pallas_fused_e2e
+    to lower the single fused kernel instead."""
+    return ops_mod.fused_polymul_e2e(
+        za, zb, params, backend=backend, use_sau=False
+    )
 
 
-def run(mesh_kind: str, batch: int, out_dir: str):
+def run(mesh_kind: str, batch: int, out_dir: str, backend: str = "jnp"):
     params = make_params(n=4096, t=6, v=30)
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     n_dev = 512 if mesh_kind == "multi" else 256
@@ -50,12 +51,12 @@ def run(mesh_kind: str, batch: int, out_dir: str):
     in_sh = NamedSharding(mesh, P(ba, None, None))
     t0 = time.time()
     rec = {"arch": "parentt_he", "shape": f"polymul_b{batch}", "mesh": mesh_kind,
-           "n_devices": n_dev, "tag": "crypto"}
+           "n_devices": n_dev, "tag": "crypto", "backend": backend}
     try:
         with mesh:
             # residue-domain tensors (t, B, n): channels over `model`
             def step(za, zb):
-                return polymul_step(za, zb, params)
+                return polymul_step(za, zb, params, backend=backend)
 
             jitted = jax.jit(step, in_shardings=(in_sh, in_sh))
             lowered = jitted.lower(seg, seg)
@@ -149,12 +150,17 @@ def main():
     ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
     ap.add_argument("--batch", type=int, default=4096)
     ap.add_argument("--log-n", type=int, default=20, help="dntt polynomial size")
+    ap.add_argument(
+        "--backend", default="jnp", choices=list(ops_mod.BACKENDS),
+        help="polymul datapath; keep jnp off-TPU (interpret-mode Pallas "
+             "bloats the lowered HLO)",
+    )
     ap.add_argument("--out", default=ARTIFACTS)
     args = ap.parse_args()
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
     fails = 0
     for mk in meshes:
-        fails += run(mk, args.batch, args.out)["status"] != "ok"
+        fails += run(mk, args.batch, args.out, backend=args.backend)["status"] != "ok"
         fails += run_dntt(mk, args.log_n, args.out)["status"] != "ok"
     raise SystemExit(1 if fails else 0)
 

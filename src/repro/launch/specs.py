@@ -7,13 +7,10 @@ weak-type-correct, shardable, zero device allocation.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import model as M
 from repro.train import optimizer as opt_mod
 

@@ -8,7 +8,6 @@ enables x64 for the crypto core).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax

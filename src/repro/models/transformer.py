@@ -9,9 +9,6 @@ threaded through the scan.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -14,7 +14,6 @@ exercises the multi-pod lowering of (1).
 """
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax

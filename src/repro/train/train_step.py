@@ -6,12 +6,10 @@ and is what dryrun.py lowers against the production mesh.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, RunConfig
+from repro.configs.base import RunConfig
 from repro.models import model as M
 from repro.train import optimizer as opt_mod
 

@@ -8,6 +8,9 @@ module-level collection error.
 """
 from __future__ import annotations
 
+import functools
+import inspect
+
 import pytest
 
 
@@ -33,13 +36,22 @@ class _AnyStrategy:
 st = _AnyStrategy()
 
 
-def given(*_args, **_kwargs):
+def given(*g_args, **g_kwargs):
     def deco(fn):
+        @functools.wraps(fn)
         def skipped(*args, **kwargs):
             pytest.skip("hypothesis not installed")
 
-        skipped.__name__ = getattr(fn, "__name__", "skipped_property_test")
-        skipped.__doc__ = getattr(fn, "__doc__", None)
+        # Present the signature MINUS the hypothesis-provided arguments,
+        # exactly as the real @given does: otherwise pytest either fails
+        # to find @parametrize arguments on the wrapper or demands
+        # fixtures for the strategy kwargs.
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items() if name not in g_kwargs]
+        if g_args:  # positional strategies consume trailing parameters
+            params = params[: len(params) - len(g_args)]
+        del skipped.__wrapped__  # stop inspect following back to fn
+        skipped.__signature__ = sig.replace(parameters=params)
         return skipped
 
     return deco

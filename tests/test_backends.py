@@ -39,14 +39,25 @@ class TestFusedBitExact:
         assert got == pm.schoolbook_negacyclic(a, b, p.q)
 
     @pytest.mark.parametrize("t,v,n", PRESETS)
+    def test_pallas_fused_e2e_vs_oracles(self, t, v, n):
+        """The single-kernel decompose -> cascade -> compose pipeline
+        (residues never touch HBM) must be bit-exact too."""
+        p = params_mod.make_params(n=n, t=t, v=v)
+        a, b = _rand_ints(p, seed=13 * n)
+        got = pm.ParenttMultiplier(p, backend="pallas_fused_e2e").multiply_ints(a, b)
+        assert got == pm.oracle_multiply(a, b, p)
+        assert got == pm.schoolbook_negacyclic(a, b, p.q)
+
+    @pytest.mark.parametrize("t,v,n", PRESETS)
     def test_backends_agree(self, t, v, n):
         p = params_mod.make_params(n=n, t=t, v=v)
         a, b = _rand_ints(p, seed=7 * n)
-        outs = [
-            pm.ParenttMultiplier(p, backend=bk).multiply_ints(a, b)
+        outs = {
+            bk: pm.ParenttMultiplier(p, backend=bk).multiply_ints(a, b)
             for bk in ops.BACKENDS
-        ]
-        assert outs[0] == outs[1] == outs[2]
+        }
+        for bk, got in outs.items():
+            assert got == outs["jnp"], f"backend {bk} disagrees with jnp"
 
 
 class TestDispatch:
@@ -92,7 +103,67 @@ class TestDispatch:
         with pytest.raises(ValueError, match="rns_compose"):
             ops.rns_compose(jnp.zeros((p.t + 1, 5), dtype=jnp.int64), p)
 
-    @pytest.mark.parametrize("backend", ["pallas", "pallas_fused"])
+    def test_e2e_stage_calls_degrade(self):
+        """Under pallas_fused_e2e the stage entry points have no
+        single-kernel equivalent: they must run (degrading to the
+        per-stage kernels) and stay exact, so BFV residue-domain call
+        sites keep working with the backend threaded through params."""
+        p = params_mod.make_params(n=64, t=3, v=30, backend="pallas_fused_e2e")
+        pj = params_mod.make_params(n=64, t=3, v=30)
+        rng = np.random.default_rng(5)
+        z = jnp.asarray(rng.integers(0, 1 << 30, size=(64, p.plan.seg_count)))
+        res = ops.rns_decompose(z, p)
+        assert np.array_equal(
+            np.asarray(res), np.asarray(ops.rns_decompose(z, pj))
+        )
+        spec = ops.ntt_forward(res.reshape(p.t, 1, p.n), p)
+        back = ops.ntt_inverse(spec, p)
+        assert np.array_equal(
+            np.asarray(back), np.asarray(res.reshape(p.t, 1, p.n))
+        )
+        limbs = ops.rns_compose(res, p)
+        assert np.array_equal(
+            np.asarray(limbs), np.asarray(ops.rns_compose(res, pj))
+        )
+
+    def test_hbm_traffic_model_ordering(self):
+        """The invariant the bench-smoke CI job enforces: each fusion
+        level strictly reduces modeled HBM bytes and kernel launches."""
+        p = params_mod.make_params(n=64, t=3, v=30)
+        models = {
+            bk: ops.hbm_traffic_model(p, rows=4, backend=bk)
+            for bk in ops.BACKENDS
+        }
+        assert (
+            models["pallas_fused_e2e"]["hbm_bytes"]
+            < models["pallas_fused"]["hbm_bytes"]
+            < models["pallas"]["hbm_bytes"]
+        )
+        assert models["pallas_fused_e2e"]["kernel_launches"] == 1
+        assert models["pallas_fused_e2e"]["intermediate_bytes"] == 0
+        assert models["jnp"]["kernel_launches"] == 0
+        # segments in / limbs out is the irreducible floor
+        m = models["pallas_fused_e2e"]
+        assert m["hbm_bytes"] == m["segment_bytes_in"] + m["limb_bytes_out"]
+
+    def test_traffic_model_matches_traced_launch_counts(self):
+        """The model's kernel_launches must equal the number of
+        pallas_call equations in the actual traced computation — the
+        structural tie that keeps the bench-smoke gate honest if a
+        backend is ever de-fused."""
+        p = params_mod.make_params(n=64, t=3, v=30)
+        for bk in ops.BACKENDS:
+            counted = ops.count_pallas_launches(p, backend=bk, rows=2)
+            claimed = ops.hbm_traffic_model(p, rows=2, backend=bk)[
+                "kernel_launches"
+            ]
+            assert counted == claimed, (
+                f"backend {bk}: traced {counted} pallas_calls, "
+                f"model claims {claimed}"
+            )
+        assert ops.count_pallas_launches(p, backend="pallas_fused_e2e") == 1
+
+    @pytest.mark.parametrize("backend", ["pallas", "pallas_fused", "pallas_fused_e2e"])
     def test_arbitrary_leading_batch_dims(self, backend):
         """(t, B1, B2, n) residues work on the kernel backends (which fold
         to (t, rows, n) tiles internally) and match jnp exactly."""

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 
 from repro.core import params as params_mod
 from repro.core import polymul as pm
-from repro.kernels import ops, ref
+from repro.kernels import ops
 from repro.kernels import ntt as ntt_kernels
 
 

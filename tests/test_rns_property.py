@@ -1,0 +1,130 @@
+"""Property tests for RNS pre/post-processing (paper Alg 2 / Eq 10):
+decompose/compose round-trips over random residues for EVERY registered
+special modulus — each channel's SAU circuit gets its own property, not
+just the two end-to-end pipeline presets.
+
+Uses hypothesis when installed; otherwise the fallback shim turns each
+property into an individual skip (see tests/_hypothesis_fallback.py).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import bigint
+from repro.core import params as params_mod
+from repro.core import primes as primes_mod
+from repro.core import rns as rns_mod
+from repro.kernels import crt as crt_kernels
+
+# Registered configurations served by the int64 datapaths; their
+# default_prime_set members are "every registered special modulus".
+CONFIGS = [(64, 3, 30), (256, 6, 30)]
+
+
+def _registered_moduli():
+    out = []
+    for n, t, v in CONFIGS:
+        for i, sp in enumerate(primes_mod.default_prime_set(n, t, v)):
+            out.append(pytest.param(n, t, v, i, id=f"n{n}_t{t}_q{sp.q:#x}"))
+    return out
+
+
+MODULI = _registered_moduli()
+
+
+def _segments_of(x: int, plan) -> jnp.ndarray:
+    return jnp.asarray(
+        np.array([bigint.int_to_limbs(x, plan.v, plan.seg_count)])
+    )
+
+
+class TestDecomposePerModulus:
+    @pytest.mark.parametrize("n,t,v,i", MODULI)
+    @settings(max_examples=15, deadline=None)
+    @given(data=st.data())
+    def test_decompose_channel_matches_bigint(self, n, t, v, i, data):
+        """Both decompose datapaths (generic and SAU/Alg-2) must send a
+        random x < q to x mod q_i on channel i."""
+        plan = params_mod.make_params(n=n, t=t, v=v).plan
+        x = data.draw(st.integers(min_value=0, max_value=plan.q - 1))
+        seg = _segments_of(x, plan)
+        qi = int(plan.qs[i])
+        assert int(rns_mod.decompose_sau(seg, plan)[i, 0]) == x % qi
+        assert int(rns_mod.decompose(seg, plan)[i, 0]) == x % qi
+
+    @pytest.mark.parametrize("n,t,v,i", MODULI)
+    @settings(max_examples=10, deadline=None)
+    @given(data=st.data())
+    def test_decompose_pallas_channel_matches_bigint(self, n, t, v, i, data):
+        """The per-channel specialized Pallas circuit (interpret mode)
+        agrees with the bigint ground truth on channel i."""
+        plan = params_mod.make_params(n=n, t=t, v=v).plan
+        x = data.draw(st.integers(min_value=0, max_value=plan.q - 1))
+        seg = _segments_of(x, plan)
+        res = crt_kernels.decompose_pallas(seg, plan=plan, interpret=True)
+        assert int(res[i, 0]) == x % int(plan.qs[i])
+
+
+class TestComposeRoundTripPerModulus:
+    @pytest.mark.parametrize("n,t,v,i", MODULI)
+    @settings(max_examples=15, deadline=None)
+    @given(data=st.data())
+    def test_compose_then_decompose_is_identity(self, n, t, v, i, data):
+        """Random residues -> Eq-10 compose -> segments -> decompose must
+        reproduce channel i exactly (CRT uniqueness, canonical range)."""
+        plan = params_mod.make_params(n=n, t=t, v=v).plan
+        residues = [
+            data.draw(st.integers(min_value=0, max_value=int(q) - 1))
+            for q in plan.qs
+        ]
+        r = jnp.asarray(np.array(residues, dtype=np.int64).reshape(plan.t, 1))
+        limbs = rns_mod.compose(r, plan)
+        x = bigint.limbs_to_int(np.asarray(limbs)[0], plan.w)
+        assert 0 <= x < plan.q  # canonical: all t-1 cond-subs applied
+        assert x % int(plan.qs[i]) == residues[i]
+        back = rns_mod.decompose_sau(_segments_of(x, plan), plan)
+        assert int(back[i, 0]) == residues[i]
+
+    @pytest.mark.parametrize("n,t,v,i", MODULI)
+    @settings(max_examples=10, deadline=None)
+    @given(data=st.data())
+    def test_compose_pallas_matches_bigint(self, n, t, v, i, data):
+        """The Pallas compose kernel (interpret mode) recombines random
+        residues to a value congruent on channel i and below q."""
+        plan = params_mod.make_params(n=n, t=t, v=v).plan
+        residues = [
+            data.draw(st.integers(min_value=0, max_value=int(q) - 1))
+            for q in plan.qs
+        ]
+        r = jnp.asarray(np.array(residues, dtype=np.int64).reshape(plan.t, 1))
+        limbs = crt_kernels.compose_pallas(r, plan=plan, interpret=True)
+        x = bigint.limbs_to_int(np.asarray(limbs)[0], plan.w)
+        assert 0 <= x < plan.q
+        assert x % int(plan.qs[i]) == residues[i]
+
+
+class TestBatchedAgreement:
+    @pytest.mark.parametrize("n,t,v", CONFIGS)
+    @settings(max_examples=8, deadline=None)
+    @given(data=st.data())
+    def test_pallas_pre_post_match_jnp_on_batches(self, n, t, v, data):
+        """Kernel and jnp datapaths agree on whole random batches (the
+        property the e2e bit-exactness gates sample only pointwise)."""
+        plan = params_mod.make_params(n=n, t=t, v=v).plan
+        seed = data.draw(st.integers(min_value=0, max_value=2**32 - 1))
+        rng = np.random.default_rng(seed)
+        z = jnp.asarray(
+            rng.integers(0, 1 << v, size=(4, plan.seg_count), dtype=np.int64)
+        )
+        want = rns_mod.decompose_sau(z, plan)
+        got = crt_kernels.decompose_pallas(z, plan=plan, interpret=True)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+        limbs_want = rns_mod.compose(want, plan)
+        limbs_got = crt_kernels.compose_pallas(got, plan=plan, interpret=True)
+        assert np.array_equal(np.asarray(limbs_got), np.asarray(limbs_want))

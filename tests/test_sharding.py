@@ -1,7 +1,6 @@
 """Partition-rule unit tests: param specs, divisibility enforcement,
 batch/cache specs, activation policy behavior on a 1-device named mesh."""
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
