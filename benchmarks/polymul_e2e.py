@@ -14,12 +14,16 @@ the comparison that matters off-TPU is the HBM round-trip model (bytes
 crossing kernel boundaries per backend, ``ops.hbm_traffic_model``) plus
 bit-exactness of every kernel path.
 
-``python -m benchmarks.polymul_e2e --ci-smoke --out BENCH_ci.json`` runs
-the small-preset interpret-mode smoke used by the ``bench-smoke`` CI
-job: it records wall-clock + modeled HBM bytes for all four backends,
-checks the fused-e2e path bit-exact against the bigint oracle, and
-exits non-zero if the fused-e2e path moves more HBM bytes than the
-three-kernel path.
+``python -m benchmarks.polymul_e2e --ci-smoke --out BENCH_ci.json``
+runs the small-preset interpret-mode smoke used by the ``bench-smoke``
+CI job: it records wall-clock + modeled HBM bytes for all four
+backends across BOTH stage schedules (radix2 / four_step), checks every
+path bit-exact against the bigint oracle, verifies the
+reduction-op/lane-alignment cost model against the traced kernels, and
+exits non-zero if any fusion/lane/lazy invariant regressed.  With
+``--baseline BENCH_seed.json`` it additionally diffs op counts and
+modeled HBM bytes against the committed baseline, so the perf
+trajectory is tracked in-repo instead of only as a build artifact.
 """
 import argparse
 import json
@@ -38,11 +42,13 @@ from repro.core import schedule as sched
 from repro.kernels import ops as ops_mod
 
 FREQ = 240e6  # paper's post-pipelining clock
+CONCRETE_SCHEDULES = ("radix2", "four_step")
 
 
-def _time_backend(p, backend: str, za, zb, iters: int = 3) -> float:
+def _time_backend(p, backend: str, za, zb, iters: int = 3,
+                  schedule: str = "auto") -> float:
     """us per polynomial through ParenttMultiplier on one backend."""
-    m = pm.ParenttMultiplier(p, backend=backend)
+    m = pm.ParenttMultiplier(p.with_schedule(schedule), backend=backend)
     batch = za.shape[0]
     jax.block_until_ready(m(za, zb))  # compile
     t0 = time.perf_counter()
@@ -51,7 +57,28 @@ def _time_backend(p, backend: str, za, zb, iters: int = 3) -> float:
     return (time.perf_counter() - t0) / iters / batch * 1e6
 
 
-def run():
+def _cost_model_record(p) -> dict:
+    """Per-schedule reduction-op/lane-alignment model for one preset,
+    cross-checked against the traced kernels (fwd direction; the inverse
+    is asserted by tests/test_schedules.py)."""
+    out = {}
+    for schedule in CONCRETE_SCHEDULES:
+        fwd = ops_mod.transform_cost_model(p, schedule=schedule)
+        inv = ops_mod.transform_cost_model(p, schedule=schedule, direction="inv")
+        out[schedule] = {
+            "sublane_stages": fwd["sublane_stages"],
+            "lazy_window": fwd["lazy_window"],
+            "reduction_ops_fwd": fwd["reduction_ops"],
+            "reduction_ops_inv": inv["reduction_ops"],
+            "strict_reduction_ops": fwd["strict_reduction_ops"],
+            "traced_selects_fwd": ops_mod.count_reduction_selects(
+                p, schedule=schedule
+            ),
+        }
+    return out
+
+
+def run(row_blk: int | None = None):
     out = []
     n = 4096
     bpp = sched.bpp_cycles(n)
@@ -76,7 +103,7 @@ def run():
     # bit-exactness gate: the fused Pallas path vs the Python bigint
     # oracle (and the schoolbook), at a size where the O(n^2) oracle is
     # fast.  Runs through the same public dispatch layer as the timing.
-    pchk = params_mod.make_params(n=256, t=6, v=30)
+    pchk = params_mod.make_params(n=256, t=6, v=30, row_blk=row_blk)
     rchk = random.Random(0)
     ca = [rchk.randrange(pchk.q) for _ in range(pchk.n)]
     cb = [rchk.randrange(pchk.q) for _ in range(pchk.n)]
@@ -129,9 +156,28 @@ def run():
                 f"{base['hbm_bytes'] / m['hbm_bytes']:.2f}x less traffic",
             )
         )
+    # per-schedule op-count + wall-clock columns: the lane-aligned
+    # four-step schedule vs the flat radix-2 loop, both with the Harvey
+    # lazy butterflies the cost model accounts for
+    cmod = _cost_model_record(pchk)
+    for schedule in CONCRETE_SCHEDULES:
+        us_s = _time_backend(
+            pchk, "pallas_fused", zs[0], zs[1], schedule=schedule
+        )
+        c = cmod[schedule]
+        out.append(
+            (
+                f"schedule_n256_{schedule}_pallas_fused",
+                us_s,
+                f"sublane_stages={c['sublane_stages']} "
+                f"reduction_ops/transform={c['reduction_ops_fwd']} "
+                f"(strict {c['strict_reduction_ops']}, lazy window "
+                f"{c['lazy_window']}); traced={c['traced_selects_fwd']}",
+            )
+        )
     # measured: full pipeline (t=6, v=30, n=4096), both datapaths through
     # the public backend-dispatch layer
-    p = params_mod.make_params(n=4096, t=6, v=30)
+    p = params_mod.make_params(n=4096, t=6, v=30, row_blk=row_blk)
     rng = np.random.default_rng(0)
     batch = 4
     za = jnp.asarray(
@@ -213,12 +259,54 @@ def run():
 # --------------------------------------------------------------------------
 
 
+def diff_against_baseline(rec: dict, baseline: dict) -> list[str]:
+    """Regression diff of the structural columns (op counts + modeled
+    HBM bytes; wall-clock is machine-dependent and NOT gated).  A metric
+    may improve or hold; growing past the committed baseline fails."""
+    fails = []
+    for bk, r in rec["backends"].items():
+        base = baseline.get("backends", {}).get(bk)
+        if not base:
+            continue
+        for key in ("hbm_bytes", "kernel_launches"):
+            if r[key] > base[key]:
+                fails.append(
+                    f"baseline regression [{bk}].{key}: {r[key]} > "
+                    f"committed {base[key]}"
+                )
+    for scope in ("cost_model", "cost_model_n256"):
+        for schedule, c in rec.get(scope, {}).items():
+            base = baseline.get(scope, {}).get(schedule)
+            if not base:
+                continue
+            for key in (
+                "sublane_stages", "reduction_ops_fwd", "reduction_ops_inv",
+            ):
+                if c[key] > base[key]:
+                    fails.append(
+                        f"baseline regression [{scope}.{schedule}].{key}: "
+                        f"{c[key]} > committed {base[key]}"
+                    )
+    return fails
+
+
 def run_ci_smoke(out_path: str, n: int = 64, t: int = 3, v: int = 30,
-                 batch: int = 2) -> dict:
-    """Benchmark the small preset across all four backends, write the
-    result JSON, and enforce the fusion invariant: the fused-e2e path
-    must move FEWER HBM bytes than the three-kernel (``pallas``) path
-    and be bit-exact against the Python bigint oracle."""
+                 batch: int = 2, baseline_path: str | None = None) -> dict:
+    """Benchmark the small preset across all four backends and BOTH
+    stage schedules, write the result JSON, and enforce:
+
+    * fusion — the fused-e2e path moves fewer HBM bytes than the
+      three-kernel path, traces to exactly 1 pallas_call, and every
+      (backend, schedule) pair is bit-exact vs the bigint oracle;
+    * the launch counts and reduction-op counts the models claim match
+      the traced computations;
+    * lane alignment — the four-step schedule has 0 sub-128-lane stages,
+      here and at the n=256 operating preset (structural, no execution);
+    * lazy reduction — modeled reduction ops per transform are >= 2x
+      below the strict butterfly count whenever the lazy window is on;
+    * optionally, no op-count/HBM-byte regression vs a committed
+      baseline JSON (``BENCH_seed.json``).
+    """
     p = params_mod.make_params(n=n, t=t, v=v)
     rng = random.Random(7)
     a = [rng.randrange(p.q) for _ in range(p.n)]
@@ -237,13 +325,8 @@ def run_ci_smoke(out_path: str, n: int = 64, t: int = 3, v: int = 30,
         "backends": {},
     }
     for bk in ops_mod.BACKENDS:
-        us = _time_backend(p, bk, za, zb, iters=1)
         model = ops_mod.hbm_traffic_model(p, rows=batch, backend=bk)
-        exact = (
-            pm.ParenttMultiplier(p, backend=bk).multiply_ints(a, b) == oracle
-        )
-        rec["backends"][bk] = {
-            "us_per_poly": us,
+        r = {
             "hbm_bytes": model["hbm_bytes"],
             "kernel_launches": model["kernel_launches"],
             # structural ground truth: pallas_call eqns in the traced
@@ -252,8 +335,28 @@ def run_ci_smoke(out_path: str, n: int = 64, t: int = 3, v: int = 30,
                 p, backend=bk, rows=batch
             ),
             "intermediate_bytes": model["intermediate_bytes"],
-            "bit_exact_vs_oracle": exact,
+            "schedules": {},
         }
+        for schedule in CONCRETE_SCHEDULES:
+            us = _time_backend(p, bk, za, zb, iters=1, schedule=schedule)
+            exact = (
+                pm.ParenttMultiplier(
+                    p.with_schedule(schedule), backend=bk
+                ).multiply_ints(a, b)
+                == oracle
+            )
+            r["schedules"][schedule] = {
+                "us_per_poly": us,
+                "bit_exact_vs_oracle": exact,
+            }
+        rec["backends"][bk] = r
+    rec["cost_model"] = _cost_model_record(p)
+    # the lane-alignment claim is about the operating point (n >= 256
+    # where the tile reaches the full 128-lane width): record it
+    # structurally — models + traced kernels, no interpret-mode execution
+    rec["cost_model_n256"] = _cost_model_record(
+        params_mod.make_params(n=256, t=6, v=30)
+    )
     fused = rec["backends"]["pallas_fused_e2e"]
     three = rec["backends"]["pallas"]
     rec["fused_e2e_hbm_reduction_vs_pallas"] = (
@@ -273,13 +376,44 @@ def run_ci_smoke(out_path: str, n: int = 64, t: int = 3, v: int = 30,
                 f"computation contains {r['traced_pallas_calls']} "
                 f"pallas_calls — the model no longer matches the dispatch"
             )
-        if not r["bit_exact_vs_oracle"]:
-            failures.append(f"backend {bk} is not bit-exact vs the bigint oracle")
+        for schedule, rs in r["schedules"].items():
+            if not rs["bit_exact_vs_oracle"]:
+                failures.append(
+                    f"backend {bk} / schedule {schedule} is not bit-exact "
+                    "vs the bigint oracle"
+                )
     if fused["traced_pallas_calls"] != 1:
         failures.append(
             f"fused-e2e path traces to {fused['traced_pallas_calls']} "
             "pallas_calls, expected exactly 1: the e2e fusion was undone"
         )
+    for scope in ("cost_model", "cost_model_n256"):
+        cm = rec[scope]
+        if cm["four_step"]["sublane_stages"] != 0:
+            failures.append(
+                f"{scope}: four_step schedule has "
+                f"{cm['four_step']['sublane_stages']} sub-128-lane stages, "
+                "expected 0 — the lane-aligned schedule regressed"
+            )
+        for schedule, c in cm.items():
+            if c["traced_selects_fwd"] != c["reduction_ops_fwd"]:
+                failures.append(
+                    f"{scope}.{schedule}: model claims "
+                    f"{c['reduction_ops_fwd']} reduction ops but the traced "
+                    f"kernel contains {c['traced_selects_fwd']} selects"
+                )
+            if (
+                c["lazy_window"] is not None
+                and 2 * c["reduction_ops_fwd"] > c["strict_reduction_ops"]
+            ):
+                failures.append(
+                    f"{scope}.{schedule}: lazy reduction saves < 2x "
+                    f"({c['reduction_ops_fwd']} vs strict "
+                    f"{c['strict_reduction_ops']})"
+                )
+    if baseline_path:
+        with open(baseline_path) as f:
+            failures += diff_against_baseline(rec, json.load(f))
     rec["failures"] = failures
     with open(out_path, "w") as f:
         json.dump(rec, f, indent=1)
@@ -293,14 +427,20 @@ def main(argv=None) -> int:
                     help="small-preset smoke for the bench-smoke CI job")
     ap.add_argument("--out", default="BENCH_ci.json",
                     help="JSON output path for --ci-smoke")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline JSON (BENCH_seed.json) to "
+                         "diff op counts / HBM bytes against")
+    ap.add_argument("--row-blk", type=int, default=None,
+                    help="kernel tile rows per grid step "
+                         "(None = per-kernel default)")
     args = ap.parse_args(argv)
     if args.ci_smoke:
-        rec = run_ci_smoke(args.out)
+        rec = run_ci_smoke(args.out, baseline_path=args.baseline)
         for msg in rec["failures"]:
             print(f"[FAIL] {msg}", file=sys.stderr)
         return 1 if rec["failures"] else 0
     print("name,us_per_call,derived")
-    for name, us, derived in run():
+    for name, us, derived in run(row_blk=args.row_blk):
         print(f'{name},{us:.1f},"{derived}"')
     return 0
 

@@ -28,17 +28,27 @@ def main():
     #   "pallas_fused_e2e" the whole decompose -> cascade -> compose
     #                      pipeline in ONE kernel: residues never touch
     #                      HBM, only segments in / product limbs out
+    # and an orthogonal switch selects the NTT stage schedule:
+    #   "radix2"     flat stage loop (late stages pair at lane stride < 128)
+    #   "four_step"  lane-aligned (n1, 128) tile schedule with a VMEM
+    #                transpose — no stage pairs along the lane axis
+    #   "auto"       four_step when n >= 256 (the default)
     p = params_mod.make_params(n=256, t=3, v=30)
     rng = random.Random(0)
     a = [rng.randrange(p.q) for _ in range(p.n)]
     b = [rng.randrange(p.q) for _ in range(p.n)]
     want = pm.schoolbook_negacyclic(a, b, p.q)
     for backend in params_mod.BACKENDS:
-        mult = pm.ParenttMultiplier(p, backend=backend)
-        got = mult.multiply_ints(a, b)
-        assert got == want, f"pipeline mismatch on backend={backend}!"
+        for schedule in ("radix2", "four_step"):
+            mult = pm.ParenttMultiplier(
+                p.with_schedule(schedule), backend=backend
+            )
+            got = mult.multiply_ints(a, b)
+            assert got == want, (
+                f"pipeline mismatch on backend={backend}/{schedule}!"
+            )
         print(f"[ok] n=256, q={p.q.bit_length()}-bit, backend={backend}: "
-              "PaReNTT == schoolbook")
+              "PaReNTT == schoolbook (radix2 + four_step)")
 
     # --- 2. the paper's configuration ------------------------------------
     p = params_mod.make_params(n=4096, t=6, v=30)

@@ -129,3 +129,141 @@ def mul_mod(x, y, q, eps=None, shifts: tuple[int, int] | None = None):
         return p % q
     s1, s2 = shifts
     return barrett_reduce(p, q, eps, s1, s2)
+
+
+# --------------------------------------------------------------------------
+# Harvey-style lazy reduction (Shoup multiplication, deferred canonicalize)
+#
+# The strict butterfly above pays 5 conditional subtractions (jnp.where
+# chains) per stage: 3 in the Barrett reduce, 1 each in add_mod/sub_mod.
+# The lazy butterflies keep values in a window [0, W*q) with W = 2 or 4
+# and reduce the twiddle product with a precomputed Shoup constant
+#     w' = floor(w * 2^beta / q)   (per twiddle, host-side)
+#     shoup_mul(v, w) = v*w - (v*w' >> beta) * q   in  [0, 2q)
+# which needs NO conditional subtraction at all.  Only 1-2 window
+# subtractions remain per stage, plus ONE canonicalizing reduce at
+# transform (or cascade) exit — the O(1)-per-transform reduce the issue
+# asks for.  63-bit-safe windows on int64 lanes (b = bit_length(q)):
+#
+#   b <= 29:  W = 4, beta = b + 2   (Harvey's original window; 1 where
+#             per CT butterfly)
+#   b == 30:  W = 2, beta = 32      (the paper's v=30 point; v*w' peaks
+#             at 2^(31+32) < 2^63; 2 wheres per CT butterfly)
+#   else:     lazy unavailable — strict butterflies only.
+# --------------------------------------------------------------------------
+
+STRICT_SELECTS_PER_STAGE = 5  # Barrett 3 + add_mod 1 + sub_mod 1
+
+
+def lazy_params(qs) -> tuple[int, int] | tuple[None, None]:
+    """(window, beta) for the lazy butterflies, or (None, None) when the
+    configuration is outside the 63-bit-safe envelope (mixed widths or
+    q >= 2^31 — exactly the configurations strict Barrett also rejects)."""
+    qs = np.atleast_1d(np.asarray(qs, dtype=np.int64))
+    widths = {int(q).bit_length() for q in qs}
+    if len(widths) != 1:
+        return None, None
+    b = widths.pop()
+    if b <= 29:
+        return 4, b + 2
+    if b == 30:
+        return 2, 32
+    return None, None
+
+
+def validate_lazy_envelope(q: int, window: int, beta: int) -> None:
+    """Proof obligations of the lazy window, checked once per table set
+    (the per-stage bound bookkeeping ChannelTables bakes in).
+
+    * every butterfly value stays < window*q and window*q <= 2^beta, so
+      Shoup operands are always in range;
+    * the Shoup product v*w' (v < window*q, w' < 2^beta) fits 63 bits;
+    * the in-stage peak (u + t, resp. u + v before the window subtract)
+      fits 63 bits trivially alongside it.
+    """
+    if window not in (2, 4):
+        raise ValueError(f"lazy window must be 2 or 4, got {window}")
+    b = int(q).bit_length()
+    if window * q > 1 << beta:
+        raise ValueError(
+            f"lazy window overflows the Shoup operand range: "
+            f"window*q = {window * q} > 2^{beta}"
+        )
+    if b + (window.bit_length() - 1) + beta > 63:
+        raise ValueError(
+            f"Shoup product v*w' exceeds 63 bits: b={b}, window={window}, "
+            f"beta={beta}"
+        )
+
+
+def lazy_stage_bounds(window: int, n_stages: int, inverse: bool = False):
+    """(value_bound, in_stage_peak) per stage, in units of q.  The
+    butterflies below maintain value_bound = window across every stage;
+    the peak is the transient before the window subtract (CT: u + t <
+    window*q + 2q; GS: u + v < 2*window*q).  Baked into ChannelTables so
+    the invariant the kernels rely on is recorded next to the tables it
+    governs, and testable stage by stage."""
+    peak = 2 * window if inverse else window + 2
+    return tuple((window, peak) for _ in range(n_stages))
+
+
+def lazy_selects_per_stage(window: int, inverse: bool = False) -> int:
+    """Conditional subtractions (jnp.where -> select_n) one lazy butterfly
+    stage traces to — the unit of the ``reduction_ops`` cost model."""
+    if inverse:
+        return 2  # sum + difference window subtracts (both windows)
+    return 1 if window == 4 else 2
+
+
+def canonicalize_selects(window: int) -> int:
+    return 1 if window == 2 else 2
+
+
+def shoup_constants(table, q: int, beta: int) -> np.ndarray:
+    """w' = floor(w * 2^beta / q) per twiddle (host bigints, any shape)."""
+    tab = np.asarray(table, dtype=np.int64)
+    flat = [((int(w) << beta) // int(q)) for w in tab.reshape(-1)]
+    return np.array(flat, dtype=np.int64).reshape(tab.shape)
+
+
+def cond_sub(x, m):
+    """x - m if x >= m else x: ONE conditional (window) subtraction."""
+    return jnp.where(x >= m, x - m, x)
+
+
+def shoup_mul(v, w, w_shoup, q, beta: int):
+    """v * w mod q up to one extra q: output in [0, 2q), no conditional
+    subtraction.  Requires v <= 2^beta and w in [0, q) canonical (w is a
+    precomputed twiddle; w_shoup its Shoup constant)."""
+    return v * w - ((v * w_shoup) >> beta) * q
+
+
+def lazy_ct_butterfly(u, v, w, w_shoup, q, *, beta: int, window: int):
+    """DIT/CT butterfly keeping both outputs in [0, window*q).
+
+    window=4: 1 conditional subtraction (vs 5 strict); window=2: 2."""
+    t = shoup_mul(v, w, w_shoup, q, beta)  # [0, 2q)
+    if window == 4:
+        u = cond_sub(u, 2 * q)  # [0, 2q)
+        return u + t, u - t + 2 * q  # both [0, 4q)
+    x = cond_sub(u + t, 2 * q)
+    y = cond_sub(u - t + 2 * q, 2 * q)
+    return x, y
+
+
+def lazy_gs_butterfly(u, v, w, w_shoup, q, half, *, beta: int, window: int):
+    """Mirror-order GS butterfly with the Eq-24 halving folded in; values
+    stay in [0, window*q).  2 conditional subtractions either window."""
+    wq = window * q
+    s = cond_sub(u + v, wq)  # [0, window*q)
+    d = cond_sub(u - v + wq, wq)
+    d = shoup_mul(d, w, w_shoup, q, beta)  # [0, 2q) subset of window
+    return div2_mod(s, half), div2_mod(d, half)
+
+
+def canonicalize(x, q, window: int):
+    """[0, window*q) -> [0, q): the single exit reduce of a lazy
+    transform (O(1) selects per transform instead of O(log n))."""
+    if window == 4:
+        x = cond_sub(x, 2 * q)
+    return cond_sub(x, q)

@@ -64,6 +64,67 @@ def bit_reverse_indices(n: int) -> np.ndarray:
     return out
 
 
+# --------------------------------------------------------------------------
+# Four-step (Bailey) schedule: the SAME flow graph as the radix-2 loops,
+# re-grouped for the TPU lane geometry.  View the length-n polynomial as
+# an (n1, n2) tile (n2 = the lane-width factor): the first log2(n1)
+# radix-2 stages pair at strides that are multiples of n2 — they are
+# independent length-n1 column transforms whose twiddles are exactly the
+# fwd[:n1] prefix (brv of i < n1 over log2(n) bits = brv_{n1}(i) * n2, so
+# fwd[i] = (psi^{n2})^{brv_{n1}(i)}: the length-n1 NWC table for the root
+# psi^{n2}).  The remaining log2(n2) stages pair INSIDE each row; after a
+# tile transpose they pair along the sublane axis instead, with the
+# twist correction merged into per-row twiddle tables (gather below) the
+# same way the NWC weights psi are merged into the radix-2 twiddles —
+# zero extra multiplies and bit-identical output order.  Result: no
+# butterfly stage ever pairs along the lane axis at stride < n2.
+# --------------------------------------------------------------------------
+
+
+def four_step_split(n: int) -> tuple[int, int]:
+    """(n1, n2) tile for the lane-aligned schedule: n2 = 128 (the TPU
+    lane width) when n >= 256, else n // 2 so at least one column stage
+    exists.  Requires n a power of two >= 4."""
+    if n < 4 or n & (n - 1):
+        raise ValueError(
+            f"four_step schedule needs a power-of-two n >= 4, got n={n}"
+        )
+    n2 = 128 if n >= 256 else n // 2
+    return n // n2, n2
+
+
+def four_step_row_indices(n1: int, n2: int) -> np.ndarray:
+    """(n2, n1) gather into a length-n stage table: the row-stage twiddle
+    for transposed-tile entry (m', j) — m' = 2^k + l the DIT block index
+    of a length-n2 transform, j the original row — is
+    base[(n1 + j) * 2^k + l].  Applying this gather to ``fwd``/``inv``
+    yields the twist-merged row tables; entry m' = 0 is never read (the
+    stage loops slice [m : 2m] with m >= 1)."""
+    idx = np.zeros((n2, n1), dtype=np.int64)
+    for mp in range(1, n2):
+        k = mp.bit_length() - 1
+        low = mp - (1 << k)
+        for j in range(n1):
+            idx[mp, j] = ((n1 + j) << k) + low
+    return idx
+
+
+def stage_lane_strides(n: int, schedule: str) -> tuple[int, ...]:
+    """Butterfly pair distance along the LANE (last tile) axis per stage
+    of one transform — the structural definition the cost model's
+    ``sublane_stages`` count is computed from.  radix2 pairs in the flat
+    coefficient axis at strides n/2 .. 1; four_step pairs only along the
+    sublane axis of its (n1, n2) / transposed (n2, n1) tiles, so its
+    lane-axis distance is 0 at every stage."""
+    stages = n.bit_length() - 1
+    if schedule == "four_step":
+        four_step_split(n)  # validate n
+        return (0,) * stages
+    if schedule != "radix2":
+        raise ValueError(f"unknown concrete schedule {schedule!r}")
+    return tuple(n >> (s + 1) for s in range(stages))
+
+
 class NttTables(NamedTuple):
     """Per-modulus twiddle tables for the merged-weight NWC transforms."""
 
@@ -140,6 +201,76 @@ def intt_raw(a: jax.Array, inv: jax.Array, q, half, eps=None, shifts=None) -> ja
     return a
 
 
+def ntt_raw_four_step(a, fwd, row_fwd, q, eps=None, shifts=None) -> jax.Array:
+    """Forward NWC NTT via the lane-aligned four-step schedule —
+    bit-identical to :func:`ntt_raw` (same flow graph, re-grouped).
+
+    fwd: (n,) radix-2 table (columns use the [:n1] prefix); row_fwd:
+    (n2, n1) twist-merged row tables (``fwd[four_step_row_indices(...)]``).
+    Column stages pair along the n1 (sublane) axis; rows pair along the
+    former n2 axis after the tile transpose — never along lanes."""
+    n = a.shape[-1]
+    n2, n1 = row_fwd.shape
+    lead = a.shape[:-1]
+    x = a.reshape(lead + (n1, n2))
+    m, tc = 1, n1
+    while m < n1:
+        tc //= 2
+        w = fwd[m : 2 * m]
+        y = x.reshape(lead + (m, 2, tc, n2))
+        u = y[..., 0, :, :]
+        v = mul_mod(y[..., 1, :, :], w[:, None, None], q, eps, shifts)
+        x = jnp.stack([add_mod(u, v, q), sub_mod(u, v, q)], axis=-3)
+        x = x.reshape(lead + (n1, n2))
+        m *= 2
+    xt = jnp.swapaxes(x, -1, -2)  # (n2, n1): row stages pair on sublanes
+    m, tr = 1, n2
+    while m < n2:
+        tr //= 2
+        wr = row_fwd[m : 2 * m]  # (m, n1): per-row twist-merged twiddles
+        y = xt.reshape(lead + (m, 2, tr, n1))
+        u = y[..., 0, :, :]
+        v = mul_mod(y[..., 1, :, :], wr[:, None, :], q, eps, shifts)
+        xt = jnp.stack([add_mod(u, v, q), sub_mod(u, v, q)], axis=-3)
+        xt = xt.reshape(lead + (n2, n1))
+        m *= 2
+    return jnp.swapaxes(xt, -1, -2).reshape(lead + (n,))
+
+
+def intt_raw_four_step(a, inv, row_inv, q, half, eps=None, shifts=None) -> jax.Array:
+    """Inverse mirror of :func:`ntt_raw_four_step` — bit-identical to
+    :func:`intt_raw`.  Row stages (transposed tile) first, then column
+    stages, retracing the forward flow in reverse stage order."""
+    n = a.shape[-1]
+    n2, n1 = row_inv.shape
+    lead = a.shape[:-1]
+    xt = jnp.swapaxes(a.reshape(lead + (n1, n2)), -1, -2)  # (n2, n1)
+    h, tr = n2 // 2, 1
+    while h >= 1:
+        wr = row_inv[h : 2 * h]  # (h, n1)
+        y = xt.reshape(lead + (h, 2, tr, n1))
+        u, v = y[..., 0, :, :], y[..., 1, :, :]
+        s = add_mod(u, v, q)
+        d = mul_mod(sub_mod(u, v, q), wr[:, None, :], q, eps, shifts)
+        xt = jnp.stack([div2_mod(s, half), div2_mod(d, half)], axis=-3)
+        xt = xt.reshape(lead + (n2, n1))
+        h //= 2
+        tr *= 2
+    x = jnp.swapaxes(xt, -1, -2)  # back to (n1, n2)
+    h, tc = n1 // 2, 1
+    while h >= 1:
+        w = inv[h : 2 * h]
+        y = x.reshape(lead + (h, 2, tc, n2))
+        u, v = y[..., 0, :, :], y[..., 1, :, :]
+        s = add_mod(u, v, q)
+        d = mul_mod(sub_mod(u, v, q), w[:, None, None], q, eps, shifts)
+        x = jnp.stack([div2_mod(s, half), div2_mod(d, half)], axis=-3)
+        x = x.reshape(lead + (n1, n2))
+        h //= 2
+        tc *= 2
+    return x.reshape(lead + (n,))
+
+
 def ntt(a: jax.Array, tables: NttTables) -> jax.Array:
     return ntt_raw(
         a, jnp.asarray(tables.fwd), tables.q, tables.mul_eps, tables.mul_shifts
@@ -174,7 +305,9 @@ def negacyclic_mul(a: jax.Array, b: jax.Array, tables: NttTables) -> jax.Array:
 
 @dataclasses.dataclass(frozen=True, eq=False)  # identity hash: jit-static-safe
 class ChannelTables:
-    """Stacked per-channel twiddle tables + Barrett mul constants.
+    """Stacked per-channel twiddle tables + Barrett mul constants, plus
+    the four-step row-table layout and the Harvey lazy-reduction
+    (Shoup) constants with their window bookkeeping.
 
     Host arrays are the canonical values; the ``*_d`` cached properties
     hold the device-resident copies, uploaded exactly once per table
@@ -189,6 +322,18 @@ class ChannelTables:
     half: np.ndarray  # (t,)
     mul_eps: np.ndarray | None = None  # (t,) Barrett eps, None outside envelope
     mul_shifts: tuple[int, int] | None = None  # static shift pair
+    # four-step layout: (t, n2, n1) twist-merged row tables (columns use
+    # the fwd/inv [:, :n1] prefixes — no extra storage); None when n < 4
+    fs_row_fwd: np.ndarray | None = None
+    fs_row_inv: np.ndarray | None = None
+    # Harvey lazy reduction: per-twiddle Shoup constants, same layouts as
+    # their twiddle tables; None outside the 63-bit-safe lazy envelope
+    fwd_shoup: np.ndarray | None = None
+    inv_shoup: np.ndarray | None = None
+    fs_row_fwd_shoup: np.ndarray | None = None
+    fs_row_inv_shoup: np.ndarray | None = None
+    lazy_window: int | None = None  # butterfly values stay in [0, window*q)
+    shoup_beta: int | None = None  # static Shoup shift
 
     @property
     def n(self) -> int:
@@ -198,33 +343,87 @@ class ChannelTables:
     def t(self) -> int:
         return self.fwd.shape[0]
 
+    @property
+    def fs_split(self) -> tuple[int, int]:
+        return four_step_split(self.n)
+
+    def stage_bounds(self, inverse: bool = False):
+        """Per-stage (value_bound, peak) in units of q under the lazy
+        window — the bound bookkeeping validated at construction; None
+        when lazy reduction is unavailable (strict butterflies keep
+        everything canonical, bound 1)."""
+        if self.lazy_window is None:
+            return None
+        return modmath.lazy_stage_bounds(
+            self.lazy_window, self.n.bit_length() - 1, inverse=inverse
+        )
+
     # -- device-resident copies, uploaded once at construction time.
     # Eager (not lazy/cached) on purpose: a lazy first touch could happen
     # inside a jit trace, where jnp.asarray yields a tracer that must not
     # be cached.  Constructed host-side, these are concrete device arrays
     # that close over traces as constants.
     def __post_init__(self):
-        object.__setattr__(self, "qs_d", jnp.asarray(self.qs))
-        object.__setattr__(self, "fwd_d", jnp.asarray(self.fwd))
-        object.__setattr__(self, "inv_d", jnp.asarray(self.inv))
-        object.__setattr__(self, "half_d", jnp.asarray(self.half))
-        object.__setattr__(
-            self,
-            "mul_eps_d",
-            None if self.mul_eps is None else jnp.asarray(self.mul_eps),
-        )
+        if self.lazy_window is not None:
+            for q in np.atleast_1d(self.qs):
+                modmath.validate_lazy_envelope(
+                    int(q), self.lazy_window, self.shoup_beta
+                )
+        for name in (
+            "qs",
+            "fwd",
+            "inv",
+            "half",
+            "mul_eps",
+            "fs_row_fwd",
+            "fs_row_inv",
+            "fwd_shoup",
+            "inv_shoup",
+            "fs_row_fwd_shoup",
+            "fs_row_inv_shoup",
+        ):
+            host = getattr(self, name)
+            object.__setattr__(
+                self, name + "_d", None if host is None else jnp.asarray(host)
+            )
 
 
 def make_channel_tables(qs, n: int) -> ChannelTables:
     tabs = [make_tables(int(q), n) for q in qs]
     eps, shifts = modmath.mul_barrett_constants([t.q for t in tabs])
+    fwd = np.stack([t.fwd for t in tabs])
+    inv = np.stack([t.inv for t in tabs])
+    fs_row_fwd = fs_row_inv = None
+    if n >= 4:
+        idx = four_step_row_indices(*four_step_split(n))
+        fs_row_fwd = fwd[:, idx]  # (t, n2, n1)
+        fs_row_inv = inv[:, idx]
+    window, beta = modmath.lazy_params([t.q for t in tabs])
+    shoups = {}
+    if window is not None:
+        for name, tab in (
+            ("fwd_shoup", fwd), ("inv_shoup", inv),
+            ("fs_row_fwd_shoup", fs_row_fwd), ("fs_row_inv_shoup", fs_row_inv),
+        ):
+            if tab is not None:
+                shoups[name] = np.stack(
+                    [
+                        modmath.shoup_constants(tab[i], int(t.q), beta)
+                        for i, t in enumerate(tabs)
+                    ]
+                )
     return ChannelTables(
         qs=np.array([t.q for t in tabs], dtype=np.int64),
-        fwd=np.stack([t.fwd for t in tabs]),
-        inv=np.stack([t.inv for t in tabs]),
+        fwd=fwd,
+        inv=inv,
         half=np.array([t.half for t in tabs], dtype=np.int64),
         mul_eps=eps,
         mul_shifts=shifts,
+        fs_row_fwd=fs_row_fwd,
+        fs_row_inv=fs_row_inv,
+        lazy_window=window,
+        shoup_beta=beta,
+        **shoups,
     )
 
 
@@ -235,27 +434,43 @@ def _eps_axes(ct: ChannelTables):
     return ct.mul_eps_d, 0
 
 
-def ntt_channels(a: jax.Array, ct: ChannelTables) -> jax.Array:
+def ntt_channels(
+    a: jax.Array, ct: ChannelTables, schedule: str = "radix2"
+) -> jax.Array:
     """a: (t, ..., n) -> (t, ..., n), channel c transformed mod qs[c]."""
     eps, ax = _eps_axes(ct)
+    if schedule == "four_step":
+        fn = functools.partial(ntt_raw_four_step, shifts=ct.mul_shifts)
+        return jax.vmap(fn, in_axes=(0, 0, 0, 0, ax))(
+            a, ct.fwd_d, ct.fs_row_fwd_d, ct.qs_d, eps
+        )
     fn = functools.partial(ntt_raw, shifts=ct.mul_shifts)
     return jax.vmap(fn, in_axes=(0, 0, 0, ax))(a, ct.fwd_d, ct.qs_d, eps)
 
 
-def intt_channels(a: jax.Array, ct: ChannelTables) -> jax.Array:
+def intt_channels(
+    a: jax.Array, ct: ChannelTables, schedule: str = "radix2"
+) -> jax.Array:
     eps, ax = _eps_axes(ct)
+    if schedule == "four_step":
+        fn = functools.partial(intt_raw_four_step, shifts=ct.mul_shifts)
+        return jax.vmap(fn, in_axes=(0, 0, 0, 0, 0, ax))(
+            a, ct.inv_d, ct.fs_row_inv_d, ct.qs_d, ct.half_d, eps
+        )
     fn = functools.partial(intt_raw, shifts=ct.mul_shifts)
     return jax.vmap(fn, in_axes=(0, 0, 0, 0, ax))(
         a, ct.inv_d, ct.qs_d, ct.half_d, eps
     )
 
 
-def negacyclic_mul_channels(a, b, ct: ChannelTables) -> jax.Array:
+def negacyclic_mul_channels(
+    a, b, ct: ChannelTables, schedule: str = "radix2"
+) -> jax.Array:
     """(t, ..., n) x (t, ..., n) — the full RNS-parallel no-shuffle cascade."""
     bshape = (ct.t,) + (1,) * (a.ndim - 1)
     q_b = ct.qs_d.reshape(bshape)
     eps_b = None if ct.mul_eps is None else ct.mul_eps_d.reshape(bshape)
-    fa = ntt_channels(a, ct)
-    fb = ntt_channels(b, ct)
+    fa = ntt_channels(a, ct, schedule)
+    fb = ntt_channels(b, ct, schedule)
     prod = mul_mod(fa, fb, q_b, eps_b, ct.mul_shifts)
-    return intt_channels(prod, ct)
+    return intt_channels(prod, ct, schedule)

@@ -23,11 +23,36 @@ from repro.core import rns as rns_mod
 # HBM).
 BACKENDS = ("jnp", "pallas", "pallas_fused", "pallas_fused_e2e")
 
+# NTT stage schedule (see repro.core.ntt / DESIGN.md §6): "radix2" is the
+# flat loop (late forward stages pair at lane stride < 128), "four_step"
+# the lane-aligned (n1, n2) tile schedule (no butterfly stage pairs along
+# the lane axis), "auto" picks four_step when n >= 256 (where the tile
+# reaches the full 128-lane width) and radix2 below.
+SCHEDULES = ("auto", "radix2", "four_step")
+
 
 def validate_backend(backend: str) -> str:
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}: expected one of {BACKENDS}")
     return backend
+
+
+def validate_schedule(schedule: str) -> str:
+    if schedule not in SCHEDULES:
+        raise ValueError(
+            f"unknown schedule {schedule!r}: expected one of {SCHEDULES}"
+        )
+    return schedule
+
+
+def resolve_schedule_for(n: int, schedule: str) -> str:
+    """'auto' -> the concrete schedule for a transform length n."""
+    validate_schedule(schedule)
+    if schedule == "auto":
+        return "four_step" if n >= 256 else "radix2"
+    if schedule == "four_step":
+        ntt_mod.four_step_split(n)  # raises for n the tile cannot serve
+    return schedule
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,6 +64,8 @@ class ParenttParams:
     plan: rns_mod.RnsPlan
     tables: ntt_mod.ChannelTables | None  # None for v > 31 (oracle-only)
     backend: str = "jnp"  # default datapath; per-call backend= overrides
+    schedule: str = "auto"  # NTT stage schedule; per-call schedule= overrides
+    row_blk: int | None = None  # kernel tile rows; None = per-kernel default
 
     @property
     def q(self) -> int:
@@ -50,6 +77,14 @@ class ParenttParams:
 
     def with_backend(self, backend: str) -> "ParenttParams":
         return dataclasses.replace(self, backend=validate_backend(backend))
+
+    def with_schedule(self, schedule: str) -> "ParenttParams":
+        return dataclasses.replace(self, schedule=validate_schedule(schedule))
+
+    def with_row_blk(self, row_blk: int | None) -> "ParenttParams":
+        if row_blk is not None and row_blk < 1:
+            raise ValueError(f"row_blk must be >= 1, got {row_blk}")
+        return dataclasses.replace(self, row_blk=row_blk)
 
 
 @functools.lru_cache(maxsize=None)
@@ -64,12 +99,20 @@ def _make_params_base(n: int, t: int, v: int) -> ParenttParams:
 
 
 def make_params(
-    n: int = 4096, t: int = 6, v: int = 30, backend: str = "jnp"
+    n: int = 4096, t: int = 6, v: int = 30, backend: str = "jnp",
+    schedule: str = "auto", row_blk: int | None = None,
 ) -> ParenttParams:
-    """Build (cached) params.  Backend variants of the same (n, t, v)
-    share one plan / table set, so twiddles upload to device once."""
-    base = _make_params_base(n, t, v)
-    return base if backend == "jnp" else base.with_backend(backend)
+    """Build (cached) params.  Backend/schedule/row_blk variants of the
+    same (n, t, v) share one plan / table set, so twiddles upload to
+    device once."""
+    p = _make_params_base(n, t, v)
+    if backend != "jnp":
+        p = p.with_backend(backend)
+    if schedule != "auto":
+        p = p.with_schedule(schedule)
+    if row_blk is not None:
+        p = p.with_row_blk(row_blk)
+    return p
 
 
 # Small presets used across tests (fast to build).

@@ -24,6 +24,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core import modmath
@@ -81,6 +82,74 @@ def decompose_stage(z, ch: rns_mod.ChannelDecompose, *, seg_count: int,
         else:
             acc = acc + (blk * ch.block_consts[rho]) % qi
     return modmath.barrett_reduce(acc, qi, epsa, sa1, sa2)
+
+
+def decompose_stage_dyn(z, *, qi, sau_eps, sau_s2, acc_eps, beta_e, beta_s,
+                        block_consts, v: int, seg_count: int, t_prime: int):
+    """Data-driven twin of :func:`decompose_stage` for the channel-tiled
+    e2e grid: per-channel constants arrive as traced scalars/vectors
+    (read from channel-indexed blocks) instead of python ints baked into
+    the closure, so ONE kernel body serves every RNS channel.
+
+    The SAU network becomes ``sum_k beta_s[k] * (x << beta_e[k]) - x``
+    with zero-signed padding entries contributing nothing; the only
+    per-channel Barrett shift that varies (s2 of the SAU window, v1 + 4)
+    is applied as a traced scalar shift.  Bit-identical to the
+    specialized circuits — asserted by the backend tests."""
+    s1 = v - 1
+
+    def sau(x):
+        return (beta_s * (x[..., None] << beta_e)).sum(axis=-1) - x
+
+    def red(x):
+        return modmath.barrett_reduce(x, qi, sau_eps, s1, sau_s2)
+
+    n_blocks = -(-seg_count // t_prime)
+    acc = jnp.zeros(z.shape[:-1], dtype=z.dtype)
+    for rho in range(n_blocks):
+        blk = z[..., rho * t_prime]
+        if t_prime > 1 and rho * t_prime + 1 < seg_count:
+            blk = blk + sau(z[..., rho * t_prime + 1])
+        for k in range(2, t_prime):
+            if rho * t_prime + k >= seg_count:
+                break
+            x = red(sau(z[..., rho * t_prime + k]))
+            for _ in range(k - 1):
+                x = red(sau(x))
+            blk = blk + x
+        blk = red(blk)
+        if rho == 0:
+            acc = acc + blk
+        else:
+            acc = acc + (blk * block_consts[rho]) % qi
+    # accumulator window is c = v + 3 for every channel => s2 = 4 static
+    return modmath.barrett_reduce(acc, qi, acc_eps, s1, 4)
+
+
+@functools.lru_cache(maxsize=None)
+def plan_dec_arrays(plan: rns_mod.RnsPlan) -> dict:
+    """Stacked (t, ...) numpy views of ``plan.dec`` for the channel-tiled
+    e2e grid (one row per channel, SAU terms zero-padded to the widest
+    channel).  Cached per plan object (plans hash by identity)."""
+    dec = require_dec(plan)
+    t = plan.t
+    t_max = max(len(c.beta_terms) for c in dec)
+    beta_e = np.zeros((t, t_max), dtype=np.int64)
+    beta_s = np.zeros((t, t_max), dtype=np.int64)
+    for i, c in enumerate(dec):
+        for j, (e, s) in enumerate(c.beta_terms):
+            beta_e[i, j] = e
+            beta_s[i, j] = s
+    return {
+        "sau_eps": np.array([c.sau_barrett[0] for c in dec], dtype=np.int64),
+        "sau_s2": np.array([c.sau_barrett[2] for c in dec], dtype=np.int64),
+        "acc_eps": np.array([c.acc_barrett[0] for c in dec], dtype=np.int64),
+        "beta_e": beta_e,
+        "beta_s": beta_s,
+        "block_consts": np.array(
+            [c.block_consts for c in dec], dtype=np.int64
+        ),
+    }
 
 
 def require_dec(plan: rns_mod.RnsPlan):

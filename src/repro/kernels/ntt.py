@@ -17,17 +17,32 @@ TPU mapping
   feed-forward datapath, Fig 10): CRT pre-processing, the cascade and
   CRT post-processing in ONE pallas_call, reusing the in-kernel stages
   of :mod:`repro.kernels.crt` — residue polynomials never exist in HBM
-  either; only segments enter and product limbs leave.
-* Butterfly pairing is expressed as reshapes (m, 2, t) of the trailing
-  axis.  Stages with pair stride >= 128 keep the lane dimension intact;
-  for stride < 128 a real-TPU deployment flips to the transposed-tile
-  schedule (see DESIGN.md §6) — numerically identical, validated here in
-  interpret mode.
+  either; only segments enter and product limbs leave.  Where the RNS
+  plan allows (`t >= 2` with in-kernel decompose constants), the grid
+  gains a channel-tiled axis: each grid step runs ONE channel's
+  specialized circuit with per-channel constants delivered as scalar
+  blocks (the data-driven decompose of :func:`repro.kernels.crt
+  .decompose_stage_dyn`), accumulating the Eq-10 contributions in the
+  revisited output block — per-step VMEM drops by t, so ``row_blk`` can
+  grow past the fixed DEFAULT_E2E_ROWS=1 static unroll.
+* Stage schedule (DESIGN.md §6): ``schedule="radix2"`` is the flat loop
+  whose late forward (early inverse) stages pair at lane strides < 128;
+  ``schedule="four_step"`` is the lane-aligned (n1, n2) tile schedule —
+  column stages pair along the sublane axis, then the tile is transposed
+  in VMEM and the row stages (twist-merged per-row twiddle tables) pair
+  along the sublane axis too, so NO butterfly stage ever pairs along the
+  lane axis at stride < 128.  The fused cascades keep the tiles
+  transposed across the pointwise product: two transposes per cascade
+  instead of four.
 * Butterfly modular arithmetic is imported from
   :mod:`repro.core.modmath` — the same helpers the pure-jnp reference
   oracle uses, so kernel and oracle cannot drift.  When ``shifts`` is
   given (static), the per-channel Barrett constant ``eps`` replaces the
-  generic ``%`` in the butterfly multiply (paper's Barrett PE).
+  generic ``%``; when ``lazy=(window, beta)`` is given the butterflies
+  switch to Harvey lazy reduction (Shoup twiddle products, values in
+  [0, window*q)) with ONE canonicalizing reduce at transform/cascade
+  exit — O(1) conditional subtractions per transform instead of 5 per
+  stage.
 
 VMEM budget per grid step (n = 4096, ROWS = 8, int64):
   a, b tiles 2 x 256 KiB + twiddles 2 x 32 KiB + scratch ≈ 0.8 MiB << 128 MiB.
@@ -42,78 +57,307 @@ from jax.experimental import pallas as pl
 
 from repro.core import modmath
 from repro.core.modmath import add_mod, div2_mod, mul_mod, sub_mod
-from repro.kernels.crt import compose_finalize, decompose_stage, require_dec
+from repro.kernels.crt import (
+    compose_finalize,
+    decompose_stage,
+    decompose_stage_dyn,
+    plan_dec_arrays,
+    require_dec,
+)
 
 DEFAULT_ROWS = 8
-DEFAULT_E2E_ROWS = 1  # polynomials per grid step of the fused e2e kernel
+DEFAULT_E2E_ROWS = 1  # polynomials per grid step, unrolled-channel kernel
+DEFAULT_E2E_ROWS_CHGRID = 4  # channel-tiled grid: per-step VMEM is ~1/t
 
 
-def _fwd_stages(a, fwd, q, eps=None, shifts=None):
-    """CT/DIT stages on the last axis of a (rows, n) tile."""
+# --------------------------------------------------------------------------
+# butterfly closures (strict Barrett vs Harvey lazy) and stage loops
+# --------------------------------------------------------------------------
+
+
+def _butterflies(q, half=None, eps=None, shifts=None, lazy=None):
+    """(ct, gs) butterfly pair.  Strict: canonical [0, q) values, 5
+    conditional subtractions per stage.  Lazy (window, beta): values stay
+    in [0, window*q), 1-2 conditional subtractions per stage."""
+    if lazy is not None:
+        window, beta = lazy
+
+        def ct(u, v, w, ws):
+            return modmath.lazy_ct_butterfly(
+                u, v, w, ws, q, beta=beta, window=window
+            )
+
+        def gs(u, v, w, ws):
+            return modmath.lazy_gs_butterfly(
+                u, v, w, ws, q, half, beta=beta, window=window
+            )
+
+    else:
+
+        def ct(u, v, w, ws):
+            p = mul_mod(v, w, q, eps, shifts)
+            return add_mod(u, p, q), sub_mod(u, p, q)
+
+        def gs(u, v, w, ws):
+            s = add_mod(u, v, q)
+            d = mul_mod(sub_mod(u, v, q), w, q, eps, shifts)
+            return div2_mod(s, half), div2_mod(d, half)
+
+    return ct, gs
+
+
+def _canon(x, q, lazy):
+    """The single exit reduce of a lazy transform; identity when strict."""
+    return x if lazy is None else modmath.canonicalize(x, q, lazy[0])
+
+
+def _slc(tab, lo, hi, bcast):
+    """Static twiddle-table slice, reshaped for broadcast; None-safe for
+    the shoup table of a strict transform."""
+    if tab is None:
+        return None
+    return jax.lax.slice_in_dim(tab, lo, hi)[bcast]
+
+
+_B2 = (None, slice(None), None)  # (1, m, 1)          radix-2 tiles
+_B3C = (None, slice(None), None, None)  # (1, m, 1, 1)   four-step columns
+_B3R = (None, slice(None), None, slice(None))  # (1, m, 1, n1) rows
+
+
+def _radix2_fwd(a, fwd, fwd_sh, ct):
+    """CT/DIT stages on the last axis of a (rows, n) tile (flat
+    schedule: stage pair stride n/2 .. 1)."""
     rows, n = a.shape
     m, t = 1, n
     while m < n:
         t //= 2
-        w = jax.lax.slice_in_dim(fwd, m, 2 * m)  # static bounds
+        w = _slc(fwd, m, 2 * m, _B2)
+        ws = _slc(fwd_sh, m, 2 * m, _B2)
         x = a.reshape(rows, m, 2, t)
-        u = x[:, :, 0, :]
-        v = mul_mod(x[:, :, 1, :], w[None, :, None], q, eps, shifts)
-        a = jnp.stack([add_mod(u, v, q), sub_mod(u, v, q)], axis=2).reshape(rows, n)
+        hi, lo = ct(x[:, :, 0, :], x[:, :, 1, :], w, ws)
+        a = jnp.stack([hi, lo], axis=2).reshape(rows, n)
         m *= 2
     return a
 
 
-def _inv_stages(a, inv, q, half, eps=None, shifts=None):
+def _radix2_inv(a, inv, inv_sh, gs):
     """Mirror-order GS stages with the per-stage halving (Fig 9 PE)."""
     rows, n = a.shape
     h, t = n // 2, 1
     while h >= 1:
-        w = jax.lax.slice_in_dim(inv, h, 2 * h)
+        w = _slc(inv, h, 2 * h, _B2)
+        ws = _slc(inv_sh, h, 2 * h, _B2)
         x = a.reshape(rows, h, 2, t)
-        u, v = x[:, :, 0, :], x[:, :, 1, :]
-        s = add_mod(u, v, q)
-        d = mul_mod(sub_mod(u, v, q), w[None, :, None], q, eps, shifts)
-        a = jnp.stack([div2_mod(s, half), div2_mod(d, half)], axis=2).reshape(rows, n)
+        s, d = gs(x[:, :, 0, :], x[:, :, 1, :], w, ws)
+        a = jnp.stack([s, d], axis=2).reshape(rows, n)
         h //= 2
         t *= 2
     return a
 
 
+def _fs_cols_fwd(x, fwd, fwd_sh, ct):
+    """Column stages on the (rows, n1, n2) tile: pairing along the n1
+    (sublane) axis, lane axis n2 intact; twiddles = fwd[:n1] prefix."""
+    rows, n1, n2 = x.shape
+    m, tc = 1, n1
+    while m < n1:
+        tc //= 2
+        w = _slc(fwd, m, 2 * m, _B3C)
+        ws = _slc(fwd_sh, m, 2 * m, _B3C)
+        y = x.reshape(rows, m, 2, tc, n2)
+        hi, lo = ct(y[:, :, 0], y[:, :, 1], w, ws)
+        x = jnp.stack([hi, lo], axis=2).reshape(rows, n1, n2)
+        m *= 2
+    return x
+
+
+def _fs_rows_fwd(xt, row_fwd, row_sh, ct):
+    """Row stages on the TRANSPOSED (rows, n2, n1) tile: pairing along
+    the n2 (sublane) axis with the (n2, n1) twist-merged row tables."""
+    rows, n2, n1 = xt.shape
+    m, tr = 1, n2
+    while m < n2:
+        tr //= 2
+        w = _slc(row_fwd, m, 2 * m, _B3R)
+        ws = _slc(row_sh, m, 2 * m, _B3R)
+        y = xt.reshape(rows, m, 2, tr, n1)
+        hi, lo = ct(y[:, :, 0], y[:, :, 1], w, ws)
+        xt = jnp.stack([hi, lo], axis=2).reshape(rows, n2, n1)
+        m *= 2
+    return xt
+
+
+def _fs_rows_inv(xt, row_inv, row_sh, gs):
+    rows, n2, n1 = xt.shape
+    h, tr = n2 // 2, 1
+    while h >= 1:
+        w = _slc(row_inv, h, 2 * h, _B3R)
+        ws = _slc(row_sh, h, 2 * h, _B3R)
+        y = xt.reshape(rows, h, 2, tr, n1)
+        s, d = gs(y[:, :, 0], y[:, :, 1], w, ws)
+        xt = jnp.stack([s, d], axis=2).reshape(rows, n2, n1)
+        h //= 2
+        tr *= 2
+    return xt
+
+
+def _fs_cols_inv(x, inv, inv_sh, gs):
+    rows, n1, n2 = x.shape
+    h, tc = n1 // 2, 1
+    while h >= 1:
+        w = _slc(inv, h, 2 * h, _B3C)
+        ws = _slc(inv_sh, h, 2 * h, _B3C)
+        y = x.reshape(rows, h, 2, tc, n2)
+        s, d = gs(y[:, :, 0], y[:, :, 1], w, ws)
+        x = jnp.stack([s, d], axis=2).reshape(rows, n1, n2)
+        h //= 2
+        tc *= 2
+    return x
+
+
+def _fwd_stages(a, tabs, ct, *, schedule, to_transposed=False):
+    """One forward transform of a (rows, n) tile.
+
+    tabs = (fwd, fwd_shoup, row_fwd, row_fwd_shoup); the shoup entries
+    are None for strict butterflies, the row entries for radix2.  With
+    ``to_transposed`` the four-step result is returned as the
+    (rows, n2, n1) transposed tile so a fused cascade can run the
+    pointwise product and start the inverse without transposing back."""
+    fwd, fwd_sh, row_fwd, row_sh = tabs
+    if schedule != "four_step":
+        return _radix2_fwd(a, fwd, fwd_sh, ct)
+    rows, n = a.shape
+    n2, n1 = row_fwd.shape
+    x = _fs_cols_fwd(a.reshape(rows, n1, n2), fwd, fwd_sh, ct)
+    xt = _fs_rows_fwd(jnp.swapaxes(x, -1, -2), row_fwd, row_sh, ct)
+    if to_transposed:
+        return xt
+    return jnp.swapaxes(xt, -1, -2).reshape(rows, n)
+
+
+def _inv_stages(a, tabs, gs, *, schedule, from_transposed=False):
+    """One inverse transform; accepts the transposed tile when the
+    caller (fused cascade) kept it transposed through the product."""
+    inv, inv_sh, row_inv, row_sh = tabs
+    if schedule != "four_step":
+        return _radix2_inv(a, inv, inv_sh, gs)
+    n2, n1 = row_inv.shape
+    rows = a.shape[0]
+    if from_transposed:
+        xt = a
+    else:
+        xt = jnp.swapaxes(a.reshape(rows, n1, n2), -1, -2)
+    xt = _fs_rows_inv(xt, row_inv, row_sh, gs)
+    x = _fs_cols_inv(jnp.swapaxes(xt, -1, -2), inv, inv_sh, gs)
+    return x.reshape(rows, n1 * n2)
+
+
+def _cascade(a, b, ftabs, itabs, q, half, eps, shifts, lazy, schedule):
+    """NTT(a) ⊙ NTT(b) -> iNTT entirely in VMEM.  Four-step tiles stay
+    transposed across the pointwise product (2 transposes per cascade,
+    not 4); lazy values are canonicalized once before the product (Shoup
+    needs one canonical operand-pair) and once at exit."""
+    ct, gs = _butterflies(q, half=half, eps=eps, shifts=shifts, lazy=lazy)
+    tr = schedule == "four_step"
+    fa = _canon(_fwd_stages(a, ftabs, ct, schedule=schedule, to_transposed=tr), q, lazy)
+    fb = _canon(_fwd_stages(b, ftabs, ct, schedule=schedule, to_transposed=tr), q, lazy)
+    prod = mul_mod(fa, fb, q, eps, shifts)
+    out = _inv_stages(prod, itabs, gs, schedule=schedule, from_transposed=tr)
+    return _canon(out, q, lazy)
+
+
 # --------------------------------------------------------------------------
-# kernels (shifts is a static closure arg; eps_ref is a dummy zero block
-# when shifts is None and the butterflies fall back to generic %)
+# kernels (shifts/schedule/lazy are static closure args; eps_ref is a
+# dummy zero block when shifts is None and butterflies fall back to %)
 # --------------------------------------------------------------------------
 
 
-def _ntt_kernel(q_ref, eps_ref, fwd_ref, a_ref, o_ref, *, shifts):
-    q = q_ref[0]
-    eps = eps_ref[0] if shifts is not None else None
-    o_ref[...] = _fwd_stages(a_ref[...], fwd_ref[...], q, eps, shifts)
+def _take(it, cond):
+    return next(it) if cond else None
 
 
-def _intt_kernel(q_ref, eps_ref, half_ref, inv_ref, a_ref, o_ref, *, shifts):
-    q = q_ref[0]
-    eps = eps_ref[0] if shifts is not None else None
-    half = half_ref[0]
-    o_ref[...] = _inv_stages(a_ref[...], inv_ref[...], q, half, eps, shifts)
+def _ref_or_none(ref):
+    return None if ref is None else ref[...]
 
 
-def _fused_kernel(
-    q_ref, eps_ref, half_ref, fwd_ref, inv_ref, a_ref, b_ref, o_ref, *, shifts
-):
-    q = q_ref[0]
-    eps = eps_ref[0] if shifts is not None else None
-    half = half_ref[0]
-    fa = _fwd_stages(a_ref[...], fwd_ref[...], q, eps, shifts)
-    fb = _fwd_stages(b_ref[...], fwd_ref[...], q, eps, shifts)
-    prod = mul_mod(fa, fb, q, eps, shifts)  # never leaves VMEM
-    o_ref[...] = _inv_stages(prod, inv_ref[...], q, half, eps, shifts)
+def _make_ntt_kernel(shifts, schedule, lazy):
+    four = schedule == "four_step"
+
+    def kernel(*refs):
+        it = iter(refs)
+        q_ref, eps_ref, fwd_ref = next(it), next(it), next(it)
+        fwd_sh = _ref_or_none(_take(it, lazy is not None))
+        row_fwd = _ref_or_none(_take(it, four))
+        row_sh = _ref_or_none(_take(it, four and lazy is not None))
+        a_ref, o_ref = next(it), next(it)
+        q = q_ref[0]
+        eps = eps_ref[0] if shifts is not None else None
+        ct, _ = _butterflies(q, eps=eps, shifts=shifts, lazy=lazy)
+        out = _fwd_stages(
+            a_ref[...], (fwd_ref[...], fwd_sh, row_fwd, row_sh), ct,
+            schedule=schedule,
+        )
+        o_ref[...] = _canon(out, q, lazy)
+
+    return kernel
 
 
-def _fused_e2e_kernel(
-    fwd_ref, inv_ref, star_ref, qlimb_ref, za_ref, zb_ref, o_ref,
-    *, plan, scalars, shifts
-):
+def _make_intt_kernel(shifts, schedule, lazy):
+    four = schedule == "four_step"
+
+    def kernel(*refs):
+        it = iter(refs)
+        q_ref, eps_ref, half_ref, inv_ref = next(it), next(it), next(it), next(it)
+        inv_sh = _ref_or_none(_take(it, lazy is not None))
+        row_inv = _ref_or_none(_take(it, four))
+        row_sh = _ref_or_none(_take(it, four and lazy is not None))
+        a_ref, o_ref = next(it), next(it)
+        q = q_ref[0]
+        eps = eps_ref[0] if shifts is not None else None
+        half = half_ref[0]
+        _, gs = _butterflies(q, half=half, eps=eps, shifts=shifts, lazy=lazy)
+        out = _inv_stages(
+            a_ref[...], (inv_ref[...], inv_sh, row_inv, row_sh), gs,
+            schedule=schedule,
+        )
+        o_ref[...] = _canon(out, q, lazy)
+
+    return kernel
+
+
+def _make_fused_kernel(shifts, schedule, lazy):
+    four = schedule == "four_step"
+
+    def kernel(*refs):
+        it = iter(refs)
+        q_ref, eps_ref, half_ref = next(it), next(it), next(it)
+        fwd_ref, inv_ref = next(it), next(it)
+        fwd_sh = _ref_or_none(_take(it, lazy is not None))
+        inv_sh = _ref_or_none(_take(it, lazy is not None))
+        row_fwd = _ref_or_none(_take(it, four))
+        row_inv = _ref_or_none(_take(it, four))
+        row_fsh = _ref_or_none(_take(it, four and lazy is not None))
+        row_ish = _ref_or_none(_take(it, four and lazy is not None))
+        a_ref, b_ref, o_ref = next(it), next(it), next(it)
+        q = q_ref[0]
+        eps = eps_ref[0] if shifts is not None else None
+        half = half_ref[0]
+        o_ref[...] = _cascade(
+            a_ref[...], b_ref[...],
+            (fwd_ref[...], fwd_sh, row_fwd, row_fsh),
+            (inv_ref[...], inv_sh, row_inv, row_ish),
+            q, half, eps, shifts, lazy, schedule,
+        )
+
+    return kernel
+
+
+def _chan_tabs(ref, i):
+    """Channel i's slice of a stacked (t, ...) table ref; None-safe."""
+    return None if ref is None else ref[i]
+
+
+def _make_fused_e2e_kernel(plan, scalars, shifts, schedule, lazy):
     """The paper's full feed-forward datapath in ONE kernel: CRT
     pre-processing, the per-channel NTT -> ⊙ -> iNTT cascade and CRT
     post-processing, with every residue polynomial VMEM-resident.
@@ -122,27 +366,108 @@ def _fused_e2e_kernel(
     paper's t parallel specialized circuits, its moduli/Barrett/SAU
     constants baked in from the plan (``plan.dec`` + ``scalars``), its
     twiddles read from the (t, n) VMEM table blocks.  Only the segment
-    tiles enter and the limb tile leaves through HBM.
-    """
-    za = za_ref[...]  # (blk, n, S)
-    zb = zb_ref[...]
-    acc = jnp.zeros(za.shape[:-1] + (plan.L,), dtype=za.dtype)
-    for i, (qi, half, eps) in enumerate(scalars):
-        ch = plan.dec[i]
-        # Step 1: residual computation (Alg 2, SAU circuit)
-        ra = decompose_stage(za, ch, seg_count=plan.seg_count,
-                             t_prime=plan.t_prime)  # (blk, n)
-        rb = decompose_stage(zb, ch, seg_count=plan.seg_count,
-                             t_prime=plan.t_prime)
-        # Step 2: no-shuffle NTT cascade, product never leaves VMEM
-        fa = _fwd_stages(ra, fwd_ref[i], qi, eps, shifts)
-        fb = _fwd_stages(rb, fwd_ref[i], qi, eps, shifts)
-        prod = mul_mod(fa, fb, qi, eps, shifts)
-        pi = _inv_stages(prod, inv_ref[i], qi, half, eps, shifts)
-        # Step 3: this channel's Eq-10 contribution y_i * q_i^
-        y = mul_mod(pi, int(plan.qi_tilde[i]), qi, eps, shifts)
-        acc = acc + y[..., None] * star_ref[i][None, None, :]
-    o_ref[...] = compose_finalize(acc, qlimb_ref[0], w=plan.w, t=plan.t)
+    tiles enter and the limb tile leaves through HBM."""
+    four = schedule == "four_step"
+
+    def kernel(*refs):
+        it = iter(refs)
+        fwd_ref, inv_ref = next(it), next(it)
+        fwd_sh = _take(it, lazy is not None)
+        inv_sh = _take(it, lazy is not None)
+        row_fwd = _take(it, four)
+        row_inv = _take(it, four)
+        row_fsh = _take(it, four and lazy is not None)
+        row_ish = _take(it, four and lazy is not None)
+        star_ref, qlimb_ref, za_ref, zb_ref, o_ref = (
+            next(it), next(it), next(it), next(it), next(it)
+        )
+        za = za_ref[...]  # (blk, n, S)
+        zb = zb_ref[...]
+        acc = jnp.zeros(za.shape[:-1] + (plan.L,), dtype=za.dtype)
+        for i, (qi, half, eps) in enumerate(scalars):
+            ch = plan.dec[i]
+            # Step 1: residual computation (Alg 2, SAU circuit)
+            ra = decompose_stage(za, ch, seg_count=plan.seg_count,
+                                 t_prime=plan.t_prime)  # (blk, n)
+            rb = decompose_stage(zb, ch, seg_count=plan.seg_count,
+                                 t_prime=plan.t_prime)
+            # Step 2: no-shuffle NTT cascade, product never leaves VMEM
+            pi = _cascade(
+                ra, rb,
+                (fwd_ref[i], _chan_tabs(fwd_sh, i),
+                 _chan_tabs(row_fwd, i), _chan_tabs(row_fsh, i)),
+                (inv_ref[i], _chan_tabs(inv_sh, i),
+                 _chan_tabs(row_inv, i), _chan_tabs(row_ish, i)),
+                qi, half, eps, shifts, lazy, schedule,
+            )
+            # Step 3: this channel's Eq-10 contribution y_i * q_i^
+            y = mul_mod(pi, int(plan.qi_tilde[i]), qi, eps, shifts)
+            acc = acc + y[..., None] * star_ref[i][None, None, :]
+        o_ref[...] = compose_finalize(acc, qlimb_ref[0], w=plan.w, t=plan.t)
+
+    return kernel
+
+
+def _make_fused_e2e_chgrid_kernel(plan, shifts, schedule, lazy, t):
+    """Channel-tiled variant: grid (row_blocks, t), ONE channel per grid
+    step.  The per-channel SAU/Barrett/twiddle constants arrive as
+    channel-indexed blocks (the data-driven decompose), the Eq-10
+    contributions accumulate in the revisited output block, and the
+    carry/subtract finalize runs on the last channel step.  Per-step
+    VMEM is ~1/t of the unrolled kernel, so row_blk can grow."""
+    four = schedule == "four_step"
+
+    def kernel(*refs):
+        it = iter(refs)
+        (q_ref, eps_ref, half_ref, tilde_ref, sau_eps_ref, sau_s2_ref,
+         acc_eps_ref, beta_e_ref, beta_s_ref, bc_ref) = (
+            next(it) for _ in range(10)
+        )
+        fwd_ref, inv_ref = next(it), next(it)
+        fwd_sh = _ref_or_none(_take(it, lazy is not None))
+        inv_sh = _ref_or_none(_take(it, lazy is not None))
+        row_fwd = _ref_or_none(_take(it, four))
+        row_inv = _ref_or_none(_take(it, four))
+        row_fsh = _ref_or_none(_take(it, four and lazy is not None))
+        row_ish = _ref_or_none(_take(it, four and lazy is not None))
+        star_ref, qlimb_ref, za_ref, zb_ref, o_ref = (
+            next(it), next(it), next(it), next(it), next(it)
+        )
+        c = pl.program_id(1)
+        qi = q_ref[0]
+        eps = eps_ref[0] if shifts is not None else None
+        half = half_ref[0]
+        dec = functools.partial(
+            decompose_stage_dyn,
+            qi=qi, sau_eps=sau_eps_ref[0], sau_s2=sau_s2_ref[0],
+            acc_eps=acc_eps_ref[0], beta_e=beta_e_ref[...],
+            beta_s=beta_s_ref[...], block_consts=bc_ref[...],
+            v=plan.v, seg_count=plan.seg_count, t_prime=plan.t_prime,
+        )
+        ra = dec(za_ref[...])  # (blk, n)
+        rb = dec(zb_ref[...])
+        pi = _cascade(
+            ra, rb,
+            (fwd_ref[...], fwd_sh, row_fwd, row_fsh),
+            (inv_ref[...], inv_sh, row_inv, row_ish),
+            qi, half, eps, shifts, lazy, schedule,
+        )
+        y = mul_mod(pi, tilde_ref[0], qi, eps, shifts)
+        contrib = y[..., None] * star_ref[...][None, None, :]
+
+        @pl.when(c == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += contrib
+
+        @pl.when(c == t - 1)
+        def _finalize():
+            o_ref[...] = compose_finalize(
+                o_ref[...], qlimb_ref[0], w=plan.w, t=plan.t
+            )
+
+    return kernel
 
 
 # --------------------------------------------------------------------------
@@ -174,46 +499,132 @@ def _eps_block(eps, qs, t):
     return eps.reshape(t, 1)
 
 
-@functools.partial(jax.jit, static_argnames=("shifts", "row_blk", "interpret"))
+def _stage_tables(inputs, specs, lazy, four, make_table_spec, make_fs_spec,
+                  shoups, rows, row_shoups):
+    """Append the optional shoup/four-step table inputs + specs.
+
+    ORDER CONTRACT (the single owner, used by every wrapper; the kernel
+    factories unpack with ``_take`` in the same order): [shoup
+    tables...] when lazy, then [four-step row tables...] when four, then
+    [their shoup tables...] when both.  ``shoups``/``rows``/
+    ``row_shoups`` are per-direction tuples (1 entry for the
+    single-direction kernels, fwd+inv for the fused ones);
+    ``make_table_spec``/``make_fs_spec`` build the grid-appropriate
+    BlockSpec from the array."""
+    if lazy is not None:
+        for x in shoups:
+            inputs.append(x)
+            specs.append(make_table_spec(x))
+    if four:
+        for x in rows:
+            inputs.append(x)
+            specs.append(make_fs_spec(x))
+        if lazy is not None:
+            for x in row_shoups:
+                inputs.append(x)
+                specs.append(make_fs_spec(x))
+
+
+# BlockSpec builders for the three grid layouts the tables ride in:
+# per-channel blocks on a (channels, row_blocks) grid, full blocks on a
+# (row_blocks,) grid, per-channel blocks on a (row_blocks, channels) grid.
+
+
+def _chan_table_spec(x):
+    return pl.BlockSpec((None, x.shape[-1]), lambda c, r: (c, 0))
+
+
+def _chan_fs_spec(x):
+    return pl.BlockSpec((None,) + x.shape[-2:], lambda c, r: (c, 0, 0))
+
+
+def _full_table_spec(x):
+    return pl.BlockSpec(x.shape, lambda r: (0,) * x.ndim)
+
+
+def _chgrid_table_spec(x):
+    return pl.BlockSpec((None, x.shape[-1]), lambda r, c: (c, 0))
+
+
+def _chgrid_fs_spec(x):
+    return pl.BlockSpec((None,) + x.shape[-2:], lambda r, c: (c, 0, 0))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("shifts", "schedule", "lazy", "row_blk", "interpret"),
+)
 def ntt_channels_pallas(
-    a, qs, fwd, eps=None, *, shifts=None, row_blk: int = DEFAULT_ROWS, interpret: bool = True
+    a, qs, fwd, eps=None, fwd_shoup=None, row_fwd=None, row_fwd_shoup=None,
+    *, shifts=None, schedule: str = "radix2", lazy=None,
+    row_blk: int = DEFAULT_ROWS, interpret: bool = True,
 ):
-    """a: (t, rows, n) -> forward NTT per channel.  qs: (t,), fwd: (t, n)."""
+    """a: (t, rows, n) -> forward NTT per channel.  qs: (t,), fwd: (t, n);
+    row_fwd: (t, n2, n1) twist-merged row tables (four_step only); the
+    *_shoup tables ride along when lazy=(window, beta)."""
     t, _, n = a.shape
     a, rows = _pad_rows(a, row_blk)
     scalar, table, data = _grid_specs(t, a.shape[1], n, row_blk)
+    inputs = [qs.reshape(t, 1), _eps_block(eps, qs, t), fwd]
+    specs = [scalar, scalar, table]
+    _stage_tables(
+        inputs, specs, lazy, schedule == "four_step",
+        _chan_table_spec, _chan_fs_spec,
+        (fwd_shoup,), (row_fwd,), (row_fwd_shoup,),
+    )
+    inputs.append(a)
+    specs.append(data)
     out = pl.pallas_call(
-        functools.partial(_ntt_kernel, shifts=shifts),
+        _make_ntt_kernel(shifts, schedule, lazy),
         grid=(t, a.shape[1] // row_blk),
-        in_specs=[scalar, scalar, table, data],
+        in_specs=specs,
         out_specs=data,
         out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
         interpret=interpret,
-    )(qs.reshape(t, 1), _eps_block(eps, qs, t), fwd, a)
+    )(*inputs)
     return out[:, :rows]
 
 
-@functools.partial(jax.jit, static_argnames=("shifts", "row_blk", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("shifts", "schedule", "lazy", "row_blk", "interpret"),
+)
 def intt_channels_pallas(
-    a, qs, half, inv, eps=None, *, shifts=None, row_blk: int = DEFAULT_ROWS, interpret: bool = True
+    a, qs, half, inv, eps=None, inv_shoup=None, row_inv=None, row_inv_shoup=None,
+    *, shifts=None, schedule: str = "radix2", lazy=None,
+    row_blk: int = DEFAULT_ROWS, interpret: bool = True,
 ):
     t, _, n = a.shape
     a, rows = _pad_rows(a, row_blk)
     scalar, table, data = _grid_specs(t, a.shape[1], n, row_blk)
+    inputs = [qs.reshape(t, 1), _eps_block(eps, qs, t), half.reshape(t, 1), inv]
+    specs = [scalar, scalar, scalar, table]
+    _stage_tables(
+        inputs, specs, lazy, schedule == "four_step",
+        _chan_table_spec, _chan_fs_spec,
+        (inv_shoup,), (row_inv,), (row_inv_shoup,),
+    )
+    inputs.append(a)
+    specs.append(data)
     out = pl.pallas_call(
-        functools.partial(_intt_kernel, shifts=shifts),
+        _make_intt_kernel(shifts, schedule, lazy),
         grid=(t, a.shape[1] // row_blk),
-        in_specs=[scalar, scalar, scalar, table, data],
+        in_specs=specs,
         out_specs=data,
         out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
         interpret=interpret,
-    )(qs.reshape(t, 1), _eps_block(eps, qs, t), half.reshape(t, 1), inv, a)
+    )(*inputs)
     return out[:, :rows]
 
 
-@functools.partial(jax.jit, static_argnames=("shifts", "row_blk", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("shifts", "schedule", "lazy", "row_blk", "interpret"),
+)
 def fused_polymul_pallas(
-    a, b, qs, half, fwd, inv, eps=None, *, shifts=None,
+    a, b, qs, half, fwd, inv, eps=None, fwd_shoup=None, inv_shoup=None,
+    row_fwd=None, row_inv=None, row_fwd_shoup=None, row_inv_shoup=None,
+    *, shifts=None, schedule: str = "radix2", lazy=None,
     row_blk: int = DEFAULT_ROWS, interpret: bool = True,
 ):
     """(t, rows, n) x (t, rows, n) -> negacyclic products, fused cascade."""
@@ -221,70 +632,156 @@ def fused_polymul_pallas(
     a, rows = _pad_rows(a, row_blk)
     b, _ = _pad_rows(b, row_blk)
     scalar, table, data = _grid_specs(t, a.shape[1], n, row_blk)
+    inputs = [
+        qs.reshape(t, 1), _eps_block(eps, qs, t), half.reshape(t, 1), fwd, inv,
+    ]
+    specs = [scalar, scalar, scalar, table, table]
+    _stage_tables(
+        inputs, specs, lazy, schedule == "four_step",
+        _chan_table_spec, _chan_fs_spec,
+        (fwd_shoup, inv_shoup), (row_fwd, row_inv),
+        (row_fwd_shoup, row_inv_shoup),
+    )
+    inputs += [a, b]
+    specs += [data, data]
     out = pl.pallas_call(
-        functools.partial(_fused_kernel, shifts=shifts),
+        _make_fused_kernel(shifts, schedule, lazy),
         grid=(t, a.shape[1] // row_blk),
-        in_specs=[scalar, scalar, scalar, table, table, data, data],
+        in_specs=specs,
         out_specs=data,
         out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
         interpret=interpret,
-    )(
-        qs.reshape(t, 1),
-        _eps_block(eps, qs, t),
-        half.reshape(t, 1),
-        fwd,
-        inv,
-        a,
-        b,
-    )
+    )(*inputs)
     return out[:, :rows]
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "row_blk", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "plan", "schedule", "lazy", "channel_grid", "row_blk", "interpret",
+    ),
+)
 def fused_e2e_polymul_pallas(
-    za, zb, fwd, inv, star, q_limbs, *, plan,
-    row_blk: int = DEFAULT_E2E_ROWS, interpret: bool = True,
+    za, zb, fwd, inv, star, q_limbs, fwd_shoup=None, inv_shoup=None,
+    row_fwd=None, row_inv=None, row_fwd_shoup=None, row_inv_shoup=None,
+    *, plan, schedule: str = "radix2", lazy=None,
+    channel_grid: bool | None = None, row_blk: int | None = None,
+    interpret: bool = True,
 ):
     """za, zb: (rows, n, S) base-2^v segment tiles -> (rows, n, L) limbs
     of the negacyclic products mod q: decompose -> NTT -> ⊙ -> iNTT ->
     compose inside ONE pallas_call.
 
     fwd/inv: (t, n) twiddle tables, star: (t, L) q_i^ limbs, q_limbs:
-    (L,) — all device-resident uploads off the tables/plan.  Grid is
-    (row_blocks,): unlike the per-stage kernels there is no channel grid
-    axis, because the Eq-10 recombination needs all t channels of a
-    coefficient in one grid step; the channel loop unrolls inside.
+    (L,) — all device-resident uploads off the tables/plan.  Grid:
+
+    * ``channel_grid=False`` — (row_blocks,): the channel loop unrolls
+      inside the kernel (every channel's circuit in one grid step, the
+      Eq-10 recombination done in registers).
+    * ``channel_grid=True`` (default whenever t >= 2) — (row_blocks, t):
+      one channel per grid step with per-channel constants as
+      channel-indexed blocks; Eq-10 contributions accumulate in the
+      revisited output block (index map constant in the channel axis, so
+      the block stays VMEM-resident across the t inner steps — no extra
+      HBM traffic) and the finalize runs on the last channel step.
 
     VMEM per grid step at the paper's point (n=4096, t=6, S=6, L=7,
-    row_blk=1, int64): segments 2 x 192 KiB + twiddles 2 x 192 KiB +
-    per-channel scratch ~3 x 32 KiB + limb acc 224 KiB ~= 1 MiB << 16 MiB.
+    int64): unrolled row_blk=1 ~= 1 MiB; channel grid row_blk=4 ~= 1.5
+    MiB — both << 16 MiB.
     """
     require_dec(plan)
     rows, n, S = za.shape
     t, L = plan.t, plan.L
     scalars, shifts = modmath.channel_mul_constants(plan.qs)
+    if channel_grid is None:
+        channel_grid = t >= 2
+    if row_blk is None:
+        row_blk = DEFAULT_E2E_ROWS_CHGRID if channel_grid else DEFAULT_E2E_ROWS
     pad = (-rows) % row_blk
     if pad:
         zpad = ((0, pad), (0, 0), (0, 0))
         za = jnp.pad(za, zpad)
         zb = jnp.pad(zb, zpad)
-    table = pl.BlockSpec((t, n), lambda r: (0, 0))
-    data = pl.BlockSpec((row_blk, n, S), lambda r: (r, 0, 0))
-    out = pl.pallas_call(
-        functools.partial(
-            _fused_e2e_kernel, plan=plan, scalars=scalars, shifts=shifts
-        ),
-        grid=(za.shape[0] // row_blk,),
-        in_specs=[
-            table,
-            table,
+    row_blocks = za.shape[0] // row_blk
+    four = schedule == "four_step"
+    if not channel_grid:
+        table = pl.BlockSpec((t, n), lambda r: (0, 0))
+        data = pl.BlockSpec((row_blk, n, S), lambda r: (r, 0, 0))
+        inputs = [fwd, inv]
+        specs = [table, table]
+        _stage_tables(
+            inputs, specs, lazy, four, _full_table_spec, _full_table_spec,
+            (fwd_shoup, inv_shoup), (row_fwd, row_inv),
+            (row_fwd_shoup, row_inv_shoup),
+        )
+        inputs += [star, q_limbs.reshape(1, L), za, zb]
+        specs += [
             pl.BlockSpec((t, L), lambda r: (0, 0)),
             pl.BlockSpec((1, L), lambda r: (0, 0)),
             data,
             data,
-        ],
-        out_specs=pl.BlockSpec((row_blk, n, L), lambda r: (r, 0, 0)),
+        ]
+        out = pl.pallas_call(
+            _make_fused_e2e_kernel(plan, scalars, shifts, schedule, lazy),
+            grid=(row_blocks,),
+            in_specs=specs,
+            out_specs=pl.BlockSpec((row_blk, n, L), lambda r: (r, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((za.shape[0], n, L), za.dtype),
+            interpret=interpret,
+        )(*inputs)
+        return out[:rows]
+    # channel-tiled grid: (row_blocks, t), channel axis innermost so the
+    # revisited output block accumulates in VMEM
+    dec_arrs = plan_dec_arrays(plan)
+    qs_d = jnp.asarray(plan.qs)
+    scal = pl.BlockSpec((None, 1), lambda r, c: (c, 0))
+    table = pl.BlockSpec((None, n), lambda r, c: (c, 0))
+    data = pl.BlockSpec((row_blk, n, S), lambda r, c: (r, 0, 0))
+
+    def vec_spec(x):
+        return pl.BlockSpec((None, x.shape[-1]), lambda r, c: (c, 0))
+
+    # per-channel (qi, half, eps) come from the SAME `scalars` tuple the
+    # unrolled kernel bakes into its closure, so the two e2e variants
+    # cannot disagree on the Barrett envelope
+    eps_arr = (
+        None
+        if scalars[0][2] is None
+        else jnp.asarray([s[2] for s in scalars])
+    )
+    inputs = [
+        qs_d.reshape(t, 1),
+        _eps_block(eps_arr, qs_d, t),
+        jnp.asarray([s[1] for s in scalars]).reshape(t, 1),
+        jnp.asarray(plan.qi_tilde).reshape(t, 1),
+        jnp.asarray(dec_arrs["sau_eps"]).reshape(t, 1),
+        jnp.asarray(dec_arrs["sau_s2"]).reshape(t, 1),
+        jnp.asarray(dec_arrs["acc_eps"]).reshape(t, 1),
+        jnp.asarray(dec_arrs["beta_e"]),
+        jnp.asarray(dec_arrs["beta_s"]),
+        jnp.asarray(dec_arrs["block_consts"]),
+    ]
+    specs = [scal] * 7 + [vec_spec(x) for x in inputs[7:]]
+    inputs += [fwd, inv]
+    specs += [table, table]
+    _stage_tables(
+        inputs, specs, lazy, four, _chgrid_table_spec, _chgrid_fs_spec,
+        (fwd_shoup, inv_shoup), (row_fwd, row_inv),
+        (row_fwd_shoup, row_inv_shoup),
+    )
+    inputs += [star, q_limbs.reshape(1, L), za, zb]
+    specs += [
+        pl.BlockSpec((None, L), lambda r, c: (c, 0)),
+        pl.BlockSpec((1, L), lambda r, c: (0, 0)),
+        data,
+        data,
+    ]
+    out = pl.pallas_call(
+        _make_fused_e2e_chgrid_kernel(plan, shifts, schedule, lazy, t),
+        grid=(row_blocks, t),
+        in_specs=specs,
+        out_specs=pl.BlockSpec((row_blk, n, L), lambda r, c: (r, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((za.shape[0], n, L), za.dtype),
         interpret=interpret,
-    )(fwd, inv, star, q_limbs.reshape(1, L), za, zb)
+    )(*inputs)
     return out[:rows]

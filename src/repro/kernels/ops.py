@@ -52,13 +52,21 @@ import jax.numpy as jnp
 from repro.core import modmath
 from repro.core import ntt as ntt_mod
 from repro.core import rns as rns_mod
-from repro.core.params import BACKENDS, ParenttParams, validate_backend
+from repro.core.params import (
+    BACKENDS,
+    SCHEDULES,
+    ParenttParams,
+    resolve_schedule_for,
+    validate_backend,
+)
 from repro.kernels import crt as crt_kernels
 from repro.kernels import ntt as ntt_kernels
 
 __all__ = [
     "BACKENDS",
+    "SCHEDULES",
     "resolve_backend",
+    "resolve_schedule",
     "ntt_forward",
     "ntt_inverse",
     "negacyclic_mul",
@@ -67,6 +75,8 @@ __all__ = [
     "fused_polymul_e2e",
     "hbm_traffic_model",
     "count_pallas_launches",
+    "transform_cost_model",
+    "count_reduction_selects",
 ]
 
 
@@ -95,6 +105,61 @@ def resolve_backend(
     if backend is None:
         backend = getattr(params, "backend", None) or "jnp"
     return validate_backend(backend)
+
+
+def resolve_schedule(params: ParenttParams, schedule: str | None = None) -> str:
+    """Pick the concrete NTT stage schedule: explicit ``schedule`` >
+    ``params.schedule`` > ``"auto"`` (four_step when n >= 256).  Unlike
+    :func:`resolve_backend`, params is required — auto resolution needs
+    the transform length."""
+    if schedule is None:
+        schedule = getattr(params, "schedule", None) or "auto"
+    return resolve_schedule_for(params.n, schedule)
+
+
+def _lazy_of(ct: ntt_mod.ChannelTables):
+    """(window, beta) for the Harvey lazy butterflies, or None when the
+    table set has no Shoup constants (outside the 63-bit envelope)."""
+    if ct.lazy_window is None or ct.mul_shifts is None:
+        return None
+    return (ct.lazy_window, ct.shoup_beta)
+
+
+def _sched_tables(ct: ntt_mod.ChannelTables, schedule: str, lazy, direction: str):
+    """(table, shoup, row_table, row_shoup) device arrays for one
+    transform direction under (schedule, lazy) — the positional tail the
+    kernel wrappers expect after their required args."""
+    four = schedule == "four_step"
+    if four and ct.fs_row_fwd is None:
+        raise ValueError(
+            f"four_step schedule unavailable for n={ct.n}: no row tables"
+        )
+    if direction == "fwd":
+        tab, sh, row, rsh = (
+            ct.fwd_d, ct.fwd_shoup_d, ct.fs_row_fwd_d, ct.fs_row_fwd_shoup_d
+        )
+    else:
+        tab, sh, row, rsh = (
+            ct.inv_d, ct.inv_shoup_d, ct.fs_row_inv_d, ct.fs_row_inv_shoup_d
+        )
+    return (
+        tab,
+        sh if lazy is not None else None,
+        row if four else None,
+        rsh if (four and lazy is not None) else None,
+    )
+
+
+def _kernel_kw(params: ParenttParams, schedule: str, lazy) -> dict:
+    kw = dict(
+        shifts=params.tables.mul_shifts,
+        schedule=schedule,
+        lazy=lazy,
+        interpret=not _is_tpu(),
+    )
+    if params.row_blk is not None:
+        kw["row_blk"] = params.row_blk
+    return kw
 
 
 # --------------------------------------------------------------------------
@@ -142,44 +207,51 @@ def _fold_rows(x):
 
 
 def ntt_forward(a, params: ParenttParams, *, backend: str | None = None,
-                use_pallas: bool | None = None):
+                use_pallas: bool | None = None, schedule: str | None = None):
     """a: (t, ..., n) -> forward NTT per RNS channel."""
     backend = _stage_backend(resolve_backend(params, backend, use_pallas))
+    schedule = resolve_schedule(params, schedule)
     ct = _require_tables(params, "ntt_forward")
     _check_residues(a, params, "ntt_forward")
     if backend == "jnp":
-        return ntt_mod.ntt_channels(a, ct)
+        return ntt_mod.ntt_channels(a, ct, schedule)
     a3, lead = _fold_rows(a)
+    lazy = _lazy_of(ct)
+    fwd, sh, row, rsh = _sched_tables(ct, schedule, lazy, "fwd")
     out = ntt_kernels.ntt_channels_pallas(
-        a3, ct.qs_d, ct.fwd_d, ct.mul_eps_d,
-        shifts=ct.mul_shifts, interpret=not _is_tpu(),
+        a3, ct.qs_d, fwd, ct.mul_eps_d, sh, row, rsh,
+        **_kernel_kw(params, schedule, lazy),
     )
     return out.reshape(a.shape[:1] + lead + a.shape[-1:])
 
 
 def ntt_inverse(a, params: ParenttParams, *, backend: str | None = None,
-                use_pallas: bool | None = None):
+                use_pallas: bool | None = None, schedule: str | None = None):
     """a: (t, ..., n) bit-reversed spectra -> natural-order coefficients."""
     backend = _stage_backend(resolve_backend(params, backend, use_pallas))
+    schedule = resolve_schedule(params, schedule)
     ct = _require_tables(params, "ntt_inverse")
     _check_residues(a, params, "ntt_inverse")
     if backend == "jnp":
-        return ntt_mod.intt_channels(a, ct)
+        return ntt_mod.intt_channels(a, ct, schedule)
     a3, lead = _fold_rows(a)
+    lazy = _lazy_of(ct)
+    inv, sh, row, rsh = _sched_tables(ct, schedule, lazy, "inv")
     out = ntt_kernels.intt_channels_pallas(
-        a3, ct.qs_d, ct.half_d, ct.inv_d, ct.mul_eps_d,
-        shifts=ct.mul_shifts, interpret=not _is_tpu(),
+        a3, ct.qs_d, ct.half_d, inv, ct.mul_eps_d, sh, row, rsh,
+        **_kernel_kw(params, schedule, lazy),
     )
     return out.reshape(a.shape[:1] + lead + a.shape[-1:])
 
 
 def negacyclic_mul(a, b, params: ParenttParams, *, backend: str | None = None,
-                   use_pallas: bool | None = None):
+                   use_pallas: bool | None = None, schedule: str | None = None):
     """(t, ..., n) x (t, ..., n) -> negacyclic products per RNS channel
     (the no-shuffle NTT -> ⊙ -> iNTT cascade)."""
     backend = _stage_backend(
         resolve_backend(params, backend, use_pallas), cascade=True
     )
+    schedule = resolve_schedule(params, schedule)
     ct = _require_tables(params, "negacyclic_mul")
     _check_residues(a, params, "negacyclic_mul")
     _check_residues(b, params, "negacyclic_mul")
@@ -189,30 +261,30 @@ def negacyclic_mul(a, b, params: ParenttParams, *, backend: str | None = None,
             f"{tuple(b.shape)}"
         )
     if backend == "jnp":
-        return ntt_mod.negacyclic_mul_channels(a, b, ct)
+        return ntt_mod.negacyclic_mul_channels(a, b, ct, schedule)
     a3, lead = _fold_rows(a)
     b3, _ = _fold_rows(b)
-    interpret = not _is_tpu()
+    lazy = _lazy_of(ct)
+    kw = _kernel_kw(params, schedule, lazy)
+    fwd, fsh, frow, frsh = _sched_tables(ct, schedule, lazy, "fwd")
+    inv, ish, irow, irsh = _sched_tables(ct, schedule, lazy, "inv")
     if backend == "pallas_fused":
         out = ntt_kernels.fused_polymul_pallas(
-            a3, b3, ct.qs_d, ct.half_d, ct.fwd_d, ct.inv_d, ct.mul_eps_d,
-            shifts=ct.mul_shifts, interpret=interpret,
+            a3, b3, ct.qs_d, ct.half_d, fwd, inv, ct.mul_eps_d,
+            fsh, ish, frow, irow, frsh, irsh, **kw,
         )
     else:  # "pallas": per-stage kernels, product round-trips HBM
         fa = ntt_kernels.ntt_channels_pallas(
-            a3, ct.qs_d, ct.fwd_d, ct.mul_eps_d,
-            shifts=ct.mul_shifts, interpret=interpret,
+            a3, ct.qs_d, fwd, ct.mul_eps_d, fsh, frow, frsh, **kw
         )
         fb = ntt_kernels.ntt_channels_pallas(
-            b3, ct.qs_d, ct.fwd_d, ct.mul_eps_d,
-            shifts=ct.mul_shifts, interpret=interpret,
+            b3, ct.qs_d, fwd, ct.mul_eps_d, fsh, frow, frsh, **kw
         )
         q_b = ct.qs_d[:, None, None]
         eps_b = None if ct.mul_eps is None else ct.mul_eps_d[:, None, None]
         prod = modmath.mul_mod(fa, fb, q_b, eps_b, ct.mul_shifts)
         out = ntt_kernels.intt_channels_pallas(
-            prod, ct.qs_d, ct.half_d, ct.inv_d, ct.mul_eps_d,
-            shifts=ct.mul_shifts, interpret=interpret,
+            prod, ct.qs_d, ct.half_d, inv, ct.mul_eps_d, ish, irow, irsh, **kw
         )
     return out.reshape(a.shape[:1] + lead + a.shape[-1:])
 
@@ -264,7 +336,8 @@ def rns_compose(residues, params: ParenttParams, *, backend: str | None = None,
 
 def fused_polymul_e2e(za, zb, params: ParenttParams, *,
                       backend: str | None = None,
-                      use_pallas: bool | None = None, use_sau: bool = True):
+                      use_pallas: bool | None = None, use_sau: bool = True,
+                      schedule: str | None = None):
     """za, zb: (..., n, S) segment arrays -> (..., n, L) product limbs:
     decompose -> per-channel NTT cascade -> compose.
 
@@ -278,6 +351,7 @@ def fused_polymul_e2e(za, zb, params: ParenttParams, *,
     kernel paths always run the SAU circuits).
     """
     backend = resolve_backend(params, backend, use_pallas)
+    schedule = resolve_schedule(params, schedule)
     for name, z in (("za", za), ("zb", zb)):
         if z.ndim < 2 or z.shape[-2] != params.n:
             raise ValueError(
@@ -294,16 +368,21 @@ def fused_polymul_e2e(za, zb, params: ParenttParams, *,
     if backend != "pallas_fused_e2e":
         ra = rns_decompose(za, params, backend=backend, use_sau=use_sau)
         rb = rns_decompose(zb, params, backend=backend, use_sau=use_sau)
-        rp = negacyclic_mul(ra, rb, params, backend=backend)
+        rp = negacyclic_mul(ra, rb, params, backend=backend, schedule=schedule)
         return rns_compose(rp, params, backend=backend)
     ct = _require_tables(params, "fused_polymul_e2e")
     plan = params.plan
     lead = za.shape[:-2]
     z3a = za.reshape((-1,) + za.shape[-2:])
     z3b = zb.reshape((-1,) + zb.shape[-2:])
+    lazy = _lazy_of(ct)
+    fwd, fsh, frow, frsh = _sched_tables(ct, schedule, lazy, "fwd")
+    inv, ish, irow, irsh = _sched_tables(ct, schedule, lazy, "inv")
     out = ntt_kernels.fused_e2e_polymul_pallas(
-        z3a, z3b, ct.fwd_d, ct.inv_d, plan.qi_star_limbs_d, plan.q_limbs_d,
-        plan=plan, interpret=not _is_tpu(),
+        z3a, z3b, fwd, inv, plan.qi_star_limbs_d, plan.q_limbs_d,
+        fsh, ish, frow, irow, frsh, irsh,
+        plan=plan, schedule=schedule, lazy=lazy, row_blk=params.row_blk,
+        interpret=not _is_tpu(),
     )
     return out.reshape(lead + (params.n, plan.L))
 
@@ -391,3 +470,100 @@ def count_pallas_launches(params: ParenttParams, backend: str | None = None,
         return n
 
     return count(jaxpr.jaxpr)
+
+
+# --------------------------------------------------------------------------
+# stage-schedule cost model (reduction ops + lane alignment), with the
+# same traced-jaxpr cross-check discipline as the HBM model above
+# --------------------------------------------------------------------------
+
+
+def transform_cost_model(params: ParenttParams, *, schedule: str | None = None,
+                         direction: str = "fwd") -> dict:
+    """Structural cost of ONE NTT transform under a schedule:
+
+    * ``sublane_stages`` — stages whose butterfly pairs sit within the
+      lane (minor) axis at distance < 128, i.e. stages that need lane
+      shuffles/strided access on real TPU vregs.  Computed from
+      :func:`repro.core.ntt.stage_lane_strides` (the schedule's
+      structural definition); 0 for four_step at every n.
+    * ``reduction_ops`` — conditional-subtract (jnp.where -> select_n)
+      ops the transform traces to: 5 per stage strict, 1-2 per stage +
+      an O(1) exit canonicalize under Harvey lazy reduction.  The
+      bench-smoke gate cross-checks this number against the actual
+      traced kernel via :func:`count_reduction_selects`, so the model
+      cannot drift from the implementation.
+    """
+    if direction not in ("fwd", "inv"):
+        raise ValueError(f"direction must be 'fwd' or 'inv', got {direction!r}")
+    schedule = resolve_schedule(params, schedule)
+    n = params.n
+    stages = n.bit_length() - 1
+    strides = ntt_mod.stage_lane_strides(n, schedule)
+    sublane = sum(1 for s in strides if 0 < s < 128)
+    ct = params.tables
+    lazy = None if ct is None else _lazy_of(ct)
+    if lazy is not None:
+        window = lazy[0]
+        red = (
+            modmath.lazy_selects_per_stage(window, inverse=direction == "inv")
+            * stages
+            + modmath.canonicalize_selects(window)
+        )
+    else:
+        window = None
+        red = modmath.STRICT_SELECTS_PER_STAGE * stages
+    return {
+        "schedule": schedule,
+        "direction": direction,
+        "stages": stages,
+        "lane_strides": strides,
+        "sublane_stages": sublane,
+        "lazy_window": window,
+        "reduction_ops": red,
+        "strict_reduction_ops": modmath.STRICT_SELECTS_PER_STAGE * stages,
+    }
+
+
+def count_reduction_selects(params: ParenttParams, *,
+                            schedule: str | None = None,
+                            direction: str = "fwd", rows: int = 2) -> int:
+    """Count conditional-subtract selects in the TRACED transform kernel.
+
+    Traces ``ntt_forward``/``ntt_inverse`` on the ``pallas`` backend and
+    counts ``select_n`` equations inside the ``pallas_call`` bodies —
+    the structural ground truth for
+    ``transform_cost_model(...)['reduction_ops']``, asserted equal by
+    the bench-smoke CI gate and the schedule tests."""
+    a = jnp.zeros((params.t, rows, params.n), jnp.int64)
+    fn = ntt_forward if direction == "fwd" else ntt_inverse
+    jaxpr = jax.make_jaxpr(
+        lambda x: fn(x, params, backend="pallas", schedule=schedule)
+    )(a)
+
+    def count_selects(jx) -> int:
+        num = 0
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "select_n":
+                num += 1
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):
+                    num += count_selects(v.jaxpr)
+                elif hasattr(v, "eqns"):
+                    num += count_selects(v)
+        return num
+
+    def walk(jx) -> int:
+        num = 0
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "pallas_call":
+                num += count_selects(eqn.params["jaxpr"])
+            else:
+                for v in eqn.params.values():
+                    if hasattr(v, "jaxpr"):
+                        num += walk(v.jaxpr)
+                    elif hasattr(v, "eqns"):
+                        num += walk(v)
+        return num
+
+    return walk(jaxpr.jaxpr)

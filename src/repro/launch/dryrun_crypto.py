@@ -42,8 +42,9 @@ def polymul_step(za, zb, params, backend="jnp"):
     )
 
 
-def run(mesh_kind: str, batch: int, out_dir: str, backend: str = "jnp"):
-    params = make_params(n=4096, t=6, v=30)
+def run(mesh_kind: str, batch: int, out_dir: str, backend: str = "jnp",
+        schedule: str = "auto", row_blk: int | None = None):
+    params = make_params(n=4096, t=6, v=30, schedule=schedule, row_blk=row_blk)
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     n_dev = 512 if mesh_kind == "multi" else 256
     seg = jax.ShapeDtypeStruct((batch, 4096, params.plan.seg_count), jnp.int64)
@@ -155,12 +156,23 @@ def main():
         help="polymul datapath; keep jnp off-TPU (interpret-mode Pallas "
              "bloats the lowered HLO)",
     )
+    ap.add_argument(
+        "--schedule", default="auto", choices=list(ops_mod.SCHEDULES),
+        help="NTT stage schedule (auto = four_step for n >= 256)",
+    )
+    ap.add_argument(
+        "--row-blk", type=int, default=None,
+        help="kernel tile rows per grid step (None = per-kernel default)",
+    )
     ap.add_argument("--out", default=ARTIFACTS)
     args = ap.parse_args()
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
     fails = 0
     for mk in meshes:
-        fails += run(mk, args.batch, args.out, backend=args.backend)["status"] != "ok"
+        fails += run(
+            mk, args.batch, args.out, backend=args.backend,
+            schedule=args.schedule, row_blk=args.row_blk,
+        )["status"] != "ok"
         fails += run_dntt(mk, args.log_n, args.out)["status"] != "ok"
     raise SystemExit(1 if fails else 0)
 
