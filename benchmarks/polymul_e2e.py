@@ -36,6 +36,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+import repro
 from repro.core import params as params_mod
 from repro.core import polymul as pm
 from repro.core import schedule as sched
@@ -45,15 +46,26 @@ FREQ = 240e6  # paper's post-pipelining clock
 CONCRETE_SCHEDULES = ("radix2", "four_step")
 
 
-def _time_backend(p, backend: str, za, zb, iters: int = 3,
-                  schedule: str = "auto") -> float:
-    """us per polynomial through ParenttMultiplier on one backend."""
-    m = pm.ParenttMultiplier(p.with_schedule(schedule), backend=backend)
+def _plan(p, backend: str = "auto", schedule: str = "auto"):
+    """api plan for a params preset (one code path for every width)."""
+    return repro.plan(
+        n=p.n, t=p.t, v=p.v, backend=backend, schedule=schedule,
+        row_blk=p.row_blk,
+    )
+
+
+# ONE jitted executor for every timing row: same-config plans hit the
+# same compiled entry (the retrace-free property tests/test_api.py gates)
+_MUL = jax.jit(repro.polymul)
+
+
+def _time_plan(pl, za, zb, iters: int = 3) -> float:
+    """us per polynomial through jax.jit(repro.polymul) on one plan."""
     batch = za.shape[0]
-    jax.block_until_ready(m(za, zb))  # compile
+    jax.block_until_ready(_MUL(pl, za, zb))  # compile
     t0 = time.perf_counter()
     for _ in range(iters):
-        jax.block_until_ready(m(za, zb))
+        jax.block_until_ready(_MUL(pl, za, zb))
     return (time.perf_counter() - t0) / iters / batch * 1e6
 
 
@@ -107,7 +119,7 @@ def run(row_blk: int | None = None):
     rchk = random.Random(0)
     ca = [rchk.randrange(pchk.q) for _ in range(pchk.n)]
     cb = [rchk.randrange(pchk.q) for _ in range(pchk.n)]
-    fused_ints = pm.ParenttMultiplier(pchk, backend="pallas_fused").multiply_ints(ca, cb)
+    fused_ints = repro.polymul_ints(_plan(pchk, backend="pallas_fused"), ca, cb)
     oracle_ints = pm.oracle_multiply(ca, cb, pchk)
     if fused_ints != oracle_ints or fused_ints != pm.schoolbook_negacyclic(ca, cb, pchk.q):
         raise AssertionError("pallas_fused != bigint oracle at n=256/t=6/v=30")
@@ -118,9 +130,9 @@ def run(row_blk: int | None = None):
             "pallas_fused bit-exact vs oracle_multiply + schoolbook (n=256, t=6, v=30)",
         )
     )
-    e2e_ints = pm.ParenttMultiplier(
-        pchk, backend="pallas_fused_e2e"
-    ).multiply_ints(ca, cb)
+    e2e_ints = repro.polymul_ints(
+        _plan(pchk, backend="pallas_fused_e2e"), ca, cb
+    )
     if e2e_ints != oracle_ints:
         raise AssertionError("pallas_fused_e2e != bigint oracle at n=256/t=6/v=30")
     out.append(
@@ -144,7 +156,7 @@ def run(row_blk: int | None = None):
     ]
     base = ops_mod.hbm_traffic_model(pchk, rows=bs, backend="pallas")
     for bk in ops_mod.BACKENDS:
-        us_bk = _time_backend(pchk, bk, zs[0], zs[1])
+        us_bk = _time_plan(_plan(pchk, backend=bk), zs[0], zs[1])
         m = ops_mod.hbm_traffic_model(pchk, rows=bs, backend=bk)
         out.append(
             (
@@ -161,8 +173,9 @@ def run(row_blk: int | None = None):
     # lazy butterflies the cost model accounts for
     cmod = _cost_model_record(pchk)
     for schedule in CONCRETE_SCHEDULES:
-        us_s = _time_backend(
-            pchk, "pallas_fused", zs[0], zs[1], schedule=schedule
+        us_s = _time_plan(
+            _plan(pchk, backend="pallas_fused", schedule=schedule),
+            zs[0], zs[1],
         )
         c = cmod[schedule]
         out.append(
@@ -184,7 +197,7 @@ def run(row_blk: int | None = None):
         rng.integers(0, 1 << 30, size=(batch, n, p.plan.seg_count))
     )
     zb = jnp.asarray(rng.integers(0, 1 << 30, size=(batch, n, p.plan.seg_count)))
-    us = _time_backend(p, "jnp", za, zb)
+    us = _time_plan(_plan(p, backend="jnp"), za, zb)
     out.append(
         (
             "tableVI_measured_polymul_t6_v30_jnp",
@@ -192,7 +205,7 @@ def run(row_blk: int | None = None):
             f"per 4096-coeff 180-bit modular polymul (backend=jnp, CPU, batch={batch})",
         )
     )
-    us_fused = _time_backend(p, "pallas_fused", za, zb)
+    us_fused = _time_plan(_plan(p, backend="pallas_fused"), za, zb)
     mode = "compiled" if jax.default_backend() == "tpu" else "interpret"
     out.append(
         (
@@ -211,23 +224,17 @@ def run(row_blk: int | None = None):
             f"{butterflies / (us/1e6) / 1e6:.1f}M butterflies/s on 1 CPU core",
         )
     )
-    # Table VI's t=4 vs t=6 comparison, both measured in-JAX (t=4/v=45
-    # rides the digit-split wide datapath of core/wide.py)
-    from repro.core import wide as wide_mod
-
-    p4 = params_mod.make_params(n=4096, t=4, v=45)
-    m4 = wide_mod.WideParenttMultiplier(p4)
+    # Table VI's t=4 vs t=6 comparison, both measured in-JAX and both
+    # through the SAME repro.polymul entry (t=4/v=45 resolves to the
+    # digit-split wide datapath at plan time)
+    pl4 = repro.plan(n=4096, t=4, v=45)
     za4 = jnp.asarray(
-        rng.integers(0, 1 << 45, size=(batch, n, p4.plan.seg_count))
+        rng.integers(0, 1 << 45, size=(batch, n, pl4.config.seg_count))
     )
-    zb4 = jnp.asarray(rng.integers(0, 1 << 45, size=(batch, n, p4.plan.seg_count)))
-    iters = 3
-    f4 = jax.jit(m4.__call__)
-    jax.block_until_ready(f4(za4, zb4))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(f4(za4, zb4))
-    us4 = (time.perf_counter() - t0) / iters / batch * 1e6
+    zb4 = jnp.asarray(
+        rng.integers(0, 1 << 45, size=(batch, n, pl4.config.seg_count))
+    )
+    us4 = _time_plan(pl4, za4, zb4)
     out.append(
         (
             "tableVI_measured_polymul_t4_v45",
@@ -338,13 +345,9 @@ def run_ci_smoke(out_path: str, n: int = 64, t: int = 3, v: int = 30,
             "schedules": {},
         }
         for schedule in CONCRETE_SCHEDULES:
-            us = _time_backend(p, bk, za, zb, iters=1, schedule=schedule)
-            exact = (
-                pm.ParenttMultiplier(
-                    p.with_schedule(schedule), backend=bk
-                ).multiply_ints(a, b)
-                == oracle
-            )
+            pl = _plan(p, backend=bk, schedule=schedule)
+            us = _time_plan(pl, za, zb, iters=1)
+            exact = repro.polymul_ints(pl, a, b) == oracle
             r["schedules"][schedule] = {
                 "us_per_poly": us,
                 "bit_exact_vs_oracle": exact,

@@ -1,11 +1,19 @@
-"""Quickstart: PaReNTT long polynomial modular multiplication.
+"""Quickstart: PaReNTT long polynomial modular multiplication through the
+plan/execute API.
 
-1. Correctness at n=256 against the bigint schoolbook oracle.
-2. The paper's operating point: n=4096, 180-bit q, t=6 RNS channels of
-   v=30-bit special primes — batched through the jit pipeline.
+1. Correctness against the bigint schoolbook oracle, across every
+   backend x schedule combination — one entry point, ``repro.polymul``.
+2. Width dispatch: the SAME call serves the paper's t=6/v=30 (int64
+   Pallas), t=4/v=45 (digit-split wide) and a v>46 (host bigint oracle)
+   configuration.
+3. The paper's operating point: n=4096, 180-bit q, t=6 RNS channels of
+   v=30-bit special primes — batched through ``jax.jit(repro.polymul)``.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [--smoke]
+
+``--smoke`` (the CI fast lane) runs 1 and 2 at small n only.
 """
+import argparse
 import random
 import time
 
@@ -14,63 +22,87 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import params as params_mod
+import repro
 from repro.core import polymul as pm
 
 
-def main():
-    # --- 1. correctness (small n so the O(n^2) oracle is fast) -----------
-    # One switch selects the datapath for the whole pipeline:
-    #   "jnp"              pure-jnp reference (always available)
-    #   "pallas"           per-stage Pallas kernels (product round-trips HBM)
-    #   "pallas_fused"     the paper's fused NTT -> ⊙ -> iNTT cascade, one
-    #                      kernel, NTT-domain product never leaves VMEM
-    #   "pallas_fused_e2e" the whole decompose -> cascade -> compose
-    #                      pipeline in ONE kernel: residues never touch
-    #                      HBM, only segments in / product limbs out
-    # and an orthogonal switch selects the NTT stage schedule:
-    #   "radix2"     flat stage loop (late stages pair at lane stride < 128)
-    #   "four_step"  lane-aligned (n1, 128) tile schedule with a VMEM
-    #                transpose — no stage pairs along the lane axis
-    #   "auto"       four_step when n >= 256 (the default)
-    p = params_mod.make_params(n=256, t=3, v=30)
+def check_backends(n: int, t: int, v: int) -> None:
+    """Every backend/schedule pair, one code path, vs the schoolbook."""
     rng = random.Random(0)
-    a = [rng.randrange(p.q) for _ in range(p.n)]
-    b = [rng.randrange(p.q) for _ in range(p.n)]
-    want = pm.schoolbook_negacyclic(a, b, p.q)
-    for backend in params_mod.BACKENDS:
+    pl0 = repro.plan(n=n, t=t, v=v)
+    a = [rng.randrange(pl0.q) for _ in range(n)]
+    b = [rng.randrange(pl0.q) for _ in range(n)]
+    want = pm.schoolbook_negacyclic(a, b, pl0.q)
+    for backend in repro.BACKENDS:
         for schedule in ("radix2", "four_step"):
-            mult = pm.ParenttMultiplier(
-                p.with_schedule(schedule), backend=backend
-            )
-            got = mult.multiply_ints(a, b)
+            pl = repro.plan(n=n, t=t, v=v, backend=backend, schedule=schedule)
+            got = repro.polymul_ints(pl, a, b)
             assert got == want, (
                 f"pipeline mismatch on backend={backend}/{schedule}!"
             )
-        print(f"[ok] n=256, q={p.q.bit_length()}-bit, backend={backend}: "
+        print(f"[ok] n={n}, q={pl0.q.bit_length()}-bit, backend={backend}: "
               "PaReNTT == schoolbook (radix2 + four_step)")
 
-    # --- 2. the paper's configuration ------------------------------------
-    p = params_mod.make_params(n=4096, t=6, v=30)
-    print(f"n=4096, t=6 special primes of 30 bits, q = {p.q.bit_length()} bits")
-    for s in p.primes:
+
+def check_width_dispatch(n: int) -> None:
+    """One entry point, three datapaths — repro.plan resolves the width.
+    Checked against the schoolbook oracle, which is independent of every
+    datapath (including the v>46 width, which executes oracle_multiply
+    itself)."""
+    rng = random.Random(1)
+    for t, v in ((3, 30), (4, 45), (2, 50)):
+        pl = repro.plan(n=n, t=t, v=v)
+        a = [rng.randrange(pl.q) for _ in range(n)]
+        b = [rng.randrange(pl.q) for _ in range(n)]
+        got = repro.polymul_ints(pl, a, b)
+        assert got == pm.schoolbook_negacyclic(a, b, pl.q)
+        print(
+            f"[ok] width={pl.config.width:<6} (t={t}, v={v}, "
+            f"q={pl.q.bit_length()}-bit): polymul == schoolbook oracle"
+        )
+
+
+def paper_operating_point() -> None:
+    pl = repro.plan(n=4096, t=6, v=30)
+    print(f"n=4096, t=6 special primes of 30 bits, q = {pl.q.bit_length()} bits")
+    for s in pl.params.primes:
         terms = " ".join(f"{'+' if sg > 0 else '-'}2^{e}" for e, sg in s.beta_terms)
         print(f"   q_i = 2^30 - ({terms} - 1) = {hex(s.q)}")
-    mult = pm.ParenttMultiplier(p)
     rng_np = np.random.default_rng(0)
     batch = 4
-    za = jnp.asarray(rng_np.integers(0, 1 << 30, size=(batch, 4096, p.plan.seg_count)))
-    zb = jnp.asarray(rng_np.integers(0, 1 << 30, size=(batch, 4096, p.plan.seg_count)))
-    out = jax.block_until_ready(mult(za, zb))  # compile + run
+    S = pl.config.seg_count
+    za = jnp.asarray(rng_np.integers(0, 1 << 30, size=(batch, 4096, S)))
+    zb = jnp.asarray(rng_np.integers(0, 1 << 30, size=(batch, 4096, S)))
+    mul = jax.jit(repro.polymul)
+    out = jax.block_until_ready(mul(pl, za, zb))  # compile + run
     t0 = time.perf_counter()
     for _ in range(3):
-        out = jax.block_until_ready(mult(za, zb))
+        out = jax.block_until_ready(mul(pl, za, zb))
     dt = (time.perf_counter() - t0) / 3 / batch
     print(
         f"[ok] batched 180-bit x 4096-coeff modular multiplication: "
         f"{dt*1e3:.1f} ms/poly on CPU (paper's FPGA: 17.7us at 240 MHz)"
     )
     print("     output limbs shape:", tuple(out.shape))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-n correctness only (the CI fast lane)")
+    args = ap.parse_args()
+    # One switch (backend=) selects the datapath for the whole pipeline:
+    #   "jnp"              pure-jnp reference (always available)
+    #   "pallas"           per-stage Pallas kernels (product round-trips HBM)
+    #   "pallas_fused"     the paper's fused NTT -> ⊙ -> iNTT cascade
+    #   "pallas_fused_e2e" decompose -> cascade -> compose in ONE kernel
+    #   "auto"             pallas_fused_e2e on TPU, jnp elsewhere
+    # and schedule= selects the NTT stage schedule ("auto" -> four_step
+    # for n >= 256, the lane-aligned (n1, 128) tile schedule).
+    check_backends(n=64 if args.smoke else 256, t=3, v=30)
+    check_width_dispatch(n=32 if args.smoke else 64)
+    if not args.smoke:
+        paper_operating_point()
 
 
 if __name__ == "__main__":

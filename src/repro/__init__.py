@@ -1,12 +1,63 @@
 """repro: PaReNTT — parallel RNS + NTT long polynomial modular multiplication
 (Tan, Chiu, Wang, Lao, Parhi, 2023) as a production JAX framework.
 
+The public surface is the plan/execute pair::
+
+    import repro
+
+    pl = repro.plan(n=4096, t=6, v=30)     # resolve + upload everything once
+    limbs = repro.polymul(pl, za, zb)      # (..., n, S) -> (..., n, L)
+
+``repro.plan`` dispatches on modulus width internally (int64 Pallas for
+v <= 31, digit-split wide for v <= 46, host bigint oracle beyond); the
+returned ``Plan`` is a JAX pytree, so ``jax.jit(repro.polymul)`` /
+``jax.vmap`` / ``shard_map`` treat it as an ordinary argument.  See
+:mod:`repro.api` for the full contract.
+
 The crypto core requires 64-bit integer arithmetic; enable x64 once at
-package import.  All floating-point model code states dtypes explicitly,
-so the x64 default does not leak into LM layers.
+package import (before anything touches jax.numpy).  All floating-point
+model code states dtypes explicitly, so the x64 default does not leak
+into LM layers.
 """
 from jax import config as _config
 
 _config.update("jax_enable_x64", True)
 
-__version__ = "0.1.0"
+__version__ = "0.2.0"
+
+from repro.api import (  # noqa: E402  (x64 must flip before jax.numpy use)
+    BACKENDS,
+    SCHEDULES,
+    WIDTHS,
+    Plan,
+    PlanConfig,
+    compose,
+    decompose,
+    from_limbs,
+    intt,
+    negacyclic_mul,
+    ntt,
+    plan,
+    polymul,
+    polymul_ints,
+    to_segments,
+)
+
+__all__ = [
+    "BACKENDS",
+    "SCHEDULES",
+    "WIDTHS",
+    "Plan",
+    "PlanConfig",
+    "__version__",
+    "compose",
+    "decompose",
+    "from_limbs",
+    "intt",
+    "negacyclic_mul",
+    "ntt",
+    "plan",
+    "polymul",
+    "polymul_ints",
+    "to_segments",
+]

@@ -1,0 +1,651 @@
+"""The plan/execute front door: ONE entry point for the paper's whole
+feed-forward multiplier, with modulus-width dispatch as an internal
+plan-time decision instead of a user-facing class choice.
+
+Usage::
+
+    import repro
+
+    pl = repro.plan(n=4096, t=6, v=30)          # paper's preferred point
+    limbs = repro.polymul(pl, za, zb)           # (..., n, S) -> (..., n, L)
+
+    pl45 = repro.plan(n=4096, t=4, v=45)        # wide-word alternative:
+    limbs = repro.polymul(pl45, za, zb)         # same signature, same
+                                                # base-2^w output limbs
+
+Width dispatch (resolved once, inside :func:`plan`):
+
+* ``v <= 31``  — the int64 Pallas datapath (``jnp`` / ``pallas`` /
+  ``pallas_fused`` / ``pallas_fused_e2e`` backends, radix-2 or
+  lane-aligned four-step schedules);
+* ``31 < v <= 46`` — the digit-split wide datapath (the paper's t=4 /
+  v=45 configuration, :mod:`repro.core.wide`), pure-jnp;
+* ``v > 46``   — the host Python-bigint oracle (exact for any width;
+  eager-only, cannot be traced).
+
+All three widths share one contract: segments in (``(..., n, S)``
+base-``2^v``), product limbs out (``(..., n, L)`` base-``2^w`` with
+``w = plan.config.w``), bit-exact against the bigint oracle.
+
+Plan/execute semantics
+----------------------
+:func:`plan` performs *every* resolution that used to travel as loose
+kwargs (``backend``, ``schedule``, ``row_blk``, ``use_sau``) and freezes
+the result into a hashable :class:`PlanConfig`.  The returned
+:class:`Plan` is a registered JAX pytree:
+
+* **leaves** — the device-resident constants (twiddle/Shoup/SAU/Barrett
+  tables, RNS decompose/compose arrays), uploaded once per ``(n, t, v)``
+  and shared across plans via the params cache;
+* **static aux** — the ``PlanConfig`` plus the host-side parameter
+  object (python ints for the kernels' closed-over constants).
+
+So ``jax.jit(polymul)`` treats a plan as an ordinary argument: two plans
+with the same config flatten to the same treedef and the jitted function
+does **not** retrace; ``jax.vmap``/``shard_map`` thread batch axes of
+``za``/``zb`` through with ``in_axes=None`` for the plan (no table
+rebuilds, no re-uploads).  Tested by ``tests/test_api.py``.
+
+One honest caveat on leaf use: the **wide** width consumes the leaves
+directly, but the **int64** width executes through the existing
+:mod:`repro.kernels.ops` layer, which binds the *same underlying device
+buffers* from the static ``params`` as closed-over jit constants — the
+leaves there carry the structure (treedef equality, transform
+plumbing), not the dataflow, so ``jax.tree.map``/``device_put`` over an
+int64 plan's leaves does not redirect the kernels.  Threading the
+leaves through the ops layer is a recorded ROADMAP follow-up.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bigint
+from repro.core import ntt as ntt_mod
+from repro.core import polymul as polymul_mod
+from repro.core import wide as wide_mod
+from repro.core.params import (
+    BACKENDS,
+    SCHEDULES,
+    ParenttParams,
+    make_params,
+    resolve_schedule_for,
+    validate_backend,
+)
+from repro.kernels import ops as ops_mod
+
+__all__ = [
+    "BACKENDS",
+    "SCHEDULES",
+    "WIDTHS",
+    "Plan",
+    "PlanConfig",
+    "plan",
+    "plan_from_params",
+    "polymul",
+    "polymul_ints",
+    "ntt",
+    "intt",
+    "negacyclic_mul",
+    "decompose",
+    "compose",
+    "to_segments",
+    "from_limbs",
+]
+
+# Width paths, in increasing modulus width (see module docstring).
+WIDTHS = ("int64", "wide", "oracle")
+
+# The oracle path has no kernel backend; this sentinel is the only value
+# PlanConfig.backend takes for width="oracle".
+ORACLE_BACKEND = "oracle"
+
+_V_MIN, _V_MAX = 8, 60
+
+
+def width_for(v: int) -> str:
+    """The datapath a modulus width rides: the int64 kernels need
+    q_i < 2^31 (residue products fit int64), the digit-split wide path
+    serves the 46-bit fold window, bigger moduli fall back to the exact
+    host oracle."""
+    if v <= 31:
+        return "int64"
+    if v <= 46:
+        return "wide"
+    return "oracle"
+
+
+# --------------------------------------------------------------------------
+# PlanConfig: every knob, resolved once, hashable (jit-static-safe)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanConfig:
+    """Frozen, fully-resolved execution config — the static aux data of a
+    :class:`Plan`.  No ``"auto"`` survives into a PlanConfig: ``backend``
+    and ``schedule`` are concrete, so executing never re-resolves."""
+
+    n: int
+    t: int
+    v: int
+    width: str  # "int64" | "wide" | "oracle"
+    backend: str  # BACKENDS entry, or "oracle" for the oracle width
+    schedule: str  # concrete: "radix2" | "four_step"
+    row_blk: int | None
+    use_sau: bool
+    # derived I/O format (duplicated from the RnsPlan for self-description)
+    seg_count: int  # S: base-2^v segments per input coefficient
+    w: int  # output limb width (base 2^w)
+    L: int  # output limb count
+
+
+# --------------------------------------------------------------------------
+# Plan: pytree of device constants + static config
+# --------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True, eq=False)  # identity eq: leaves are arrays
+class Plan:
+    """An executable multiplier plan (see module docstring).
+
+    ``consts`` holds the device-resident constant arrays (the pytree
+    leaves); ``config`` and ``params`` ride in the static aux data.
+    Build with :func:`plan` — the constructor performs no validation.
+    """
+
+    config: PlanConfig
+    params: ParenttParams
+    consts: dict
+
+    # -- convenience ---------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.config.n
+
+    @property
+    def t(self) -> int:
+        return self.config.t
+
+    @property
+    def v(self) -> int:
+        return self.config.v
+
+    @property
+    def q(self) -> int:
+        return self.params.q
+
+    # -- pytree protocol ----------------------------------------------
+    def tree_flatten(self):
+        keys = tuple(sorted(self.consts))
+        return tuple(self.consts[k] for k in keys), (self.config, self.params, keys)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        config, params, keys = aux
+        return cls(config=config, params=params, consts=dict(zip(keys, leaves)))
+
+
+# --------------------------------------------------------------------------
+# plan(): resolve everything once
+# --------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _int64_consts(params: ParenttParams) -> dict:
+    """Device constants of the int64 datapath as a named leaf dict.  The
+    arrays are the very same device buffers ChannelTables/RnsPlan
+    uploaded at construction — building a Plan never re-uploads."""
+    ct, rp = params.tables, params.plan
+    out = {}
+    for name in (
+        "qs", "fwd", "inv", "half", "mul_eps", "fs_row_fwd", "fs_row_inv",
+        "fwd_shoup", "inv_shoup", "fs_row_fwd_shoup", "fs_row_inv_shoup",
+    ):
+        dev = getattr(ct, name + "_d")
+        if dev is not None:
+            out["ntt_" + name] = dev
+    out["rns_qs"] = rp.qs_d
+    out["rns_beta_pows"] = rp.beta_pows_d
+    out["rns_qi_tilde"] = rp.qi_tilde_d
+    out["rns_qi_star_limbs"] = rp.qi_star_limbs_d
+    out["rns_q_limbs"] = rp.q_limbs_d
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def _wide_consts(params: ParenttParams) -> dict:
+    """Device constants of the digit-split wide datapath: stacked
+    per-channel twiddle tables plus POST_W-limb CRT constants, uploaded
+    once per params object (cached)."""
+    rp = params.plan
+    tabs = [ntt_mod.make_tables(int(q), params.n) for q in rp.qs]
+    W = wide_mod.POST_W
+    L14 = -(-(rp.q.bit_length() + rp.t.bit_length()) // W)
+    return {
+        "wide_fwd": jnp.asarray(np.stack([tb.fwd for tb in tabs])),
+        "wide_inv": jnp.asarray(np.stack([tb.inv for tb in tabs])),
+        "wide_beta_pows": rp.beta_pows_d,
+        "wide_qi_tilde": rp.qi_tilde_d,
+        "wide_qi_star_limbs": jnp.asarray(
+            bigint.ints_to_limbs(
+                [rp.q // int(qi) for qi in rp.qs], W, L14
+            )
+        ),
+        "wide_q_limbs": jnp.asarray(bigint.int_to_limbs(rp.q, W, L14)),
+    }
+
+
+@functools.lru_cache(maxsize=None)
+def _wide_specs(params: ParenttParams) -> tuple:
+    return tuple(wide_mod.from_special(p) for p in params.primes)
+
+
+def _consts_for(params: ParenttParams, width: str) -> dict:
+    if width == "int64":
+        return _int64_consts(params)
+    if width == "wide":
+        return _wide_consts(params)
+    return {}  # oracle: host bigints, nothing device-resident
+
+
+def _resolve_backend(width: str, backend: str) -> str:
+    if backend == "auto":
+        if width == "int64":
+            return ops_mod.auto_backend()
+        return "jnp" if width == "wide" else ORACLE_BACKEND
+    if width == "int64":
+        return validate_backend(backend)
+    if width == "wide":
+        if backend != "jnp":
+            raise ValueError(
+                f"the wide (v in (31, 46]) datapath is pure-jnp: "
+                f"backend={backend!r} is not available (use 'auto' or 'jnp')"
+            )
+        return backend
+    if backend != ORACLE_BACKEND:
+        raise ValueError(
+            f"v > 46 is served by the host bigint oracle only: "
+            f"backend={backend!r} is not available (use 'auto' or 'oracle')"
+        )
+    return backend
+
+
+def _check_wide_envelope(width: str, t: int, v: int):
+    """Wide inverse-CRT envelope: the t-fold sum of y(<2^v) x
+    limb(<2^POST_W) contributions must stay inside int64 — reject at
+    plan time, never corrupt at execution time."""
+    if width == "wide" and t * (1 << (v + wide_mod.POST_W)) > (1 << 63):
+        raise ValueError(
+            f"t={t} channels of v={v}-bit moduli overflow the wide "
+            f"datapath's int64 inverse-CRT accumulator (need "
+            f"t * 2^(v+{wide_mod.POST_W}) <= 2^63); use fewer/narrower "
+            f"channels"
+        )
+
+
+def _resolve_schedule(width: str, n: int, schedule: str) -> str:
+    if width == "int64":
+        return resolve_schedule_for(n, schedule)  # raises for bad combos
+    if schedule not in ("auto", "radix2"):
+        raise ValueError(
+            f"the {width} datapath serves schedule='radix2' only, "
+            f"got {schedule!r}"
+        )
+    return "radix2"
+
+
+def plan(
+    n: int = 4096,
+    t: int = 6,
+    v: int = 30,
+    *,
+    backend: str = "auto",
+    schedule: str = "auto",
+    row_blk: int | None = None,
+    use_sau: bool = True,
+) -> Plan:
+    """Build an executable plan: search/validate primes, precompute and
+    upload every table, and resolve all execution knobs into a frozen
+    :class:`PlanConfig`.
+
+    ``backend="auto"`` picks the fused single-kernel Pallas path on TPU
+    and the pure-jnp reference elsewhere (for v <= 31); the wide and
+    oracle widths have exactly one datapath each.  ``schedule="auto"``
+    picks the lane-aligned four-step schedule for n >= 256.  Invalid
+    combinations (unknown backend, four_step on an unservable n, a
+    Pallas backend on the wide width, v outside [8, 60], ...) raise
+    ``ValueError`` here, at plan time — never mid-execution.
+    """
+    if not isinstance(n, int) or n < 4 or n & (n - 1):
+        raise ValueError(f"n must be a power of two >= 4, got n={n!r}")
+    if not isinstance(t, int) or t < 1:
+        raise ValueError(f"t must be a positive int, got t={t!r}")
+    if not isinstance(v, int) or not (_V_MIN <= v <= _V_MAX):
+        raise ValueError(
+            f"v must be an int in [{_V_MIN}, {_V_MAX}], got v={v!r} "
+            f"(the paper's configs are v=30 and v=45)"
+        )
+    if row_blk is not None and row_blk < 1:
+        raise ValueError(f"row_blk must be >= 1, got {row_blk}")
+    width = width_for(v)
+    # resolve the cheap knobs BEFORE the prime search so bad combos fail fast
+    backend = _resolve_backend(width, backend)
+    schedule = _resolve_schedule(width, n, schedule)
+    _check_wide_envelope(width, t, v)
+    params = make_params(n=n, t=t, v=v, row_blk=row_blk)
+    cfg = PlanConfig(
+        n=n, t=t, v=v, width=width, backend=backend, schedule=schedule,
+        row_blk=row_blk, use_sau=use_sau,
+        seg_count=params.plan.seg_count, w=params.plan.w, L=params.plan.L,
+    )
+    return Plan(config=cfg, params=params, consts=_consts_for(params, width))
+
+
+def plan_from_params(
+    params: ParenttParams,
+    *,
+    backend: str | None = None,
+    use_sau: bool = True,
+) -> Plan:
+    """Adapter for the legacy class front doors: wrap an existing
+    :class:`ParenttParams` (honouring its ``backend``/``schedule``/
+    ``row_blk`` fields) into a :class:`Plan`."""
+    width = width_for(params.v)
+    if width == "int64":
+        backend = ops_mod.resolve_backend(params, backend)
+    else:
+        backend = _resolve_backend(width, backend or "auto")
+    schedule = _resolve_schedule(width, params.n, params.schedule)
+    _check_wide_envelope(width, params.t, params.v)
+    cfg = PlanConfig(
+        n=params.n, t=params.t, v=params.v, width=width, backend=backend,
+        schedule=schedule, row_blk=params.row_blk, use_sau=use_sau,
+        seg_count=params.plan.seg_count, w=params.plan.w, L=params.plan.L,
+    )
+    return Plan(config=cfg, params=params, consts=_consts_for(params, width))
+
+
+# --------------------------------------------------------------------------
+# shape contracts (the wide/oracle mirrors of kernels/ops.py's checks)
+# --------------------------------------------------------------------------
+
+
+def _require_plan(pl: Plan, fn: str) -> PlanConfig:
+    if not isinstance(pl, Plan):
+        raise TypeError(
+            f"{fn}: first argument must be a repro.api.Plan "
+            f"(build one with repro.plan(...)), got {type(pl).__name__}"
+        )
+    return pl.config
+
+
+def _check_residues(x, cfg: PlanConfig, fn: str):
+    if x.ndim < 2 or x.shape[0] != cfg.t or x.shape[-1] != cfg.n:
+        raise ValueError(
+            f"{fn}: expected residues (t={cfg.t}, ..., n={cfg.n}), "
+            f"got shape {tuple(x.shape)}"
+        )
+
+
+def _check_poly_segments(z, cfg: PlanConfig, fn: str, name: str):
+    if z.ndim < 2 or z.shape[-2] != cfg.n or z.shape[-1] != cfg.seg_count:
+        raise ValueError(
+            f"{fn}: expected {name} segments (..., n={cfg.n}, "
+            f"S={cfg.seg_count}), got shape {tuple(z.shape)}"
+        )
+
+
+def _no_tracers(cfg: PlanConfig, fn: str, *arrays):
+    if any(isinstance(a, jax.core.Tracer) for a in arrays):
+        raise ValueError(
+            f"{fn}: width={cfg.width!r} plans execute on the host "
+            "(exact Python bigints) and cannot be traced — call the api "
+            "eagerly, outside jit/vmap"
+        )
+
+
+# --------------------------------------------------------------------------
+# execute: polymul (the single entry point) + the stage functions
+# --------------------------------------------------------------------------
+
+
+def polymul(pl: Plan, za, zb):
+    """za, zb: ``(..., n, S)`` base-2^v segment arrays -> ``(..., n, L)``
+    base-2^w limbs of ``a * b mod (x^n + 1, q)`` — the whole Fig-10
+    pipeline (decompose -> per-channel no-shuffle NTT cascade ->
+    inverse CRT) on whichever datapath the plan resolved.
+
+    jit/vmap/shard_map-native for the int64 and wide widths (the plan is
+    a pytree; pass it with ``in_axes=None`` under vmap).  The oracle
+    width is host-only and raises under tracing.
+    """
+    cfg = _require_plan(pl, "polymul")
+    if cfg.width == "int64":
+        return ops_mod.fused_polymul_e2e(
+            za, zb, pl.params, backend=cfg.backend, use_sau=cfg.use_sau,
+            schedule=cfg.schedule,
+        )
+    _check_poly_segments(za, cfg, "polymul", "za")
+    _check_poly_segments(zb, cfg, "polymul", "zb")
+    if za.shape != zb.shape:
+        raise ValueError(
+            f"polymul: operand shapes differ: {tuple(za.shape)} vs "
+            f"{tuple(zb.shape)}"
+        )
+    if cfg.width == "wide":
+        ra = _wide_decompose(pl, za)
+        rb = _wide_decompose(pl, zb)
+        specs = _wide_specs(pl.params)
+        rp = wide_mod.negacyclic_mul_channels(
+            ra, rb, pl.consts["wide_fwd"], pl.consts["wide_inv"], specs
+        )
+        return _wide_compose(pl, rp)
+    return _oracle_polymul(pl, za, zb)
+
+
+def ntt(pl: Plan, a):
+    """a: ``(t, ..., n)`` residues -> forward NTT per RNS channel
+    (natural-order in, bit-reversed out — the no-shuffle convention)."""
+    cfg = _require_plan(pl, "ntt")
+    if cfg.width == "int64":
+        return ops_mod.ntt_forward(
+            a, pl.params, backend=cfg.backend, schedule=cfg.schedule
+        )
+    if cfg.width == "wide":
+        _check_residues(a, cfg, "ntt")
+        return wide_mod.ntt_channels(
+            a, pl.consts["wide_fwd"], _wide_specs(pl.params)
+        )
+    raise ValueError(
+        "ntt: the oracle width has no device transform; v > 46 plans "
+        "serve polymul/decompose/compose on the host only"
+    )
+
+
+def intt(pl: Plan, a):
+    """a: ``(t, ..., n)`` bit-reversed spectra -> natural-order residues."""
+    cfg = _require_plan(pl, "intt")
+    if cfg.width == "int64":
+        return ops_mod.ntt_inverse(
+            a, pl.params, backend=cfg.backend, schedule=cfg.schedule
+        )
+    if cfg.width == "wide":
+        _check_residues(a, cfg, "intt")
+        return wide_mod.intt_channels(
+            a, pl.consts["wide_inv"], _wide_specs(pl.params)
+        )
+    raise ValueError(
+        "intt: the oracle width has no device transform; v > 46 plans "
+        "serve polymul/decompose/compose on the host only"
+    )
+
+
+def negacyclic_mul(pl: Plan, a, b):
+    """``(t, ..., n) x (t, ..., n)`` -> per-channel negacyclic products
+    (the residue-domain cascade — what the BFV layer runs per product)."""
+    cfg = _require_plan(pl, "negacyclic_mul")
+    if cfg.width == "int64":
+        return ops_mod.negacyclic_mul(
+            a, b, pl.params, backend=cfg.backend, schedule=cfg.schedule
+        )
+    if cfg.width == "wide":
+        _check_residues(a, cfg, "negacyclic_mul")
+        _check_residues(b, cfg, "negacyclic_mul")
+        if a.shape != b.shape:
+            raise ValueError(
+                f"negacyclic_mul: operand shapes differ: {tuple(a.shape)} "
+                f"vs {tuple(b.shape)}"
+            )
+        return wide_mod.negacyclic_mul_channels(
+            a, b, pl.consts["wide_fwd"], pl.consts["wide_inv"],
+            _wide_specs(pl.params),
+        )
+    raise ValueError(
+        "negacyclic_mul: the oracle width has no device transform; "
+        "v > 46 plans serve polymul/decompose/compose on the host only"
+    )
+
+
+def decompose(pl: Plan, z):
+    """z: ``(..., S)`` base-2^v segments -> residues ``(t, ...)``."""
+    cfg = _require_plan(pl, "decompose")
+    if cfg.width == "int64":
+        return ops_mod.rns_decompose(
+            z, pl.params, backend=cfg.backend, use_sau=cfg.use_sau
+        )
+    if z.ndim < 1 or z.shape[-1] != cfg.seg_count:
+        raise ValueError(
+            f"decompose: expected base-2^{cfg.v} segments "
+            f"(..., S={cfg.seg_count}), got shape {tuple(z.shape)}"
+        )
+    if cfg.width == "wide":
+        return wide_mod.decompose_channels(
+            z, _wide_specs(pl.params), pl.consts["wide_beta_pows"]
+        )
+    _no_tracers(cfg, "decompose", z)
+    rp = pl.params.plan
+    zn = np.asarray(z)
+    flat = zn.reshape(-1, zn.shape[-1])
+    out = np.empty((cfg.t, flat.shape[0]), dtype=np.int64)
+    for r in range(flat.shape[0]):
+        x = bigint.limbs_to_int(flat[r], cfg.v)
+        for i in range(cfg.t):
+            out[i, r] = x % int(rp.qs[i])
+    return jnp.asarray(out.reshape((cfg.t,) + zn.shape[:-1]))
+
+
+def compose(pl: Plan, residues):
+    """residues: ``(t, ...)`` -> ``(..., L)`` base-2^w limbs of the
+    CRT-composed value (canonical, < q)."""
+    cfg = _require_plan(pl, "compose")
+    if cfg.width == "int64":
+        return ops_mod.rns_compose(residues, pl.params, backend=cfg.backend)
+    if residues.ndim < 1 or residues.shape[0] != cfg.t:
+        raise ValueError(
+            f"compose: expected residues (t={cfg.t}, ...), got shape "
+            f"{tuple(residues.shape)}"
+        )
+    if cfg.width == "wide":
+        return _wide_compose(pl, residues)
+    _no_tracers(cfg, "compose", residues)
+    rp = pl.params.plan
+    rn = np.asarray(residues)
+    flat = rn.reshape(cfg.t, -1)
+    out = np.empty((flat.shape[1], cfg.L), dtype=np.int64)
+    for r in range(flat.shape[1]):
+        acc = 0
+        for i in range(cfg.t):
+            qi = int(rp.qs[i])
+            y = (int(flat[i, r]) * int(rp.qi_tilde[i])) % qi
+            acc = (acc + y * (rp.q // qi)) % rp.q
+        out[r] = bigint.int_to_limbs(acc, cfg.w, cfg.L)
+    return jnp.asarray(out.reshape(rn.shape[1:] + (cfg.L,)))
+
+
+# --------------------------------------------------------------------------
+# wide-width internals
+# --------------------------------------------------------------------------
+
+
+def _wide_decompose(pl: Plan, z):
+    return wide_mod.decompose_channels(
+        z, _wide_specs(pl.params), pl.consts["wide_beta_pows"]
+    )
+
+
+def _wide_compose(pl: Plan, residues):
+    cfg = pl.config
+    limbs14 = wide_mod.compose_channels(
+        residues,
+        _wide_specs(pl.params),
+        pl.consts["wide_qi_tilde"],
+        pl.consts["wide_qi_star_limbs"],
+        pl.consts["wide_q_limbs"],
+    )
+    out = wide_mod.repack_limbs(limbs14, wide_mod.POST_W, cfg.w)
+    assert out.shape[-1] == cfg.L, (out.shape, cfg.L)
+    return out
+
+
+# --------------------------------------------------------------------------
+# oracle-width internals (host, exact, eager-only)
+# --------------------------------------------------------------------------
+
+
+def _oracle_polymul(pl: Plan, za, zb):
+    cfg = pl.config
+    _no_tracers(cfg, "polymul", za, zb)
+    za_n, zb_n = np.asarray(za), np.asarray(zb)
+    lead = za_n.shape[:-2]
+    a3 = za_n.reshape((-1,) + za_n.shape[-2:])
+    b3 = zb_n.reshape((-1,) + zb_n.shape[-2:])
+    out = np.empty((a3.shape[0], cfg.n, cfg.L), dtype=np.int64)
+    for r in range(a3.shape[0]):
+        a_ints = [bigint.limbs_to_int(a3[r, j], cfg.v) for j in range(cfg.n)]
+        b_ints = [bigint.limbs_to_int(b3[r, j], cfg.v) for j in range(cfg.n)]
+        p_ints = polymul_mod.oracle_multiply(a_ints, b_ints, pl.params)
+        out[r] = bigint.ints_to_limbs(p_ints, cfg.w, cfg.L)
+    return jnp.asarray(out.reshape(lead + (cfg.n, cfg.L)))
+
+
+# --------------------------------------------------------------------------
+# host <-> device format helpers + int convenience
+# --------------------------------------------------------------------------
+
+
+def to_segments(pl: Plan, xs) -> jax.Array:
+    """Python ints (length n) -> ``(n, S)`` base-2^v segment array."""
+    cfg = _require_plan(pl, "to_segments")
+    return jnp.asarray(
+        bigint.ints_to_limbs(xs, cfg.v, cfg.seg_count)
+    )
+
+
+def from_limbs(pl: Plan, limbs) -> list[int]:
+    """``(..., L)`` base-2^w output limbs -> flat list of Python ints."""
+    cfg = _require_plan(pl, "from_limbs")
+    return bigint.limbs_to_ints(np.asarray(limbs), cfg.w)
+
+
+# One module-level jitted executor shared by every plan: the Plan pytree
+# is an ordinary argument, so same-config calls hit one compiled entry.
+_polymul_jit = jax.jit(polymul)
+
+
+def polymul_ints(pl: Plan, a, b) -> list[int]:
+    """Host convenience: Python-int coefficient lists in, Python-int
+    product coefficients out, through the plan's full device pipeline
+    (or the host oracle for the oracle width)."""
+    cfg = _require_plan(pl, "polymul_ints")
+    za, zb = to_segments(pl, a), to_segments(pl, b)
+    if cfg.width == "oracle":
+        limbs = polymul(pl, za, zb)
+    else:
+        limbs = _polymul_jit(pl, za, zb)
+    return from_limbs(pl, limbs)

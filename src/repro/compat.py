@@ -1,0 +1,19 @@
+"""Version-compatibility gates, centralized.
+
+One module owns every ``jax``-version switch so the rest of the tree can
+use plain imports.  The declared floor is jax >= 0.5 (pyproject + CI
+matrix), where ``shard_map`` lives at the top level; the single fallback
+below keeps pinned pre-0.5 runtimes (e.g. hermetic eval containers that
+cannot pip-install) working and is the only place left to delete when
+the last such runtime is gone — the per-call-site try/except shims that
+used to live in ``train/aggregation.py`` and ``sharding/ctx.py`` were
+folded into this import.
+"""
+from __future__ import annotations
+
+try:  # jax >= 0.5: promoted out of jax.experimental
+    from jax import shard_map
+except ImportError:  # pragma: no cover - pre-0.5 pinned runtimes only
+    from jax.experimental.shard_map import shard_map
+
+__all__ = ["shard_map"]

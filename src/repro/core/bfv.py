@@ -15,12 +15,13 @@ with relinearization requires the BFV scaling step; a bigint reference
 implementation lives in :mod:`repro.core.bfv_ref` (host-side, tested) —
 matching paper scope, which cites HPS [33] for the full RNS variant.
 
-``make_context(..., backend=...)`` threads the datapath switch of
-:mod:`repro.kernels.ops` through every homomorphic product.  Because the
-BFV layer works on residue-domain tensors (it never re-enters segment
-form between ops), ``backend="pallas_fused_e2e"`` degrades here to the
-fused cascade for each product — the end-to-end single-kernel path
-serves the segments->limbs pipeline of :class:`ParenttMultiplier`.
+The context is built on a :class:`repro.api.Plan` (``make_context``
+resolves it once); every homomorphic product runs
+:func:`repro.api.negacyclic_mul` on that plan.  Because the BFV layer
+works on residue-domain tensors (it never re-enters segment form
+between ops), ``backend="pallas_fused_e2e"`` degrades here to the fused
+cascade for each product — the end-to-end single-kernel path serves the
+segments->limbs pipeline of :func:`repro.api.polymul`.
 
 SECURITY NOTE: parameters here are sized for systems evaluation, not for
 a production 128-bit security level (that needs the full error analysis
@@ -35,16 +36,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import bigint, rns as rns_mod
-from repro.core.params import ParenttParams, make_params
-from repro.kernels import ops as ops_mod
+from repro.core.params import ParenttParams
 
 
 class BfvContext(NamedTuple):
-    params: ParenttParams
+    plan: api.Plan
     pt_mod: int  # plaintext modulus p_t
     delta_res: np.ndarray  # (t,) floor(q / p_t) mod q_i
     noise_bound: int  # max magnitude of fresh noise samples
+
+    @property
+    def params(self) -> ParenttParams:
+        """Host-side parameter object (kept for existing call sites)."""
+        return self.plan.params
 
 
 @dataclasses.dataclass
@@ -62,11 +68,13 @@ def make_context(
     n: int = 4096, t: int = 6, v: int = 30, pt_mod: int = 1 << 24,
     backend: str = "jnp",
 ) -> BfvContext:
-    params = make_params(n=n, t=t, v=v, backend=backend)
-    delta = params.q // pt_mod
-    delta_res = np.array([delta % int(q) for q in params.plan.qs], dtype=np.int64)
+    plan = api.plan(n=n, t=t, v=v, backend=backend)
+    delta = plan.q // pt_mod
+    delta_res = np.array(
+        [delta % int(q) for q in plan.params.plan.qs], dtype=np.int64
+    )
     return BfvContext(
-        params=params, pt_mod=pt_mod, delta_res=delta_res, noise_bound=8
+        plan=plan, pt_mod=pt_mod, delta_res=delta_res, noise_bound=8
     )
 
 
@@ -124,7 +132,7 @@ def keygen(key: jax.Array, ctx: BfvContext) -> KeyPair:
     e = _lift(_noise(k_e, (n,), ctx.noise_bound), qs)
     q_b = qs[:, None]
     # pk0 = -(a*s + e)
-    as_ = ops_mod.negacyclic_mul(a, s_res, ctx.params)
+    as_ = api.negacyclic_mul(ctx.plan, a, s_res)
     pk0 = (q_b - (as_ + e) % q_b) % q_b
     return KeyPair(sk=s_res, pk=jnp.stack([pk0, a]))
 
@@ -144,8 +152,8 @@ def encrypt(key: jax.Array, m: jax.Array, kp: KeyPair, ctx: BfvContext) -> Ciphe
     pk0 = jnp.broadcast_to(pk0, (ctx.params.t,) + lead + (n,))
     pk1 = jnp.broadcast_to(pk1, (ctx.params.t,) + lead + (n,))
     dm = (m[None, ...] % ctx.pt_mod) * jnp.asarray(ctx.delta_res).reshape(q_b.shape)
-    c0 = (ops_mod.negacyclic_mul(pk0, u, ctx.params) + e1 + dm % q_b) % q_b
-    c1 = (ops_mod.negacyclic_mul(pk1, u, ctx.params) + e2) % q_b
+    c0 = (api.negacyclic_mul(ctx.plan, pk0, u) + e1 + dm % q_b) % q_b
+    c1 = (api.negacyclic_mul(ctx.plan, pk1, u) + e2) % q_b
     return Ciphertext(c=jnp.stack([c0, c1]))
 
 
@@ -172,7 +180,7 @@ def _phase(ct: Ciphertext, kp: KeyPair, ctx: BfvContext) -> jax.Array:
         (ctx.params.t,) + lead + (n,),
     )
     q_b = qs.reshape((-1,) + (1,) * (len(lead) + 1))
-    c1s = ops_mod.negacyclic_mul(ct.c[1], sk, ctx.params)
+    c1s = api.negacyclic_mul(ctx.plan, ct.c[1], sk)
     return (ct.c[0] + c1s) % q_b
 
 
@@ -226,6 +234,6 @@ def mul_plain(ct: Ciphertext, pt_poly: jax.Array, ctx: BfvContext) -> Ciphertext
     while w.ndim < len(tgt):
         w = w[:, None]
     w = jnp.broadcast_to(w, tgt)
-    c0 = ops_mod.negacyclic_mul(ct.c[0], w, ctx.params)
-    c1 = ops_mod.negacyclic_mul(ct.c[1], w, ctx.params)
+    c0 = api.negacyclic_mul(ctx.plan, ct.c[0], w)
+    c1 = api.negacyclic_mul(ctx.plan, ct.c[1], w)
     return Ciphertext(c=jnp.stack([c0, c1]))

@@ -1,20 +1,24 @@
-"""End-to-end PaReNTT modular polynomial multiplier (paper Fig 10).
+"""Ground-truth oracles for the PaReNTT multiplier (paper Fig 10), plus
+the deprecated :class:`ParenttMultiplier` class front door.
 
-Pipeline (Step 1/2/3 of Fig 10):
-    segments --decompose--> residues --NTT ⊙ iNTT (no shuffle)--> residues
-             --compose--> limbs of p(x) mod q
-
-plus ground-truth oracles:
+Oracles:
   * ``schoolbook_negacyclic`` — O(n^2) Python-bigint negacyclic product.
-  * ``oracle_multiply``       — same pipeline in Python bigints (any v,
-    including the t=4 / v=45 config whose products exceed int64).
+  * ``oracle_multiply``       — the RNS+NTT pipeline in Python bigints
+    (any v, including the t=4 / v=45 config whose products exceed
+    int64).  This is also the execution path of ``width="oracle"``
+    plans in :mod:`repro.api`.
+
+The end-to-end device pipeline moved behind the plan/execute API
+(:func:`repro.api.plan` / :func:`repro.api.polymul`), which dispatches
+on modulus width internally; :class:`ParenttMultiplier` remains as a
+thin delegating shim so existing snippets keep running.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bigint, rns as rns_mod
@@ -76,19 +80,13 @@ def limbs_out_to_ints(limbs, plan: rns_mod.RnsPlan) -> list[int]:
 
 
 class ParenttMultiplier:
-    """The paper's architecture as a batched JAX transform.
-
-    All methods operate on the last axis = polynomial coefficients; the
-    RNS channel axis is the leading axis of residue-domain arrays.
+    """DEPRECATED — use ``repro.api.plan(...)`` + ``repro.api.polymul``:
+    the plan/execute API is the single front door and absorbs the
+    backend/schedule/width dispatch this class used to expose.  This
+    shim delegates every method so existing snippets keep running.
 
     ``backend`` selects the datapath for all three steps (see
-    :mod:`repro.kernels.ops`): ``"jnp"`` (pure-jnp reference),
-    ``"pallas"`` (per-stage kernels), ``"pallas_fused"`` (the paper's
-    single-kernel NTT -> ⊙ -> iNTT cascade) or ``"pallas_fused_e2e"``
-    (the full decompose -> cascade -> compose pipeline in ONE kernel —
-    under it, ``__call__`` fuses end to end while the three stage
-    methods degrade to the closest per-stage kernels).  ``None`` defers
-    to ``params.backend``.
+    :mod:`repro.kernels.ops`); ``None`` defers to ``params.backend``.
     """
 
     def __init__(
@@ -104,47 +102,58 @@ class ParenttMultiplier:
                 f"means residue products overflow int64.  Use "
                 f"polymul.oracle_multiply (exact host bigints, any v) or "
                 f"repro.core.wide.WideParenttMultiplier (digit-split v=45 "
-                f"datapath) instead."
+                f"datapath) instead — or simply repro.api.plan(...), which "
+                f"dispatches on width automatically."
             )
+        from repro import api  # deferred: api imports this module
+
+        warnings.warn(
+            "ParenttMultiplier is deprecated; use repro.api.plan(...) + "
+            "repro.api.polymul(...) (one entry point for every modulus width)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         self.params = params
         self.use_sau = use_sau
         self.backend = ops_mod.resolve_backend(params, backend)
+        self._plan = api.plan_from_params(
+            params, backend=self.backend, use_sau=use_sau
+        )
 
     # -- step 1: pre-processing ------------------------------------------
     def preprocess(self, z: jax.Array) -> jax.Array:
         """z: (..., n, S) segments -> residues (t, ..., n)."""
-        return ops_mod.rns_decompose(
-            z, self.params, backend=self.backend, use_sau=self.use_sau
-        )
+        from repro import api
+
+        return api.decompose(self._plan, z)
 
     # -- step 2: evaluation in the residue domain ------------------------
     def residue_mul(self, ra: jax.Array, rb: jax.Array) -> jax.Array:
         """(t, ..., n) x (t, ..., n) -> (t, ..., n): parallel no-shuffle
         NTT cascades, one per RNS channel."""
-        return ops_mod.negacyclic_mul(ra, rb, self.params, backend=self.backend)
+        from repro import api
+
+        return api.negacyclic_mul(self._plan, ra, rb)
 
     # -- step 3: post-processing ------------------------------------------
     def postprocess(self, residues: jax.Array) -> jax.Array:
         """(t, ..., n) -> (..., n, L) limbs of p mod q."""
-        return ops_mod.rns_compose(residues, self.params, backend=self.backend)
+        from repro import api
+
+        return api.compose(self._plan, residues)
 
     # -- full pipeline ----------------------------------------------------
     @functools.partial(jax.jit, static_argnums=0)
     def __call__(self, za: jax.Array, zb: jax.Array) -> jax.Array:
-        """za, zb: (..., n, S) segment arrays -> (..., n, L) limb array.
+        """za, zb: (..., n, S) segment arrays -> (..., n, L) limb array,
+        via :func:`repro.api.polymul` (one pallas_call end to end on
+        ``backend="pallas_fused_e2e"``)."""
+        from repro import api
 
-        Routed through :func:`repro.kernels.ops.fused_polymul_e2e`: on
-        ``backend="pallas_fused_e2e"`` the whole pipeline is one
-        pallas_call (residues never touch HBM); otherwise it is the
-        preprocess/residue_mul/postprocess composition."""
-        return ops_mod.fused_polymul_e2e(
-            za, zb, self.params, backend=self.backend, use_sau=self.use_sau
-        )
+        return api.polymul(self._plan, za, zb)
 
     # -- host convenience ---------------------------------------------------
     def multiply_ints(self, a: list[int], b: list[int]) -> list[int]:
-        plan = self.params.plan
-        za = jnp.asarray(ints_to_segments(a, plan))
-        zb = jnp.asarray(ints_to_segments(b, plan))
-        limbs = self(za, zb)
-        return limbs_out_to_ints(np.asarray(limbs), plan)
+        from repro import api
+
+        return api.polymul_ints(self._plan, a, b)

@@ -12,19 +12,28 @@ beyond FPGA area: they keep wide modular arithmetic inside a 64-bit
 All ops are elementwise/broadcastable; a WideSpec carries the per-prime
 constants.  Validated against Python bigints (hypothesis sweeps) and the
 schoolbook polynomial oracle (tests/test_wide.py).
+
+The end-to-end pipeline lives behind :mod:`repro.api` (width dispatch at
+plan time); the ``*_channels`` functions below are the array-in/array-out
+building blocks it executes.  :class:`WideParenttMultiplier` remains as a
+thin deprecation shim over that API.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import ntt as ntt_mod
+from repro.core import bigint
 
 D = 23  # digit width
 M = (1 << D) - 1
+
+# Post-processing limb width: y(46b) x limb(14b) x t(4) stays inside
+# int64.  repro.api repacks pairs of these into the standard base-2^w
+# (w = 28) output limbs so every width path shares one output contract.
+POST_W = 14
 
 
 @dataclasses.dataclass(frozen=True)
@@ -156,98 +165,159 @@ def negacyclic_mul(a, b, fwd, inv, spec: WideSpec):
 
 
 # --------------------------------------------------------------------------
-# the paper's t=4 / v=45 multiplier (pre/post-processing included)
+# Multi-channel building blocks (executed by repro.api's "wide" width
+# path).  Leading axis = RNS channel; per-channel twiddle tables and
+# RNS constants arrive as stacked arrays (the Plan pytree's leaves), so
+# the same code serves eager calls, jit traces, and vmapped batches
+# without re-uploading tables.
+# --------------------------------------------------------------------------
+
+
+def decompose_channels(z, specs, beta_pows):
+    """z: (..., S) base-2^v segments -> residues (t, ...).
+
+    Per channel i:  a mod q_i = sum_k z_k * (B^k mod q_i)  with the
+    digit-split wide mul.  beta_pows: (t, S) device array of B^k mod q_i.
+    """
+    outs = []
+    for i, spec in enumerate(specs):
+        acc = z[..., 0].astype(jnp.int64)
+        for k in range(1, z.shape[-1]):
+            acc = add_mod(
+                acc, mul_mod(z[..., k].astype(jnp.int64), beta_pows[i, k], spec),
+                spec.q,
+            )
+        outs.append(acc)
+    return jnp.stack(outs)
+
+
+def ntt_channels(a, fwd, specs):
+    """a: (t, ..., n) -> forward wide NTT per channel; fwd: (t, n)."""
+    return jnp.stack(
+        [ntt_raw(a[i], fwd[i], spec) for i, spec in enumerate(specs)]
+    )
+
+
+def intt_channels(a, inv, specs):
+    """a: (t, ..., n) bit-reversed spectra -> natural order; inv: (t, n)."""
+    return jnp.stack(
+        [intt_raw(a[i], inv[i], spec) for i, spec in enumerate(specs)]
+    )
+
+
+def negacyclic_mul_channels(a, b, fwd, inv, specs):
+    """(t, ..., n) x (t, ..., n) -> per-channel negacyclic products."""
+    return jnp.stack(
+        [
+            negacyclic_mul(a[i], b[i], fwd[i], inv[i], spec)
+            for i, spec in enumerate(specs)
+        ]
+    )
+
+
+def compose_channels(residues, specs, qi_tilde, qi_star_limbs, q_limbs):
+    """Inverse CRT (Eq 10) with POST_W-bit limbs: residues (t, ...) ->
+    (..., L14) base-2^POST_W limbs of p mod q (canonical).
+
+    qi_star_limbs: (t, L14) limbs of q/q_i; q_limbs: (L14,).  Limb width
+    POST_W = 14 keeps y(46b) x limb(14b) x t products inside int64.
+    """
+    t = len(specs)
+    W, L = POST_W, qi_star_limbs.shape[-1]
+    ys = [
+        mul_mod(residues[i], qi_tilde[i], spec) for i, spec in enumerate(specs)
+    ]
+    y = jnp.stack(ys)  # (t, ..., n) each < q_i < 2^46
+    star_b = qi_star_limbs.reshape((t,) + (1,) * (y.ndim - 1) + (L,))
+    contrib = y[..., None] * star_b  # < 2^60, t-sum < 2^62
+    acc = bigint.carry_normalize(contrib.sum(axis=0), W)
+    q_b = q_limbs.reshape((1,) * (acc.ndim - 1) + (L,))
+    return bigint.mod_by_subtraction(
+        acc, jnp.broadcast_to(q_b, acc.shape), W, t - 1
+    )
+
+
+def repack_limbs(limbs, w_in: int, w_out: int):
+    """Exact repack of canonical base-2^w_in limbs into base-2^w_out
+    (w_out a multiple of w_in), zero-padding the tail group.  Because
+    ceil(ceil(B/w_in) / k) == ceil(B/(k*w_in)), repacking the wide
+    path's POST_W=14 limbs with w_out=28 yields exactly the standard
+    plan.L output limbs."""
+    if w_out % w_in:
+        raise ValueError(f"w_out={w_out} must be a multiple of w_in={w_in}")
+    k = w_out // w_in
+    L = limbs.shape[-1]
+    pad = (-L) % k
+    if pad:
+        limbs = jnp.concatenate(
+            [limbs, jnp.zeros(limbs.shape[:-1] + (pad,), limbs.dtype)], axis=-1
+        )
+    grouped = limbs.reshape(limbs.shape[:-1] + (-1, k))
+    shifts = jnp.asarray(
+        [1 << (w_in * j) for j in range(k)], dtype=limbs.dtype
+    )
+    return (grouped * shifts).sum(axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Deprecated front door (PR 4): the t=4 / v=45 multiplier as a class.
 # --------------------------------------------------------------------------
 
 
 class WideParenttMultiplier:
-    """End-to-end PaReNTT for v in (31, 46]: segments -> residues ->
-    per-channel wide-NTT cascade -> inverse CRT limbs.
+    """DEPRECATED — use ``repro.api.plan(n=..., t=..., v=45)`` +
+    ``repro.api.polymul``: width dispatch is a plan-time decision now,
+    not a user-facing class choice.  This shim delegates every method to
+    the api so external snippets keep running.
 
-    Post-processing limb width W=14 keeps y(46b) x limb(14b) x t(4)
-    inside int64."""
+    Note one intentional format change from the pre-api class:
+    ``postprocess``/``__call__`` now return the standard base-2^w
+    (w = plan.w = 28) output limbs shared by every width path, not the
+    internal POST_W=14 accumulation limbs (``multiply_ints`` results are
+    unchanged — same integers, wider limbs).
+    """
 
-    POST_W = 14
+    POST_W = POST_W
 
     def __init__(self, params):
         assert params.v > 31, "use ParenttMultiplier for v <= 31"
-        self.params = params
-        plan = params.plan
-        self.specs = tuple(from_special(p) for p in params.primes)
-        self.tables = [
-            ntt_mod.make_tables(int(q), params.n) for q in plan.qs
-        ]
-        W = self.POST_W
-        from repro.core import bigint
+        from repro import api  # deferred: api imports this module
 
-        self.L = -(-(plan.q.bit_length() + plan.t.bit_length()) // W)
-        self.qi_star_limbs = bigint.ints_to_limbs(
-            [plan.q // int(qi) for qi in plan.qs], W, self.L
+        warnings.warn(
+            "WideParenttMultiplier is deprecated; use repro.api.plan(...) "
+            "+ repro.api.polymul(...) (width dispatch happens at plan time)",
+            DeprecationWarning,
+            stacklevel=2,
         )
-        self.q_limbs = bigint.int_to_limbs(plan.q, W, self.L)
+        self.params = params
+        self._plan = api.plan_from_params(params)
 
     # -- step 1: residues via per-channel folding of base-2^v segments ----
     def preprocess(self, z):
         """z: (..., n, S) base-2^v segments -> residues (t, ..., n)."""
-        plan = self.params.plan
-        outs = []
-        for i, spec in enumerate(self.specs):
-            acc = z[..., 0].astype(jnp.int64)
-            for k in range(1, plan.seg_count):
-                pw = int(plan.beta_pows[i, k])  # B^k mod q_i < 2^46
-                acc = add_mod(
-                    acc, mul_mod(z[..., k].astype(jnp.int64), jnp.int64(pw), spec),
-                    spec.q,
-                )
-            outs.append(acc)
-        return jnp.stack(outs)
+        from repro import api
+
+        return api.decompose(self._plan, z)
 
     # -- step 2 ------------------------------------------------------------
     def residue_mul(self, ra, rb):
-        outs = []
-        for i, spec in enumerate(self.specs):
-            tb = self.tables[i]
-            outs.append(
-                negacyclic_mul(
-                    ra[i], rb[i], jnp.asarray(tb.fwd), jnp.asarray(tb.inv), spec
-                )
-            )
-        return jnp.stack(outs)
+        from repro import api
 
-    # -- step 3: Eq 10 with 14-bit limbs ------------------------------------
+        return api.negacyclic_mul(self._plan, ra, rb)
+
+    # -- step 3: Eq 10 ------------------------------------------------------
     def postprocess(self, residues):
-        from repro.core import bigint
+        from repro import api
 
-        plan = self.params.plan
-        W, L = self.POST_W, self.L
-        ys = []
-        for i, spec in enumerate(self.specs):
-            tilde = int(plan.qi_tilde[i])
-            ys.append(mul_mod(residues[i], jnp.int64(tilde), spec))
-        y = jnp.stack(ys)  # (t, ..., n) each < q_i < 2^46
-        star = jnp.asarray(self.qi_star_limbs)  # (t, L) 14-bit limbs
-        star_b = star.reshape((plan.t,) + (1,) * (y.ndim - 1) + (L,))
-        contrib = y[..., None] * star_b  # < 2^60, t-sum < 2^62
-        acc = bigint.carry_normalize(contrib.sum(axis=0), W)
-        q_b = jnp.asarray(self.q_limbs).reshape((1,) * (acc.ndim - 1) + (L,))
-        return bigint.mod_by_subtraction(
-            acc, jnp.broadcast_to(q_b, acc.shape), W, plan.t - 1
-        )
+        return api.compose(self._plan, residues)
 
     def __call__(self, za, zb):
-        ra, rb = self.preprocess(za), self.preprocess(zb)
-        return self.postprocess(self.residue_mul(ra, rb))
+        from repro import api
+
+        return api.polymul(self._plan, za, zb)
 
     # -- host convenience ----------------------------------------------------
     def multiply_ints(self, a, b):
-        from repro.core import bigint, polymul as pm
+        from repro import api
 
-        plan = self.params.plan
-        za = jnp.asarray(pm.ints_to_segments(a, plan))
-        zb = jnp.asarray(pm.ints_to_segments(b, plan))
-        limbs = jax.jit(self.__call__)(za, zb)
-        arr = np.asarray(limbs)
-        return [
-            bigint.limbs_to_int(row, self.POST_W)
-            for row in arr.reshape(-1, arr.shape[-1])
-        ]
+        return api.polymul_ints(self._plan, a, b)

@@ -28,6 +28,12 @@ The backend is threaded through :class:`repro.core.params.ParenttParams`
 the ``backend=`` keyword.  The legacy ``use_pallas=`` bool is kept as a
 deprecated alias (True -> the Pallas path, False -> ``"jnp"``).
 
+The public front door, :mod:`repro.api`, resolves backend/schedule ONCE
+at plan time into a frozen ``PlanConfig`` and calls these dispatchers
+with concrete values — per-call resolution here exists for the legacy
+entry points and degrades to validation when the value is already
+concrete.
+
 Pallas kernels run in interpret mode off-TPU and compiled mode on TPU.
 The ``"jnp"`` backend is also what the dry-run lowering uses on the
 512-device mesh, where interpret-mode python loops would bloat the HLO.
@@ -65,6 +71,7 @@ from repro.kernels import ntt as ntt_kernels
 __all__ = [
     "BACKENDS",
     "SCHEDULES",
+    "auto_backend",
     "resolve_backend",
     "resolve_schedule",
     "ntt_forward",
@@ -91,6 +98,14 @@ def _stage_backend(backend: str, cascade: bool = False) -> str:
     if backend == "pallas_fused_e2e":
         return "pallas_fused" if cascade else "pallas"
     return backend
+
+
+def auto_backend() -> str:
+    """The concrete datapath ``backend="auto"`` resolves to (at plan
+    time, see :mod:`repro.api`): the fused single-kernel Pallas path on
+    TPU, the pure-jnp reference elsewhere — off-TPU the Pallas kernels
+    run in interpret mode, which is an emulation, not a fast path."""
+    return "pallas_fused_e2e" if _is_tpu() else "jnp"
 
 
 def resolve_backend(

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.params import make_params
+import repro
 from repro.kernels import ops as ops_mod
 from repro.launch import analysis, hlo_analyzer
 from repro.launch.mesh import make_production_mesh
@@ -29,25 +29,26 @@ ARTIFACTS = os.path.normpath(
 )
 
 
-def polymul_step(za, zb, params, backend="jnp"):
+def polymul_step(plan, za, zb):
     """segments (B, n, S) x2 -> product limbs (B, n, L).  The full paper
     pipeline: decompose -> per-channel no-shuffle NTT cascade -> Eq 10,
-    through the ONE e2e dispatch entry point.  Defaults to the pure-jnp
-    datapath: interpret-mode Pallas loops (any of the pallas* backends
-    off-TPU, including pallas_fused_e2e) would bloat the lowered HLO on
-    the 512-device mesh; on a real TPU pass --backend pallas_fused_e2e
-    to lower the single fused kernel instead."""
-    return ops_mod.fused_polymul_e2e(
-        za, zb, params, backend=backend, use_sau=False
-    )
+    through the ONE plan/execute entry point.  The plan defaults to the
+    pure-jnp datapath: interpret-mode Pallas loops (any of the pallas*
+    backends off-TPU, including pallas_fused_e2e) would bloat the
+    lowered HLO on the 512-device mesh; on a real TPU pass --backend
+    pallas_fused_e2e to lower the single fused kernel instead."""
+    return repro.polymul(plan, za, zb)
 
 
 def run(mesh_kind: str, batch: int, out_dir: str, backend: str = "jnp",
         schedule: str = "auto", row_blk: int | None = None):
-    params = make_params(n=4096, t=6, v=30, schedule=schedule, row_blk=row_blk)
+    plan = repro.plan(
+        n=4096, t=6, v=30, backend=backend, schedule=schedule,
+        row_blk=row_blk, use_sau=False,
+    )
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     n_dev = 512 if mesh_kind == "multi" else 256
-    seg = jax.ShapeDtypeStruct((batch, 4096, params.plan.seg_count), jnp.int64)
+    seg = jax.ShapeDtypeStruct((batch, 4096, plan.config.seg_count), jnp.int64)
     ba = ("pod", "data") if mesh_kind == "multi" else ("data",)
     in_sh = NamedSharding(mesh, P(ba, None, None))
     t0 = time.time()
@@ -57,7 +58,7 @@ def run(mesh_kind: str, batch: int, out_dir: str, backend: str = "jnp",
         with mesh:
             # residue-domain tensors (t, B, n): channels over `model`
             def step(za, zb):
-                return polymul_step(za, zb, params, backend=backend)
+                return polymul_step(plan, za, zb)
 
             jitted = jax.jit(step, in_shardings=(in_sh, in_sh))
             lowered = jitted.lower(seg, seg)

@@ -57,11 +57,9 @@ def moe_scatter(slot, xk, n_rows: int):
     mesh = getattr(pol, "mesh", None) if pol is not None else None
     if mesh is None:
         return scatter_rows(slot, xk)
-    try:
-        from jax import shard_map
-    except ImportError:  # jax < 0.5: pre-promotion location
-        from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     ba = pol.batch_axes
     size = pol.batch_size
@@ -89,11 +87,9 @@ def moe_gather(eout, slot):
     mesh = getattr(pol, "mesh", None) if pol is not None else None
     if mesh is None:
         return gather_rows(eout, slot)
-    try:
-        from jax import shard_map
-    except ImportError:  # jax < 0.5: pre-promotion location
-        from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     ba = pol.batch_axes
     if slot.shape[0] % pol.batch_size != 0:

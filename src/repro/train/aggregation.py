@@ -48,11 +48,9 @@ def compressed_psum(grads, key, mesh, axis: str = "pod"):
     """All-reduce ``grads`` over ``axis`` with int8 payload.  Scales are
     reduced in f32 (tiny); values int32-summed after widening (sum of int8
     over <= 2^23 pods cannot overflow int32)."""
-    try:
-        from jax import shard_map
-    except ImportError:  # jax < 0.5: pre-promotion location
-        from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     leaves, treedef = jax.tree.flatten(grads)
     keys = list(jax.random.split(key, len(leaves)))

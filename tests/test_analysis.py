@@ -48,11 +48,9 @@ class TestHloAnalyzer:
         assert got == 3 * 4 * 2 * 64 * 64 * 64
 
     def test_collective_bytes_psum(self):
-        try:
-            from jax import shard_map
-        except ImportError:  # jax < 0.5: pre-promotion location
-            from jax.experimental.shard_map import shard_map
         from jax.sharding import Mesh, PartitionSpec as P
+
+        from repro.compat import shard_map
 
         mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("data",))
 

@@ -1,0 +1,310 @@
+"""The plan/execute front door (repro.api): width dispatch through ONE
+entry point, plan-time validation of every knob, pytree/jit/vmap
+semantics of Plan, and the delegation contract of the legacy class
+shims."""
+import random
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro
+from repro import api
+from repro.core import params as params_mod
+from repro.core import polymul as pm
+from repro.core import wide as wide_mod
+
+
+def _rand_ints(pl, seed, n=None):
+    rng = random.Random(seed)
+    n = n or pl.n
+    a = [rng.randrange(pl.q) for _ in range(n)]
+    b = [rng.randrange(pl.q) for _ in range(n)]
+    return a, b
+
+
+def _rand_segments(pl, seed, batch=2):
+    rng = np.random.default_rng(seed)
+    shape = (batch, pl.n, pl.config.seg_count)
+    return (
+        jnp.asarray(rng.integers(0, 1 << pl.v, size=shape)),
+        jnp.asarray(rng.integers(0, 1 << pl.v, size=shape)),
+    )
+
+
+class TestWidthDispatch:
+    """One polymul signature serving all three modulus-width datapaths,
+    bit-exact vs the Python-bigint oracle."""
+
+    @pytest.mark.parametrize(
+        "t,v,n,width",
+        [
+            (6, 30, 64, "int64"),  # the paper's preferred preset
+            (4, 45, 64, "wide"),  # the paper's wide-word preset
+        ],
+    )
+    def test_paper_presets_one_code_path(self, t, v, n, width):
+        pl = repro.plan(n=n, t=t, v=v)
+        assert pl.config.width == width
+        a, b = _rand_ints(pl, seed=v * n)
+        assert repro.polymul_ints(pl, a, b) == pm.oracle_multiply(a, b, pl.params)
+
+    def test_oracle_width_beyond_wide(self):
+        pl = repro.plan(n=32, t=2, v=50)
+        assert pl.config.width == "oracle"
+        assert pl.config.backend == "oracle"
+        a, b = _rand_ints(pl, seed=50)
+        # the oracle width EXECUTES oracle_multiply, so the independent
+        # check is the schoolbook oracle (different algorithm entirely)
+        got = repro.polymul_ints(pl, a, b)
+        assert got == pm.schoolbook_negacyclic(a, b, pl.q)
+
+    def test_output_contract_shared_across_widths(self):
+        """Every width returns (..., n, L) base-2^w limbs with the SAME
+        w (the wide path's internal 14-bit limbs are repacked)."""
+        for t, v in ((3, 30), (4, 45), (2, 50)):
+            pl = repro.plan(n=32, t=t, v=v)
+            assert pl.config.w == 28
+            za, zb = _rand_segments(pl, seed=t)
+            out = repro.polymul(pl, za, zb)
+            assert out.shape == (2, 32, pl.config.L)
+            assert int(jnp.max(out)) < (1 << pl.config.w)
+
+    def test_wide_batch_rows_match_host_oracle(self):
+        from repro.core import bigint
+
+        pl = repro.plan(n=32, t=4, v=45)
+        za, zb = _rand_segments(pl, seed=9, batch=2)
+        got = np.asarray(repro.polymul(pl, za, zb))
+        for r in range(2):
+            a = [
+                bigint.limbs_to_int(row, pl.v) for row in np.asarray(za[r])
+            ]
+            b = [
+                bigint.limbs_to_int(row, pl.v) for row in np.asarray(zb[r])
+            ]
+            want = pm.oracle_multiply(a, b, pl.params)
+            assert bigint.limbs_to_ints(got[r], pl.config.w) == want
+
+
+class TestPlanValidation:
+    """Every invalid combination fails at plan time with a ValueError —
+    never mid-execution."""
+
+    def test_bad_v(self):
+        with pytest.raises(ValueError, match="v must be"):
+            repro.plan(n=64, t=3, v=4)
+        with pytest.raises(ValueError, match="v must be"):
+            repro.plan(n=64, t=3, v=99)
+
+    def test_bad_n(self):
+        with pytest.raises(ValueError, match="power of two"):
+            repro.plan(n=48, t=3, v=30)
+        with pytest.raises(ValueError, match="power of two"):
+            repro.plan(n=2, t=3, v=30, schedule="four_step")
+
+    def test_unknown_backend_and_schedule(self):
+        with pytest.raises(ValueError, match="unknown backend"):
+            repro.plan(n=64, t=3, v=30, backend="cuda")
+        with pytest.raises(ValueError, match="unknown schedule"):
+            repro.plan(n=64, t=3, v=30, schedule="five_step")
+
+    def test_wide_width_rejects_pallas_and_four_step(self):
+        with pytest.raises(ValueError, match="pure-jnp"):
+            repro.plan(n=64, t=4, v=45, backend="pallas_fused_e2e")
+        with pytest.raises(ValueError, match="radix2"):
+            repro.plan(n=64, t=4, v=45, schedule="four_step")
+
+    def test_oracle_width_rejects_device_backends(self):
+        with pytest.raises(ValueError, match="oracle"):
+            repro.plan(n=32, t=2, v=50, backend="jnp")
+
+    def test_bad_row_blk(self):
+        with pytest.raises(ValueError, match="row_blk"):
+            repro.plan(n=64, t=3, v=30, row_blk=0)
+
+    def test_row_blk_threads_into_params(self):
+        """The kernel tile knob must reach the execution params (the
+        kernels read params.row_blk), not just the config record."""
+        pl = repro.plan(n=64, t=3, v=30, backend="pallas_fused", row_blk=2)
+        assert pl.config.row_blk == 2
+        assert pl.params.row_blk == 2
+        za, zb = _rand_segments(pl, seed=37)
+        want = repro.polymul(repro.plan(n=64, t=3, v=30), za, zb)
+        assert np.array_equal(
+            np.asarray(repro.polymul(pl, za, zb)), np.asarray(want)
+        )
+
+    def test_wide_inverse_crt_envelope_rejected_at_plan_time(self):
+        """t * 2^(v+14) > 2^63 would silently overflow the wide path's
+        int64 CRT accumulator — must be rejected at plan time."""
+        with pytest.raises(ValueError, match="inverse-CRT accumulator"):
+            repro.plan(n=16, t=12, v=46)
+        # the legacy adapter path must enforce the same envelope
+        with pytest.raises(ValueError, match="inverse-CRT accumulator"):
+            api.plan_from_params(params_mod.make_params(n=16, t=12, v=46))
+        # the paper's wide preset and the t=8/v=46 boundary stay valid
+        assert repro.plan(n=16, t=4, v=45).config.width == "wide"
+
+    def test_oracle_width_is_host_only(self):
+        pl = repro.plan(n=32, t=2, v=50)
+        za, zb = _rand_segments(pl, seed=1)
+        with pytest.raises(ValueError, match="cannot be traced"):
+            jax.jit(repro.polymul)(pl, za, zb)
+        with pytest.raises(ValueError, match="no device transform"):
+            repro.ntt(pl, jnp.zeros((2, 1, 32), jnp.int64))
+
+    def test_polymul_requires_a_plan(self):
+        p = params_mod.make_params(n=64, t=3, v=30)
+        with pytest.raises(TypeError, match="repro.api.Plan"):
+            repro.polymul(p, jnp.zeros((64, 3)), jnp.zeros((64, 3)))
+
+
+class TestPlanPytree:
+    """Plan is a registered pytree: device constants as leaves, config
+    as static aux — the property that makes jit/vmap/shard_map native."""
+
+    def test_flatten_roundtrip(self):
+        pl = repro.plan(n=64, t=3, v=30)
+        leaves, treedef = jax.tree_util.tree_flatten(pl)
+        assert leaves and all(hasattr(x, "dtype") for x in leaves)
+        pl2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert pl2.config == pl.config
+        za, zb = _rand_segments(pl, seed=3)
+        assert np.array_equal(
+            np.asarray(repro.polymul(pl2, za, zb)),
+            np.asarray(repro.polymul(pl, za, zb)),
+        )
+
+    def test_same_config_same_treedef(self):
+        t1 = jax.tree_util.tree_structure(repro.plan(n=64, t=3, v=30))
+        t2 = jax.tree_util.tree_structure(repro.plan(n=64, t=3, v=30))
+        assert t1 == t2
+        t3 = jax.tree_util.tree_structure(
+            repro.plan(n=64, t=3, v=30, backend="pallas_fused")
+        )
+        assert t1 != t3  # different config -> different static aux
+
+    def test_tables_shared_not_rebuilt(self):
+        """Same (n, t, v) -> the very same device buffers (no re-upload),
+        across plans and across backend variants."""
+        a = repro.plan(n=64, t=3, v=30)
+        b = repro.plan(n=64, t=3, v=30, backend="pallas_fused")
+        assert a.consts["ntt_fwd"] is b.consts["ntt_fwd"]
+        assert a.params is b.params
+
+
+class TestRetraceAndVmap:
+    def test_jit_compiles_once_across_same_config_plans(self):
+        """The retrace probe: repeated calls with a shared plan AND with
+        a rebuilt same-config plan hit one trace."""
+        traces = []
+
+        def f(pl, za, zb):
+            traces.append(1)
+            return repro.polymul(pl, za, zb)
+
+        fj = jax.jit(f)
+        pl = repro.plan(n=64, t=3, v=30)
+        za, zb = _rand_segments(pl, seed=11)
+        fj(pl, za, zb)
+        fj(pl, za, zb)
+        fj(repro.plan(n=64, t=3, v=30), za, zb)  # rebuilt, same config
+        assert len(traces) == 1
+        # a different config must (correctly) retrace
+        fj(repro.plan(n=64, t=3, v=30, use_sau=False), za, zb)
+        assert len(traces) == 2
+
+    def test_vmap_over_batch_matches_loop(self):
+        pl = repro.plan(n=64, t=3, v=30)
+        za, zb = _rand_segments(pl, seed=13, batch=3)
+        vm = jax.vmap(repro.polymul, in_axes=(None, 0, 0))(pl, za, zb)
+        loop = jnp.stack(
+            [repro.polymul(pl, za[i], zb[i]) for i in range(3)]
+        )
+        assert np.array_equal(np.asarray(vm), np.asarray(loop))
+
+    def test_vmap_wide_width(self):
+        pl = repro.plan(n=32, t=4, v=45)
+        za, zb = _rand_segments(pl, seed=17, batch=3)
+        vm = jax.jit(jax.vmap(repro.polymul, in_axes=(None, 0, 0)))(pl, za, zb)
+        loop = jnp.stack(
+            [repro.polymul(pl, za[i], zb[i]) for i in range(3)]
+        )
+        assert np.array_equal(np.asarray(vm), np.asarray(loop))
+
+
+class TestStageEntries:
+    def test_int64_stage_composition_equals_polymul(self):
+        pl = repro.plan(n=64, t=3, v=30)
+        za, zb = _rand_segments(pl, seed=19)
+        ra, rb = repro.decompose(pl, za), repro.decompose(pl, zb)
+        out = repro.compose(pl, repro.negacyclic_mul(pl, ra, rb))
+        assert np.array_equal(
+            np.asarray(out), np.asarray(repro.polymul(pl, za, zb))
+        )
+
+    def test_ntt_intt_roundtrip_both_device_widths(self):
+        for t, v in ((3, 30), (4, 45)):
+            pl = repro.plan(n=64, t=t, v=v)
+            rng = np.random.default_rng(v)
+            a = jnp.asarray(
+                np.stack(
+                    [
+                        rng.integers(0, int(q), size=(2, 64))
+                        for q in pl.params.plan.qs
+                    ]
+                )
+            )
+            back = repro.intt(pl, repro.ntt(pl, a))
+            assert np.array_equal(np.asarray(back), np.asarray(a))
+
+    def test_oracle_stage_roundtrip_on_host(self):
+        pl = repro.plan(n=32, t=2, v=50)
+        a, _ = _rand_ints(pl, seed=23)
+        za = repro.to_segments(pl, a)  # (n, S)
+        res = repro.decompose(pl, za)
+        assert res.shape == (pl.t, pl.n)
+        limbs = repro.compose(pl, res)
+        assert repro.from_limbs(pl, limbs) == [x % pl.q for x in a]
+
+
+class TestLegacyShims:
+    """The pre-api class front doors still import and delegate."""
+
+    def test_parentt_multiplier_delegates(self):
+        p = params_mod.make_params(n=64, t=3, v=30)
+        with pytest.warns(DeprecationWarning, match="repro.api.plan"):
+            m = pm.ParenttMultiplier(p, backend="pallas_fused")
+        assert m.backend == "pallas_fused"
+        a, b = _rand_ints(m._plan, seed=29)
+        assert m.multiply_ints(a, b) == pm.oracle_multiply(a, b, p)
+
+    def test_wide_multiplier_delegates(self):
+        p = params_mod.make_params(n=32, t=4, v=45)
+        with pytest.warns(DeprecationWarning, match="repro.api.plan"):
+            m = wide_mod.WideParenttMultiplier(p)
+        a, b = _rand_ints(m._plan, seed=31)
+        assert m.multiply_ints(a, b) == pm.oracle_multiply(a, b, p)
+
+    def test_api_surface_matches_committed_snapshot(self):
+        snap = Path(__file__).resolve().parent.parent / "API_SURFACE.txt"
+        want = sorted(snap.read_text().split())
+        assert sorted(repro.__all__) == want
+
+    def test_all_exports_resolve(self):
+        for name in repro.__all__:
+            assert getattr(repro, name) is not None
+
+    def test_plan_from_params_respects_params_knobs(self):
+        p = params_mod.make_params(
+            n=64, t=3, v=30, backend="pallas_fused", schedule="four_step",
+            row_blk=2,
+        )
+        pl = api.plan_from_params(p)
+        assert pl.config.backend == "pallas_fused"
+        assert pl.config.schedule == "four_step"
+        assert pl.config.row_blk == 2
