@@ -1,0 +1,196 @@
+"""Serving throughput: the batched PolymulEngine vs the unbatched
+per-request loop.
+
+The paper positions the feed-forward PaReNTT datapath for "low latency
+and high sample rate"; this benchmark measures the sample-rate half on
+the serving layer: R requests stream through (a) a sequential loop of
+jitted single-request ``repro.polymul`` calls and (b) the
+shape-bucketed batching engine at a fixed slot count.  Reported:
+requests/s for both, the batched/loop speedup, and the engine's
+p50/p99 submit-to-result latency plus padding/dispatch accounting.
+
+``--ci-smoke`` is the ``serve-smoke`` CI gate: it runs the small
+preset at batch 8, verifies the engine's mixed-preset stream bit-exact
+against the eager plan executor, MERGES a ``"serve"`` record into the
+BENCH_ci.json artifact written by ``benchmarks/polymul_e2e.py``, and
+exits non-zero if batched throughput falls below the unbatched loop
+(the existence proof of the batching win — off-TPU both sides run the
+same jnp datapath, so dispatch amortization is all that is measured).
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+import repro
+from repro import api
+from repro.serve.crypto_engine import PolymulEngine
+
+
+def _requests(pl, count: int, rng) -> list:
+    shape = (pl.n, pl.config.seg_count)
+    return [
+        (
+            rng.integers(0, 1 << pl.v, size=shape),
+            rng.integers(0, 1 << pl.v, size=shape),
+        )
+        for _ in range(count)
+    ]
+
+
+def _time_loop(pl, reqs, repeats: int) -> float:
+    """Best-of-N wall seconds for the sequential per-request loop
+    through the shared jitted executor (the unbatched baseline)."""
+    za0, zb0 = jnp.asarray(reqs[0][0]), jnp.asarray(reqs[0][1])
+    jax.block_until_ready(api.execute(pl, za0, zb0))  # compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for za, zb in reqs:
+            jax.block_until_ready(
+                api.execute(pl, jnp.asarray(za), jnp.asarray(zb))
+            )
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _time_engine(pl, reqs, batch: int, repeats: int):
+    """(best wall seconds, latency ms array, stats) for the batching
+    engine serving the same request list."""
+    eng = PolymulEngine(batch_slots=batch)
+    shape = (pl.n, pl.config.seg_count)
+    eng.submit(pl, np.zeros(shape, np.int64), np.zeros(shape, np.int64))
+    eng.run_until_idle()  # compile the padded-batch executable
+    best, lat = float("inf"), None
+    for _ in range(repeats):
+        for k in eng.stats:
+            eng.stats[k] = 0
+        t0 = time.perf_counter()
+        futs = [eng.submit(pl, za, zb) for za, zb in reqs]
+        eng.run_until_idle()
+        wall = time.perf_counter() - t0
+        if wall < best:
+            best = wall
+            lat = np.array([f.latency_s for f in futs]) * 1e3
+    return best, lat, dict(eng.stats), eng.trace_count
+
+
+def bench(n: int, t: int, v: int, *, batch: int, requests: int,
+          repeats: int, seed: int = 7) -> dict:
+    rng = np.random.default_rng(seed)
+    pl = repro.plan(n=n, t=t, v=v)
+    reqs = _requests(pl, requests, rng)
+    loop_s = _time_loop(pl, reqs, repeats)
+    eng_s, lat, stats, traces = _time_engine(pl, reqs, batch, repeats)
+    return {
+        "preset": {"n": n, "t": t, "v": v},
+        "batch_slots": batch,
+        "requests": requests,
+        "loop_rps": requests / loop_s,
+        "batched_rps": requests / eng_s,
+        "batched_vs_loop_speedup": loop_s / eng_s,
+        "latency_p50_ms": float(np.percentile(lat, 50)),
+        "latency_p99_ms": float(np.percentile(lat, 99)),
+        "dispatches": stats["dispatches"],
+        "padded_slots": stats["padded_slots"],
+        "jit_traces": traces,
+    }
+
+
+def mixed_stream_check(requests: int = 12, seed: int = 3) -> dict:
+    """Serve BOTH paper presets interleaved through one engine and
+    verify every result bit-exact against the eager plan executor
+    (itself oracle-gated by the tier-1 suite); also assert one jit
+    trace per distinct config."""
+    rng = np.random.default_rng(seed)
+    eng = PolymulEngine(batch_slots=4)
+    plans = [eng.plan(n=64, t=3, v=30), eng.plan(n=32, t=4, v=45)]
+    reqs = []
+    for i in range(requests):
+        pl = plans[i % 2]
+        za, zb = _requests(pl, 1, rng)[0]
+        reqs.append((pl, za, zb))
+    futs = [eng.submit(pl, za, zb) for pl, za, zb in reqs]
+    eng.run_until_idle()
+    exact = all(
+        np.array_equal(
+            f.result(),
+            np.asarray(repro.polymul(pl, jnp.asarray(za), jnp.asarray(zb))),
+        )
+        for f, (pl, za, zb) in zip(futs, reqs)
+    )
+    return {
+        "requests": requests,
+        "configs": len({api.plan_key(pl) for pl, _, _ in reqs}),
+        "bit_exact": bool(exact),
+        "jit_traces": eng.trace_count,
+    }
+
+
+def run_ci_smoke(out_path: str, *, batch: int = 8, requests: int = 64,
+                 repeats: int = 3) -> dict:
+    rec = bench(64, 3, 30, batch=batch, requests=requests, repeats=repeats)
+    rec["mixed_stream"] = mixed_stream_check()
+    failures = []
+    if rec["batched_vs_loop_speedup"] < 1.0:
+        failures.append(
+            f"batched engine is SLOWER than the unbatched loop at batch "
+            f"{batch}: {rec['batched_rps']:.1f} vs {rec['loop_rps']:.1f} "
+            f"req/s — the batching win regressed"
+        )
+    if not rec["mixed_stream"]["bit_exact"]:
+        failures.append("mixed-preset stream is not bit-exact vs polymul")
+    if rec["mixed_stream"]["jit_traces"] != rec["mixed_stream"]["configs"]:
+        failures.append(
+            f"mixed stream traced {rec['mixed_stream']['jit_traces']} "
+            f"times for {rec['mixed_stream']['configs']} configs — the "
+            f"plan-bucket cache regressed"
+        )
+    rec["failures"] = failures
+    # merge into the bench-smoke artifact (polymul_e2e writes it first
+    # in CI; standalone runs create a serve-only record)
+    doc = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            doc = json.load(f)
+    doc["serve"] = rec
+    doc["failures"] = doc.get("failures", []) + failures
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(json.dumps(rec, indent=1))
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ci-smoke", action="store_true",
+                    help="small-preset gate for the serve-smoke CI step")
+    ap.add_argument("--out", default="BENCH_ci.json",
+                    help="JSON artifact to merge the 'serve' record into")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--t", type=int, default=6)
+    ap.add_argument("--v", type=int, default=30)
+    args = ap.parse_args(argv)
+    if args.ci_smoke:
+        rec = run_ci_smoke(args.out, batch=args.batch,
+                           requests=args.requests, repeats=args.repeats)
+        for msg in rec["failures"]:
+            print(f"[FAIL] {msg}", file=sys.stderr)
+        return 1 if rec["failures"] else 0
+    rec = bench(args.n, args.t, args.v, batch=args.batch,
+                requests=args.requests, repeats=args.repeats)
+    print(json.dumps(rec, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

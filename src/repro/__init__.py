@@ -33,11 +33,13 @@ from repro.api import (  # noqa: E402  (x64 must flip before jax.numpy use)
     PlanConfig,
     compose,
     decompose,
+    execute,
     from_limbs,
     intt,
     negacyclic_mul,
     ntt,
     plan,
+    plan_key,
     polymul,
     polymul_ints,
     to_segments,
@@ -52,11 +54,13 @@ __all__ = [
     "__version__",
     "compose",
     "decompose",
+    "execute",
     "from_limbs",
     "intt",
     "negacyclic_mul",
     "ntt",
     "plan",
+    "plan_key",
     "polymul",
     "polymul_ints",
     "to_segments",

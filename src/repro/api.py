@@ -46,14 +46,20 @@ does **not** retrace; ``jax.vmap``/``shard_map`` thread batch axes of
 ``za``/``zb`` through with ``in_axes=None`` for the plan (no table
 rebuilds, no re-uploads).  Tested by ``tests/test_api.py``.
 
-One honest caveat on leaf use: the **wide** width consumes the leaves
-directly, but the **int64** width executes through the existing
-:mod:`repro.kernels.ops` layer, which binds the *same underlying device
-buffers* from the static ``params`` as closed-over jit constants — the
-leaves there carry the structure (treedef equality, transform
-plumbing), not the dataflow, so ``jax.tree.map``/``device_put`` over an
-int64 plan's leaves does not redirect the kernels.  Threading the
-leaves through the ops layer is a recorded ROADMAP follow-up.
+Leaf use is load-bearing for **both** device widths: the wide width
+consumes the leaves directly, and the int64 width executes through
+:mod:`repro.kernels.ops` with its table bindings rebuilt from the
+Plan's pytree leaves (:func:`_bound_params` — a lightweight view over
+``params`` whose device arrays are the plan's leaves, with the channel
+count re-derived from the leaf shapes).  So ``jax.tree.map`` /
+``device_put`` / sharding of an int64 plan's leaves redirects the
+kernels too — the property the serving layer's ``model``-axis
+``shard_map`` of :func:`negacyclic_mul` relies on to keep each shard's
+NTT/Shoup/CRT tables resident next to its RNS channels
+(:mod:`repro.serve.crypto_engine`).  The only constants that stay baked
+into kernel closures are the per-channel SAU decompose *circuits*
+(python-int shift/add networks — the paper's specialized hardware, not
+tables).
 """
 from __future__ import annotations
 
@@ -86,6 +92,8 @@ __all__ = [
     "PlanConfig",
     "plan",
     "plan_from_params",
+    "plan_key",
+    "execute",
     "polymul",
     "polymul_ints",
     "ntt",
@@ -189,6 +197,86 @@ class Plan:
     def tree_unflatten(cls, aux, leaves):
         config, params, keys = aux
         return cls(config=config, params=params, consts=dict(zip(keys, leaves)))
+
+
+# --------------------------------------------------------------------------
+# leaf-bound execution views: the int64 ops layer reads its device tables
+# through these, so the Plan's pytree leaves are the dataflow (DESIGN §7)
+# --------------------------------------------------------------------------
+
+
+class _LeafBound:
+    """Attribute view of a host params/tables/plan object with selected
+    attributes (the device-resident ``*_d`` arrays, plus the channel
+    count ``t``) rebound to a Plan's pytree leaves.
+
+    Everything else — python-int constants, shapes, SAU circuits —
+    delegates to the wrapped base object, which stays the stable,
+    identity-hashable value for jit-static kernel arguments
+    (:func:`repro.kernels.ops.unbind` recovers it).  Under ``shard_map``
+    the leaves arrive shard-local, so ``t`` is re-derived from the leaf
+    shapes and every kernel runs on exactly its shard's RNS channels.
+    """
+
+    __slots__ = ("_base", "_over")
+
+    def __init__(self, base, over: dict):
+        self._base = base
+        self._over = over
+
+    def __getattr__(self, name):  # called only when not found on self
+        over = object.__getattribute__(self, "_over")
+        if name in over:
+            return over[name]
+        return getattr(object.__getattribute__(self, "_base"), name)
+
+    def __repr__(self):
+        return f"_LeafBound({self._base!r}, over={sorted(self._over)})"
+
+
+# ChannelTables / RnsPlan attribute stems whose ``<stem>_d`` device arrays
+# live in an int64 plan's leaf dict (as "ntt_<stem>" / "rns_<stem>").
+_CT_LEAF_STEMS = (
+    "qs", "fwd", "inv", "half", "mul_eps", "fs_row_fwd", "fs_row_inv",
+    "fwd_shoup", "inv_shoup", "fs_row_fwd_shoup", "fs_row_inv_shoup",
+)
+_RNS_LEAF_STEMS = ("qs", "beta_pows", "qi_tilde", "qi_star_limbs", "q_limbs")
+
+
+def _bound_params(pl: Plan):
+    """A ParenttParams view whose NTT/RNS device tables are THIS plan's
+    pytree leaves (int64 width; other widths return the params as-is).
+
+    Cached per Plan instance: eager plans are long-lived so their view
+    is built once; under jit, ``tree_unflatten`` makes a fresh Plan per
+    trace, so tracer-bearing views never outlive their trace.
+    """
+    if pl.config.width != "int64":
+        return pl.params
+    cached = pl.__dict__.get("_bound_params_cache")
+    if cached is not None:
+        return cached
+    c = pl.consts
+    t_local = int(c["ntt_qs"].shape[0])
+    ct_over = {"t": t_local}
+    for stem in _CT_LEAF_STEMS:
+        leaf = c.get("ntt_" + stem)
+        if leaf is not None:
+            ct_over[stem + "_d"] = leaf
+    rns_over = {"t": t_local}
+    for stem in _RNS_LEAF_STEMS:
+        rns_over[stem + "_d"] = c["rns_" + stem]
+    params = pl.params
+    bound = _LeafBound(
+        params,
+        {
+            "t": t_local,
+            "tables": _LeafBound(params.tables, ct_over),
+            "plan": _LeafBound(params.plan, rns_over),
+        },
+    )
+    object.__setattr__(pl, "_bound_params_cache", bound)
+    return bound
 
 
 # --------------------------------------------------------------------------
@@ -428,8 +516,8 @@ def polymul(pl: Plan, za, zb):
     cfg = _require_plan(pl, "polymul")
     if cfg.width == "int64":
         return ops_mod.fused_polymul_e2e(
-            za, zb, pl.params, backend=cfg.backend, use_sau=cfg.use_sau,
-            schedule=cfg.schedule,
+            za, zb, _bound_params(pl), backend=cfg.backend,
+            use_sau=cfg.use_sau, schedule=cfg.schedule,
         )
     _check_poly_segments(za, cfg, "polymul", "za")
     _check_poly_segments(zb, cfg, "polymul", "zb")
@@ -455,7 +543,7 @@ def ntt(pl: Plan, a):
     cfg = _require_plan(pl, "ntt")
     if cfg.width == "int64":
         return ops_mod.ntt_forward(
-            a, pl.params, backend=cfg.backend, schedule=cfg.schedule
+            a, _bound_params(pl), backend=cfg.backend, schedule=cfg.schedule
         )
     if cfg.width == "wide":
         _check_residues(a, cfg, "ntt")
@@ -473,7 +561,7 @@ def intt(pl: Plan, a):
     cfg = _require_plan(pl, "intt")
     if cfg.width == "int64":
         return ops_mod.ntt_inverse(
-            a, pl.params, backend=cfg.backend, schedule=cfg.schedule
+            a, _bound_params(pl), backend=cfg.backend, schedule=cfg.schedule
         )
     if cfg.width == "wide":
         _check_residues(a, cfg, "intt")
@@ -492,7 +580,7 @@ def negacyclic_mul(pl: Plan, a, b):
     cfg = _require_plan(pl, "negacyclic_mul")
     if cfg.width == "int64":
         return ops_mod.negacyclic_mul(
-            a, b, pl.params, backend=cfg.backend, schedule=cfg.schedule
+            a, b, _bound_params(pl), backend=cfg.backend, schedule=cfg.schedule
         )
     if cfg.width == "wide":
         _check_residues(a, cfg, "negacyclic_mul")
@@ -517,7 +605,7 @@ def decompose(pl: Plan, z):
     cfg = _require_plan(pl, "decompose")
     if cfg.width == "int64":
         return ops_mod.rns_decompose(
-            z, pl.params, backend=cfg.backend, use_sau=cfg.use_sau
+            z, _bound_params(pl), backend=cfg.backend, use_sau=cfg.use_sau
         )
     if z.ndim < 1 or z.shape[-1] != cfg.seg_count:
         raise ValueError(
@@ -545,7 +633,9 @@ def compose(pl: Plan, residues):
     CRT-composed value (canonical, < q)."""
     cfg = _require_plan(pl, "compose")
     if cfg.width == "int64":
-        return ops_mod.rns_compose(residues, pl.params, backend=cfg.backend)
+        return ops_mod.rns_compose(
+            residues, _bound_params(pl), backend=cfg.backend
+        )
     if residues.ndim < 1 or residues.shape[0] != cfg.t:
         raise ValueError(
             f"compose: expected residues (t={cfg.t}, ...), got shape "
@@ -636,6 +726,37 @@ def from_limbs(pl: Plan, limbs) -> list[int]:
 # One module-level jitted executor shared by every plan: the Plan pytree
 # is an ordinary argument, so same-config calls hit one compiled entry.
 _polymul_jit = jax.jit(polymul)
+
+# Donating twin for serving hot loops: the operand buffers are handed to
+# XLA for reuse (the engine builds fresh padded slot buffers per
+# dispatch, so nothing ever reads them back).
+_polymul_jit_donating = jax.jit(polymul, donate_argnums=(1, 2))
+
+
+def plan_key(pl: Plan) -> PlanConfig:
+    """The hashable bucket/cache key of a plan: its frozen
+    :class:`PlanConfig`.  Two plans with equal keys are interchangeable
+    executables (same treedef, same shared device tables), so serving
+    layers key jit caches and batch buckets on this
+    (:class:`repro.serve.crypto_engine.PolymulEngine`)."""
+    return _require_plan(pl, "plan_key")
+
+
+def execute(pl: Plan, za, zb, *, donate: bool = False):
+    """Jitted :func:`polymul` through the shared module-level executor —
+    the serving layer's execute hook.  One compiled entry per distinct
+    :func:`plan_key`; ``donate=True`` additionally donates the operand
+    buffers to XLA (callers must not reuse ``za``/``zb`` afterwards —
+    the batching engine's padded slot buffers are built fresh per
+    dispatch, which is exactly this contract; backends without donation
+    support, e.g. CPU, warn and copy).  Oracle-width plans fall back to
+    the eager host path."""
+    cfg = _require_plan(pl, "execute")
+    if cfg.width == "oracle":
+        return polymul(pl, za, zb)
+    if donate:
+        return _polymul_jit_donating(pl, za, zb)
+    return _polymul_jit(pl, za, zb)
 
 
 def polymul_ints(pl: Plan, a, b) -> list[int]:

@@ -263,10 +263,20 @@ def _make_compose_kernel(plan: rns_mod.RnsPlan):
 
 
 @functools.partial(jax.jit, static_argnames=("plan", "interpret"))
-def compose_pallas(residues, *, plan: rns_mod.RnsPlan, interpret: bool = True):
-    """residues: (t, rows) -> limbs (rows, L) of the composed value mod q."""
+def compose_pallas(residues, *, plan: rns_mod.RnsPlan, qs=None, qi_tilde=None,
+                   star=None, q_limbs=None, interpret: bool = True):
+    """residues: (t, rows) -> limbs (rows, L) of the composed value mod q.
+
+    The CRT table operands default to the plan's own device uploads;
+    the ops layer overrides them with a Plan's pytree leaves so that
+    ``device_put``/sharding of the leaves redirects this kernel too
+    (``plan`` itself stays jit-static — circuit structure only)."""
     t, rows = residues.shape
     L = plan.L
+    qs = plan.qs_d if qs is None else qs
+    qi_tilde = plan.qi_tilde_d if qi_tilde is None else qi_tilde
+    star = plan.qi_star_limbs_d if star is None else star
+    q_limbs = plan.q_limbs_d if q_limbs is None else q_limbs
     pad = (-rows) % BLK
     rp = jnp.pad(residues, ((0, 0), (0, pad))) if pad else residues
     kern = _make_compose_kernel(plan)
@@ -285,9 +295,9 @@ def compose_pallas(residues, *, plan: rns_mod.RnsPlan, interpret: bool = True):
         interpret=interpret,
     )(
         rp,
-        plan.qs_d.reshape(t, 1),
-        plan.qi_tilde_d.reshape(t, 1),
-        plan.qi_star_limbs_d,
-        plan.q_limbs_d.reshape(1, L),
+        qs.reshape(t, 1),
+        qi_tilde.reshape(t, 1),
+        star,
+        q_limbs.reshape(1, L),
     )
     return out[:rows]

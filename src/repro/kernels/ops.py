@@ -72,6 +72,7 @@ __all__ = [
     "BACKENDS",
     "SCHEDULES",
     "auto_backend",
+    "unbind",
     "resolve_backend",
     "resolve_schedule",
     "ntt_forward",
@@ -89,6 +90,19 @@ __all__ = [
 
 def _is_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def unbind(obj):
+    """The stable host object behind a leaf-bound view (see
+    ``repro.api._LeafBound``), or ``obj`` itself.
+
+    The api layer hands this dispatch layer params/tables/plan *views*
+    whose device arrays are a Plan's pytree leaves (possibly tracers, so
+    sharding the leaves is load-bearing).  Kernel wrappers that take a
+    plan as a jit-STATIC argument need the underlying identity-hashable
+    host object instead — a fresh view (or one holding tracers) must
+    never become a jit cache key."""
+    return getattr(obj, "_base", obj)
 
 
 def _stage_backend(backend: str, cascade: bool = False) -> str:
@@ -320,7 +334,7 @@ def rns_decompose(z, params: ParenttParams, *, backend: str | None = None,
     lead = z.shape[:-1]
     z2 = z.reshape(-1, z.shape[-1])
     out = crt_kernels.decompose_pallas(
-        z2, plan=params.plan, interpret=not _is_tpu()
+        z2, plan=unbind(params.plan), interpret=not _is_tpu()
     )  # (t, rows)
     return out.reshape((params.t,) + lead)
 
@@ -338,8 +352,12 @@ def rns_compose(residues, params: ParenttParams, *, backend: str | None = None,
         return rns_mod.compose(residues, params.plan)
     lead = residues.shape[1:]
     r2 = residues.reshape(params.t, -1)
+    rp = params.plan  # possibly a leaf-bound view: its *_d arrays are
+    # plan leaves, passed as TRACED kernel operands below
     out = crt_kernels.compose_pallas(
-        r2, plan=params.plan, interpret=not _is_tpu()
+        r2, plan=unbind(rp), qs=rp.qs_d, qi_tilde=rp.qi_tilde_d,
+        star=rp.qi_star_limbs_d, q_limbs=rp.q_limbs_d,
+        interpret=not _is_tpu(),
     )  # (rows, L)
     return out.reshape(lead + (params.plan.L,))
 
@@ -396,8 +414,8 @@ def fused_polymul_e2e(za, zb, params: ParenttParams, *,
     out = ntt_kernels.fused_e2e_polymul_pallas(
         z3a, z3b, fwd, inv, plan.qi_star_limbs_d, plan.q_limbs_d,
         fsh, ish, frow, irow, frsh, irsh,
-        plan=plan, schedule=schedule, lazy=lazy, row_blk=params.row_blk,
-        interpret=not _is_tpu(),
+        plan=unbind(plan), schedule=schedule, lazy=lazy,
+        row_blk=params.row_blk, interpret=not _is_tpu(),
     )
     return out.reshape(lead + (params.n, plan.L))
 

@@ -1,0 +1,18 @@
+"""Serving engines: the LM slot-batching decode engine and the crypto
+polymul batching engine (shape-bucketed continuous batching over the
+plan/execute API, DESIGN §8)."""
+from repro.serve.crypto_engine import (
+    PolymulEngine,
+    PolymulFuture,
+    negacyclic_mul_sharded,
+    polymul_sharded,
+)
+from repro.serve.engine import Engine
+
+__all__ = [
+    "Engine",
+    "PolymulEngine",
+    "PolymulFuture",
+    "negacyclic_mul_sharded",
+    "polymul_sharded",
+]

@@ -1,0 +1,399 @@
+"""Batched HE-polymul serving engine: shape-bucketed continuous batching
+and mesh-sharded execution over the plan/execute API.
+
+The paper's pitch is *low latency and high sample rate* — the
+feed-forward PaReNTT datapath "can be pipelined at arbitrary levels" —
+and the GPU-HE literature (Shivdikar et al., accelerating polynomial
+multiplication on GPUs) locates the real throughput in batching many
+residue-polynomial products into one device dispatch.  This module is
+that serving layer for the reproduction:
+
+* **Shape buckets.**  Requests arrive with heterogeneous plans; the
+  frozen, hashable :class:`repro.api.PlanConfig` (``api.plan_key``) is
+  the bucket key.  Every distinct config gets exactly ONE jit trace —
+  the engine's executor takes the :class:`~repro.api.Plan` pytree as an
+  ordinary argument, so same-config dispatches hit one compiled entry
+  (asserted by the trace-count probe in ``tests/test_serve_crypto.py``).
+* **Fixed batch slots.**  Each dispatch pads its bucket's pending
+  requests to ``batch_slots`` rows with zero polynomials, so the
+  compiled executable sees ONE static shape per config (continuous-
+  batching admission, same slot discipline as the LM
+  :class:`repro.serve.engine.Engine`).  Zero rows are dead weight, not
+  a correctness hazard: results are sliced back per request.
+* **Mesh mode.**  With ``mesh=``, dispatches run
+  :func:`polymul_sharded`: decompose/compose ride GSPMD on the
+  data-parallel batch edges while the heavy residue cascade runs under
+  an explicit ``shard_map`` — the RNS channel axis of
+  ``repro.negacyclic_mul`` over ``model`` (the paper's t parallel
+  datapaths mapped to t parallel shards) and the batch axis over
+  ``data``.  The plan's table leaves are sliced per shard by the same
+  ``shard_map`` (``partition.plan_leaf_specs``), which is exactly what
+  the leaf-threaded ops layer (DESIGN §7) exists for: each shard's
+  kernels bind the NTT/Shoup/CRT tables of its own channels, not jit
+  constants.
+
+Usage::
+
+    eng = PolymulEngine(batch_slots=8)
+    pl = eng.plan(n=4096, t=6, v=30)
+    fut = eng.submit(pl, za, zb)      # za, zb: (n, S) segment arrays
+    eng.run_until_idle()
+    limbs = fut.result()              # (n, L)
+
+Driver entry points: ``launch/serve_crypto.py`` (synthetic mixed-preset
+traffic, Poisson arrivals) and ``benchmarks/serve_throughput.py`` (the
+``serve-smoke`` CI gate: batched throughput >= the unbatched loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.compat import shard_map
+from repro.sharding import ctx as ctx_mod
+from repro.sharding import partition
+
+__all__ = [
+    "PolymulEngine",
+    "PolymulFuture",
+    "negacyclic_mul_sharded",
+    "polymul_sharded",
+]
+
+
+# --------------------------------------------------------------------------
+# mesh-sharded execution (the model x data layout of DESIGN §8)
+# --------------------------------------------------------------------------
+
+
+def _mesh_sizes(mesh) -> tuple[int, int]:
+    """(model_size, data_batch_size) of a serving mesh."""
+    msize = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    bsize = 1
+    for a in partition.batch_axes(mesh):
+        bsize *= mesh.shape[a]
+    return msize, bsize
+
+
+def negacyclic_mul_sharded(pl: api.Plan, a, b, *, mesh):
+    """``shard_map`` the residue cascade: ``a``, ``b`` are ``(t, B, n)``
+    residue tensors; the RNS channel axis shards over ``model``, the
+    batch axis over the data axes, and the plan's table leaves are
+    sliced per shard alongside them (``partition.plan_leaf_specs``) so
+    every shard's NTT runs on locally-resident tables.
+
+    Bit-exact vs. the single-device :func:`repro.api.negacyclic_mul`:
+    the per-channel cascades are independent (the RNS parallelism the
+    paper's t datapaths exploit), so sharding channels is a pure
+    layout decision.  int64-width plans only — the wide datapath keys
+    per-channel host constants by global channel index and cannot be
+    sliced by leaves alone.
+    """
+    cfg = api.plan_key(pl)
+    if cfg.width != "int64":
+        raise ValueError(
+            f"negacyclic_mul_sharded serves int64-width plans only "
+            f"(got width={cfg.width!r}); the wide/oracle datapaths bake "
+            f"per-channel host constants that shard_map cannot slice"
+        )
+    msize, bsize = _mesh_sizes(mesh)
+    if cfg.t % msize:
+        raise ValueError(
+            f"t={cfg.t} RNS channels do not divide the model axis "
+            f"({msize}-way): shrink the axis or pick t a multiple of it"
+        )
+    if a.ndim != 3 or a.shape[0] != cfg.t or a.shape[-1] != cfg.n:
+        raise ValueError(
+            f"negacyclic_mul_sharded: expected residues (t={cfg.t}, B, "
+            f"n={cfg.n}), got shape {tuple(a.shape)}"
+        )
+    if a.shape != b.shape:
+        raise ValueError(
+            f"negacyclic_mul_sharded: operand shapes differ: "
+            f"{tuple(a.shape)} vs {tuple(b.shape)}"
+        )
+    if a.shape[1] % bsize:
+        raise ValueError(
+            f"batch {a.shape[1]} does not divide the data axes "
+            f"({bsize}-way); pad the batch (the engine's slot padding "
+            f"guarantees this)"
+        )
+    leaf_specs = partition.plan_leaf_specs(mesh, pl)
+    res_spec = partition.polymul_specs(mesh, pl)["residues"]
+
+    def _local(consts, a_s, b_s):
+        # Rebuild a shard-local Plan around the sliced leaves: the ops
+        # layer rebinds its kernels to these tables and re-derives the
+        # local channel count from their shapes (api._bound_params).
+        local = api.Plan(config=pl.config, params=pl.params, consts=consts)
+        return api.negacyclic_mul(local, a_s, b_s)
+
+    fn = shard_map(
+        _local,
+        mesh=mesh,
+        in_specs=(leaf_specs, res_spec, res_spec),
+        out_specs=res_spec,
+    )
+    return fn(pl.consts, a, b)
+
+
+def polymul_sharded(pl: api.Plan, za, zb, *, mesh):
+    """Mesh-mode end-to-end polymul: ``(B, n, S)`` segments ->
+    ``(B, n, L)`` limbs.  Decompose/compose are batch-parallel edges
+    (constrained to the ``polymul_specs`` layout so GSPMD cannot
+    all-gather the residue tensors); the cascade between them is the
+    explicit ``model`` x ``data`` ``shard_map`` of
+    :func:`negacyclic_mul_sharded`.  Compose's channel reduction is the
+    one cross-``model`` collective, and GSPMD inserts exactly that."""
+    cfg = api.plan_key(pl)
+    if cfg.width != "int64":
+        raise ValueError(
+            f"polymul_sharded serves int64-width plans only "
+            f"(got width={cfg.width!r})"
+        )
+    pol = ctx_mod.make_crypto_policy(mesh, pl)
+    za = pol(za, "segments")
+    zb = pol(zb, "segments")
+    ra = pol(api.decompose(pl, za), "residues")
+    rb = pol(api.decompose(pl, zb), "residues")
+    rp = negacyclic_mul_sharded(pl, ra, rb, mesh=mesh)
+    return pol(api.compose(pl, rp), "limbs")
+
+
+# --------------------------------------------------------------------------
+# request plumbing
+# --------------------------------------------------------------------------
+
+
+class PolymulFuture:
+    """Handle for one submitted product.  Resolved when the engine
+    dispatches the request's micro-batch; ``latency_s`` then holds the
+    submit-to-result wall time (what the throughput benchmark's
+    p50/p99 columns aggregate)."""
+
+    __slots__ = ("_value", "_done", "latency_s")
+
+    def __init__(self):
+        self._value = None
+        self._done = False
+        self.latency_s = None
+
+    def done(self) -> bool:
+        return self._done
+
+    def result(self):
+        if not self._done:
+            raise RuntimeError(
+                "request not served yet — drive the engine "
+                "(step() / run_until_idle())"
+            )
+        return self._value
+
+    def _set(self, value, latency_s: float):
+        self._value = value
+        self.latency_s = latency_s
+        self._done = True
+
+
+@dataclasses.dataclass
+class _Request:
+    za: np.ndarray  # (n, S)
+    zb: np.ndarray  # (n, S)
+    future: PolymulFuture
+    seq: int
+    t_submit: float
+
+
+@dataclasses.dataclass
+class _Bucket:
+    plan: api.Plan
+    queue: deque = dataclasses.field(default_factory=deque)
+
+
+# --------------------------------------------------------------------------
+# the engine
+# --------------------------------------------------------------------------
+
+
+class PolymulEngine:
+    """Shape-bucketed continuous-batching engine over the Plan API.
+
+    Parameters
+    ----------
+    batch_slots:
+        Fixed rows per dispatch.  Every micro-batch is padded to this
+        many polynomials, so each distinct ``PlanConfig`` compiles ONE
+        executable (shape stability is what makes the trace count ==
+        the config count).
+    mesh:
+        Optional ``jax.sharding.Mesh`` with ``model``/data axes; when
+        set, dispatches run :func:`polymul_sharded`.  ``batch_slots``
+        must divide the data axes so the padded batch always shards.
+    donate:
+        Donate the padded operand buffers to XLA (they are rebuilt per
+        dispatch, so nothing reads them back); the serving hot-loop
+        counterpart of ``api.execute(donate=True)``.
+    """
+
+    def __init__(self, *, batch_slots: int = 8, mesh=None,
+                 donate: bool = False):
+        if batch_slots < 1:
+            raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
+        if mesh is not None:
+            _, bsize = _mesh_sizes(mesh)
+            if batch_slots % bsize:
+                raise ValueError(
+                    f"batch_slots={batch_slots} must divide the mesh's "
+                    f"data axes ({bsize}-way) so padded batches shard"
+                )
+        self.batch_slots = batch_slots
+        self.mesh = mesh
+        self._plans: dict[api.PlanConfig, api.Plan] = {}
+        self._buckets: dict[api.PlanConfig, _Bucket] = {}
+        self._seq = itertools.count()
+        self._trace_log: list[api.PlanConfig] = []
+        self.stats = {
+            "submitted": 0,
+            "served": 0,
+            "dispatches": 0,
+            "padded_slots": 0,
+        }
+
+        def _run(pl, za, zb):
+            # Appended at TRACE time only: the probe that asserts one
+            # compilation per distinct PlanConfig.
+            self._trace_log.append(api.plan_key(pl))
+            if mesh is not None:
+                return polymul_sharded(pl, za, zb, mesh=mesh)
+            return api.polymul(pl, za, zb)
+
+        self._exec = jax.jit(
+            _run, donate_argnums=(1, 2) if donate else ()
+        )
+
+    # -- plan cache ----------------------------------------------------
+    def plan(self, n: int = 4096, t: int = 6, v: int = 30, **kw) -> api.Plan:
+        """Build-or-fetch a plan, cached by its resolved
+        :func:`api.plan_key` — repeated preset lookups share one Plan
+        object (and, transitively, one set of device tables)."""
+        pl = api.plan(n=n, t=t, v=v, **kw)
+        return self._plans.setdefault(api.plan_key(pl), pl)
+
+    # -- request intake ------------------------------------------------
+    def submit(self, pl: api.Plan, za, zb) -> PolymulFuture:
+        """Enqueue one product ``a * b`` under plan ``pl``.  ``za``,
+        ``zb``: ``(n, S)`` base-2^v segment arrays.  Returns a
+        :class:`PolymulFuture`; drive the engine to resolve it."""
+        cfg = api.plan_key(pl)
+        za = np.asarray(za)
+        zb = np.asarray(zb)
+        want = (cfg.n, cfg.seg_count)
+        for name, z in (("za", za), ("zb", zb)):
+            if z.shape != want:
+                raise ValueError(
+                    f"submit: expected {name} segments (n={cfg.n}, "
+                    f"S={cfg.seg_count}), got shape {z.shape}"
+                )
+        if self.mesh is not None:
+            # Mirror the sharded-dispatch preconditions HERE: step()
+            # pops requests before dispatching, so a config that can
+            # only fail at trace time would lose its popped requests.
+            if cfg.width != "int64":
+                raise ValueError(
+                    f"mesh mode serves int64-width plans only "
+                    f"(got width={cfg.width!r})"
+                )
+            msize, _ = _mesh_sizes(self.mesh)
+            if cfg.t % msize:
+                raise ValueError(
+                    f"mesh mode: t={cfg.t} RNS channels do not divide "
+                    f"the model axis ({msize}-way); pick t a multiple "
+                    f"of it or shrink the axis"
+                )
+        bucket = self._buckets.get(cfg)
+        if bucket is None:
+            bucket = self._buckets[cfg] = _Bucket(
+                plan=self._plans.setdefault(cfg, pl)
+            )
+        fut = PolymulFuture()
+        bucket.queue.append(
+            _Request(za, zb, fut, next(self._seq), time.perf_counter())
+        )
+        self.stats["submitted"] += 1
+        return fut
+
+    def pending(self) -> int:
+        return sum(len(b.queue) for b in self._buckets.values())
+
+    # -- dispatch ------------------------------------------------------
+    def step(self) -> int:
+        """Dispatch ONE micro-batch from the bucket whose head request
+        has waited longest (FIFO across buckets — latency fairness over
+        pure bucket packing).  Returns the number of requests served,
+        0 when idle."""
+        live = [b for b in self._buckets.values() if b.queue]
+        if not live:
+            return 0
+        bucket = min(live, key=lambda b: b.queue[0].seq)
+        k = min(len(bucket.queue), self.batch_slots)
+        reqs = [bucket.queue.popleft() for _ in range(k)]
+        cfg = api.plan_key(bucket.plan)
+        if cfg.width == "oracle":
+            # Host-only width: no tracing, no padding — zero rows would
+            # be pure wasted bigint work on the CPU.
+            za = np.stack([r.za for r in reqs])
+            zb = np.stack([r.zb for r in reqs])
+            out = np.asarray(api.polymul(bucket.plan, za, zb))
+            pad = 0
+        else:
+            B = self.batch_slots
+            za = np.zeros((B, cfg.n, cfg.seg_count), np.int64)
+            zb = np.zeros_like(za)
+            for i, r in enumerate(reqs):
+                za[i] = r.za
+                zb[i] = r.zb
+            out = np.asarray(
+                self._exec(bucket.plan, jnp.asarray(za), jnp.asarray(zb))
+            )
+            pad = B - k
+        now = time.perf_counter()
+        for i, r in enumerate(reqs):
+            r.future._set(out[i], now - r.t_submit)
+        self.stats["dispatches"] += 1
+        self.stats["served"] += k
+        self.stats["padded_slots"] += pad
+        return k
+
+    def run_until_idle(self) -> int:
+        """Drain every bucket; returns total requests served."""
+        total = 0
+        while True:
+            n = self.step()
+            if n == 0:
+                return total
+            total += n
+
+    def serve(self, requests) -> list[np.ndarray]:
+        """Convenience closed loop: submit ``(plan, za, zb)`` triples,
+        drain, return results in submission order."""
+        futs = [self.submit(pl, za, zb) for pl, za, zb in requests]
+        self.run_until_idle()
+        return [f.result() for f in futs]
+
+    # -- probes --------------------------------------------------------
+    @property
+    def trace_count(self) -> int:
+        """Compilations of the engine executor so far; equals the
+        number of distinct PlanConfigs served (the bucket contract)."""
+        return len(self._trace_log)
+
+    @property
+    def traced_configs(self) -> tuple:
+        return tuple(self._trace_log)

@@ -102,6 +102,46 @@ def moe_gather(eout, slot):
     )(eout, slot)
 
 
+def make_crypto_policy(mesh, plan):
+    """Activation policy for the crypto serving engine: pins the
+    polymul *stage boundaries* to the ``partition.polymul_specs``
+    layout — ``"segments"``/``"limbs"`` batch-sharded over ``data``,
+    ``"residues"`` channel-sharded over ``model`` — so GSPMD cannot
+    resolve the batched dispatch by all-gathering residue tensors (the
+    crypto twin of the LM policy below; the heavy cascade itself runs
+    under an explicit ``shard_map`` in
+    :mod:`repro.serve.crypto_engine`).
+
+    ``plan`` is anything with ``.t`` (an ``api.Plan`` or its params).
+    Constraints apply only when the named dim divides the mesh axes;
+    everything else passes through untouched.
+    """
+    import jax
+    from jax.sharding import NamedSharding
+
+    from repro.sharding import partition
+
+    specs = partition.polymul_specs(mesh, plan)
+    ba = partition.batch_axes(mesh)
+    size = 1
+    for a in ba:
+        size *= mesh.shape[a]
+
+    def policy(x, kind):
+        spec = specs.get(kind)
+        if spec is None or x.ndim != 3:
+            return x
+        batch_dim = 1 if kind == "residues" else 0
+        if x.shape[batch_dim] % size != 0:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    policy.mesh = mesh
+    policy.batch_axes = ba
+    policy.batch_size = size
+    return policy
+
+
 def make_mesh_policy(mesh, *, strategy: str = "baseline"):
     """Activation policies (the §Perf levers):
 

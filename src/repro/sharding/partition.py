@@ -124,6 +124,80 @@ def batch_shard_spec(mesh: Mesh, shape) -> P:
     return P(first, *([None] * (len(shape) - 1)))
 
 
+# --------------------------------------------------------------------------
+# crypto workload rules (the PaReNTT serving layer, DESIGN §8)
+# --------------------------------------------------------------------------
+
+# Plan leaves that carry NO RNS-channel axis (everything else in an int64
+# plan's leaf dict is (t, ...)-leading and shards its channel dim over
+# `model`).  Keyed by leaf NAME, not shape, so a coincidental t == L can
+# never shard the composed-modulus limb vector.
+_CRYPTO_REPLICATED_LEAVES = frozenset({"rns_q_limbs"})
+
+
+def polymul_specs(mesh: Mesh, plan) -> dict[str, P]:
+    """PartitionSpecs for the crypto serving tensors over a
+    (data, model) mesh — the stage-boundary layout of one batched
+    polymul (DESIGN §8):
+
+    * ``segments`` / ``limbs`` — ``(B, n, S)`` / ``(B, n, L)`` operand
+      and product tiles: batch over the data axes, coefficients and
+      limbs local (the n axis feeds the NTT butterflies, which must see
+      whole polynomials);
+    * ``residues`` — ``(t, B, n)`` residue polynomials: the RNS channel
+      axis over ``model`` (the paper's t parallel datapaths mapped to t
+      parallel shards) and batch over data.
+
+    ``plan`` is anything with ``.t`` (an ``api.Plan``, ``RnsPlan`` or
+    ``ParenttParams``).  Non-divisible dims fall back to replication,
+    same policy as the LM rules above.
+    """
+    ba = batch_axes(mesh)
+    ch = "model" if "model" in mesh.axis_names else None
+    ch = _fit(mesh, plan.t, ch)
+    return {
+        "segments": P(ba, None, None),
+        "residues": P(ch, ba, None),
+        "limbs": P(ba, None, None),
+    }
+
+
+def plan_leaf_specs(mesh: Mesh, pl) -> dict[str, P]:
+    """Per-leaf PartitionSpecs for an ``api.Plan``'s ``consts`` dict:
+    every ``(t, ...)``-leading table shards its RNS-channel dim over
+    ``model`` (twiddle/Shoup/row tables, per-channel CRT constants) so
+    each shard holds exactly its channels' tables; channel-free leaves
+    (the composed-modulus limbs) replicate.
+
+    This is what makes the plan-leaf threading (DESIGN §7) load-bearing
+    for serving: ``shard_map`` slices these leaves per shard, and the
+    ops layer rebinds its kernels to the shard-local tables.
+    """
+    t = pl.t
+    out = {}
+    for name, leaf in pl.consts.items():
+        if (
+            name not in _CRYPTO_REPLICATED_LEAVES
+            and leaf.ndim >= 1
+            and leaf.shape[0] == t
+        ):
+            ch = _fit(mesh, t, "model" if "model" in mesh.axis_names else None)
+            out[name] = P(ch, *([None] * (leaf.ndim - 1)))
+        else:
+            out[name] = P(*([None] * leaf.ndim))
+    return out
+
+
+def plan_leaf_shardings(mesh: Mesh, pl):
+    """NamedShardings matching :func:`plan_leaf_specs` — pass to
+    ``jax.device_put(pl.consts, ...)`` to make the tables resident
+    per-shard before serving."""
+    return {
+        name: NamedSharding(mesh, spec)
+        for name, spec in plan_leaf_specs(mesh, pl).items()
+    }
+
+
 def cache_specs(cache, mesh: Mesh):
     """Decode-state sharding.  Batch over (pod, data); a head-ish dim over
     model (falling back to head_dim / replication when kv-heads don't

@@ -1,0 +1,37 @@
+"""Suite-wide fixtures/hooks.
+
+Multi-device host platform: the serving tests exercise REAL >1-device
+meshes (shard_map of the RNS channel axis over `model`, batch over
+`data`), so the suite forces 4 virtual CPU devices before jax
+initializes.  Existing tests build their meshes from
+``jax.devices()[:1]`` and are device-count-agnostic.  The flag only
+helps if jax has not been imported yet — conftest runs before test
+modules, so that holds under pytest; tests needing >1 device must
+still skip when the count is short (e.g. under an externally-set
+XLA_FLAGS), via the ``host_mesh_4`` fixture below.
+"""
+import os
+import sys
+
+if "jax" not in sys.modules:  # pragma: no branch
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=4"
+        ).strip()
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def host_mesh_4():
+    """A (data=2, model=2) mesh over 4 real devices; skips when the
+    platform came up with fewer (jax imported before our flag)."""
+    import jax
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    if len(devs) < 4:
+        pytest.skip(f"needs 4 devices, have {len(devs)}")
+    return Mesh(np.array(devs[:4]).reshape(2, 2), ("data", "model"))

@@ -237,6 +237,65 @@ class TestRetraceAndVmap:
         assert np.array_equal(np.asarray(vm), np.asarray(loop))
 
 
+class TestLeafThreading:
+    """The int64 ops layer binds its device tables from the Plan's
+    pytree LEAVES (api._bound_params), not from the static params — so
+    tree.map/device_put/sharding of the leaves is load-bearing for
+    every width (DESIGN §7; the serving layer's model-axis shard_map
+    depends on this)."""
+
+    @pytest.mark.parametrize(
+        "backend", ["jnp", "pallas", "pallas_fused", "pallas_fused_e2e"]
+    )
+    def test_int64_leaves_are_the_dataflow(self, backend):
+        """Corrupting a leaf must corrupt the output on every backend;
+        if the kernels read jit-constant tables this is a no-op."""
+        pl = repro.plan(n=64, t=3, v=30, backend=backend)
+        za, zb = _rand_segments(pl, seed=41)
+        want = np.asarray(repro.polymul(pl, za, zb))
+        broken_consts = dict(pl.consts)
+        broken_consts["ntt_fwd"] = broken_consts["ntt_fwd"] ^ 1
+        broken = api.Plan(
+            config=pl.config, params=pl.params, consts=broken_consts
+        )
+        got = np.asarray(repro.polymul(broken, za, zb))
+        assert not np.array_equal(got, want), backend
+
+    def test_compose_star_tables_ride_leaves(self):
+        """The inverse-CRT star-limb tables are leaf-bound too (the
+        compose kernels take them as traced operands)."""
+        pl = repro.plan(n=64, t=3, v=30)
+        rng = np.random.default_rng(43)
+        res = jnp.asarray(
+            np.stack(
+                [
+                    rng.integers(0, int(q), size=(2, 64))
+                    for q in pl.params.plan.qs
+                ]
+            )
+        )
+        want = np.asarray(repro.compose(pl, res))
+        broken_consts = dict(pl.consts)
+        broken_consts["rns_qi_star_limbs"] = (
+            broken_consts["rns_qi_star_limbs"] ^ 1
+        )
+        broken = api.Plan(
+            config=pl.config, params=pl.params, consts=broken_consts
+        )
+        assert not np.array_equal(
+            np.asarray(repro.compose(broken, res)), want
+        )
+
+    def test_device_put_roundtrip_still_exact(self):
+        """device_put over the leaves (the serving resharding motion)
+        keeps execution bit-exact."""
+        pl = repro.plan(n=64, t=3, v=30)
+        za, zb = _rand_segments(pl, seed=47)
+        want = np.asarray(repro.polymul(pl, za, zb))
+        moved = jax.tree.map(jax.device_put, pl)
+        assert np.array_equal(np.asarray(repro.polymul(moved, za, zb)), want)
+
+
 class TestStageEntries:
     def test_int64_stage_composition_equals_polymul(self):
         pl = repro.plan(n=64, t=3, v=30)

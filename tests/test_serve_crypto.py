@@ -1,0 +1,301 @@
+"""The crypto serving subsystem: shape-bucketed continuous batching
+(PolymulEngine), the mesh-sharded cascade (`model` x `data` shard_map
+with plan tables resident per-shard), and the crypto partition rules.
+
+Mesh tests run on REAL 4-device host meshes — conftest.py forces
+``--xla_force_host_platform_device_count=4`` before jax initializes.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+import repro
+from repro import api
+from repro.core import polymul as pm
+from repro.serve.crypto_engine import (
+    PolymulEngine,
+    negacyclic_mul_sharded,
+    polymul_sharded,
+)
+from repro.sharding import partition
+
+
+def _rand_segments(pl, rng, batch=None):
+    shape = (pl.n, pl.config.seg_count)
+    if batch is not None:
+        shape = (batch,) + shape
+    return (
+        rng.integers(0, 1 << pl.v, size=shape),
+        rng.integers(0, 1 << pl.v, size=shape),
+    )
+
+
+def _rand_residues(pl, rng, batch):
+    return jnp.asarray(
+        np.stack(
+            [
+                rng.integers(0, int(q), size=(batch, pl.n))
+                for q in pl.params.plan.qs
+            ]
+        )
+    )
+
+
+class TestEngineBatching:
+    def test_mixed_preset_stream_bit_exact_vs_oracle(self):
+        """Both paper presets interleaved through ONE engine: every
+        result bit-exact vs the bigint oracle, and exactly one jit
+        trace per distinct PlanConfig (the acceptance criterion)."""
+        eng = PolymulEngine(batch_slots=4)
+        plans = [eng.plan(n=64, t=3, v=30), eng.plan(n=32, t=4, v=45)]
+        import random
+
+        r = random.Random(0)
+        reqs = []
+        for i in range(10):
+            pl = plans[i % 2]
+            a = [r.randrange(pl.q) for _ in range(pl.n)]
+            b = [r.randrange(pl.q) for _ in range(pl.n)]
+            za = np.asarray(api.to_segments(pl, a))
+            zb = np.asarray(api.to_segments(pl, b))
+            reqs.append((pl, a, b, eng.submit(pl, za, zb)))
+        eng.run_until_idle()
+        for pl, a, b, fut in reqs:
+            got = api.from_limbs(pl, fut.result())
+            assert got == pm.oracle_multiply(a, b, pl.params)
+        assert eng.trace_count == 2  # one compile per distinct config
+        assert sorted(
+            set(eng.traced_configs), key=lambda c: c.v
+        ) == sorted({api.plan_key(p) for p in plans}, key=lambda c: c.v)
+
+    def test_padding_and_slot_reuse_invariants(self):
+        """9 requests through 4 slots -> 3 dispatches (4+4+1), 3 padded
+        slots total, still ONE trace: the padded batch shape is stable
+        across dispatches."""
+        rng = np.random.default_rng(1)
+        eng = PolymulEngine(batch_slots=4)
+        pl = eng.plan(n=64, t=3, v=30)
+        futs = []
+        want = []
+        for _ in range(9):
+            za, zb = _rand_segments(pl, rng)
+            futs.append(eng.submit(pl, za, zb))
+            want.append(
+                np.asarray(repro.polymul(pl, jnp.asarray(za), jnp.asarray(zb)))
+            )
+        assert eng.pending() == 9
+        assert eng.step() == 4
+        assert eng.pending() == 5
+        eng.run_until_idle()
+        assert eng.stats["dispatches"] == 3
+        assert eng.stats["padded_slots"] == 3
+        assert eng.stats["served"] == 9
+        assert eng.trace_count == 1
+        for fut, w in zip(futs, want):
+            assert np.array_equal(fut.result(), w)
+            assert fut.latency_s >= 0
+
+    def test_plan_cache_hits(self):
+        eng = PolymulEngine()
+        a = eng.plan(n=64, t=3, v=30)
+        b = eng.plan(n=64, t=3, v=30)
+        assert a is b  # cached by plan_key
+        c = eng.plan(n=64, t=3, v=30, backend="pallas_fused")
+        assert c is not a
+
+    def test_future_unserved_raises(self):
+        rng = np.random.default_rng(2)
+        eng = PolymulEngine(batch_slots=2)
+        pl = eng.plan(n=64, t=3, v=30)
+        fut = eng.submit(pl, *_rand_segments(pl, rng))
+        assert not fut.done()
+        with pytest.raises(RuntimeError, match="not served"):
+            fut.result()
+        eng.run_until_idle()
+        assert fut.done()
+
+    def test_submit_shape_validation(self):
+        eng = PolymulEngine()
+        pl = eng.plan(n=64, t=3, v=30)
+        bad = np.zeros((32, pl.config.seg_count), np.int64)
+        ok = np.zeros((64, pl.config.seg_count), np.int64)
+        with pytest.raises(ValueError, match="expected za segments"):
+            eng.submit(pl, bad, ok)
+
+    def test_oracle_width_requests_served_eagerly(self):
+        """v > 46 buckets run the host oracle: no tracing, no padding,
+        results still exact (vs the schoolbook)."""
+        import random
+
+        r = random.Random(3)
+        eng = PolymulEngine(batch_slots=4)
+        pl = eng.plan(n=32, t=2, v=50)
+        a = [r.randrange(pl.q) for _ in range(pl.n)]
+        b = [r.randrange(pl.q) for _ in range(pl.n)]
+        fut = eng.submit(
+            pl,
+            np.asarray(api.to_segments(pl, a)),
+            np.asarray(api.to_segments(pl, b)),
+        )
+        eng.run_until_idle()
+        assert api.from_limbs(pl, fut.result()) == pm.schoolbook_negacyclic(
+            a, b, pl.q
+        )
+        assert eng.trace_count == 0
+        assert eng.stats["padded_slots"] == 0
+
+    def test_execute_hook_and_plan_key(self):
+        rng = np.random.default_rng(4)
+        pl = repro.plan(n=64, t=3, v=30)
+        assert api.plan_key(pl) == pl.config
+        za, zb = _rand_segments(pl, rng, batch=2)
+        want = np.asarray(repro.polymul(pl, jnp.asarray(za), jnp.asarray(zb)))
+        got = api.execute(pl, jnp.asarray(za), jnp.asarray(zb))
+        assert np.array_equal(np.asarray(got), want)
+        # donating twin: operands are consumed, result identical
+        got_d = api.execute(
+            pl, jnp.asarray(za), jnp.asarray(zb), donate=True
+        )
+        assert np.array_equal(np.asarray(got_d), want)
+
+
+class TestCryptoPartitionRules:
+    def test_polymul_specs_layout(self, host_mesh_4):
+        pl = repro.plan(n=64, t=6, v=30)
+        specs = partition.polymul_specs(host_mesh_4, pl)
+        assert specs["segments"] == P(("data",), None, None)
+        assert specs["residues"] == P("model", ("data",), None)
+        assert specs["limbs"] == P(("data",), None, None)
+
+    def test_polymul_specs_nondivisible_channel_fallback(self, host_mesh_4):
+        pl = repro.plan(n=64, t=3, v=30)  # 3 % 2 != 0 -> replicate channels
+        specs = partition.polymul_specs(host_mesh_4, pl)
+        assert specs["residues"] == P(None, ("data",), None)
+
+    def test_plan_leaf_specs_channel_major(self, host_mesh_4):
+        pl = repro.plan(n=64, t=6, v=30)
+        specs = partition.plan_leaf_specs(host_mesh_4, pl)
+        for name, leaf in pl.consts.items():
+            if name == "rns_q_limbs":
+                assert specs[name] == P(*([None] * leaf.ndim)), name
+            else:
+                assert specs[name][0] == "model", name
+                assert len(specs[name]) == leaf.ndim
+
+    def test_plan_tables_resident_per_shard(self, host_mesh_4):
+        """device_put with the leaf shardings leaves each model shard
+        holding exactly its channels' tables (t/2 rows per shard on the
+        2-way model axis) — 'plan tables resident per-shard'."""
+        pl = repro.plan(n=64, t=6, v=30)
+        consts = jax.device_put(
+            pl.consts, partition.plan_leaf_shardings(host_mesh_4, pl)
+        )
+        fwd = consts["ntt_fwd"]  # (t, n)
+        assert not fwd.sharding.is_fully_replicated
+        shard_shapes = {s.data.shape for s in fwd.addressable_shards}
+        assert shard_shapes == {(3, 64)}
+        assert consts["rns_q_limbs"].sharding.is_fully_replicated
+
+
+class TestMeshShardedCascade:
+    def test_model_axis_shard_map_bit_exact(self, host_mesh_4):
+        """The acceptance criterion: the model-axis shard_map path of
+        negacyclic_mul is bit-exact vs the single-device path."""
+        rng = np.random.default_rng(5)
+        pl = repro.plan(n=64, t=6, v=30)
+        a = _rand_residues(pl, rng, batch=4)
+        b = _rand_residues(pl, rng, batch=4)
+        want = np.asarray(repro.negacyclic_mul(pl, a, b))
+        got = negacyclic_mul_sharded(pl, a, b, mesh=host_mesh_4)
+        assert np.array_equal(np.asarray(got), want)
+
+    def test_sharded_cascade_reads_leaves_not_constants(self, host_mesh_4):
+        """int64 leaves threaded, not jit constants: mutating a plan's
+        twiddle leaf MUST change the sharded result — if the kernels
+        bound tables from the static params, this would be a no-op."""
+        rng = np.random.default_rng(6)
+        pl = repro.plan(n=64, t=6, v=30)
+        a = _rand_residues(pl, rng, batch=2)
+        b = _rand_residues(pl, rng, batch=2)
+        want = np.asarray(negacyclic_mul_sharded(pl, a, b, mesh=host_mesh_4))
+        broken_consts = dict(pl.consts)
+        broken_consts["ntt_fwd"] = (
+            broken_consts["ntt_fwd"] ^ 1
+        )  # flip low bits
+        broken = api.Plan(
+            config=pl.config, params=pl.params, consts=broken_consts
+        )
+        got = np.asarray(
+            negacyclic_mul_sharded(broken, a, b, mesh=host_mesh_4)
+        )
+        assert not np.array_equal(got, want)
+
+    def test_polymul_sharded_jit_bit_exact(self, host_mesh_4):
+        rng = np.random.default_rng(7)
+        pl = repro.plan(n=64, t=6, v=30)
+        za, zb = _rand_segments(pl, rng, batch=4)
+        za, zb = jnp.asarray(za), jnp.asarray(zb)
+        want = np.asarray(repro.polymul(pl, za, zb))
+        fn = jax.jit(
+            lambda p, x, y: polymul_sharded(p, x, y, mesh=host_mesh_4)
+        )
+        assert np.array_equal(np.asarray(fn(pl, za, zb)), want)
+
+    def test_sharded_rejects_bad_configs(self, host_mesh_4):
+        rng = np.random.default_rng(8)
+        pl = repro.plan(n=64, t=3, v=30)  # 3 channels % 2-way model != 0
+        a = _rand_residues(pl, rng, batch=2)
+        with pytest.raises(ValueError, match="do not divide the model"):
+            negacyclic_mul_sharded(pl, a, a, mesh=host_mesh_4)
+        wide = repro.plan(n=32, t=4, v=45)
+        res = jnp.zeros((4, 2, 32), jnp.int64)
+        with pytest.raises(ValueError, match="int64-width plans only"):
+            negacyclic_mul_sharded(wide, res, res, mesh=host_mesh_4)
+        pl6 = repro.plan(n=64, t=6, v=30)
+        odd = _rand_residues(pl6, rng, batch=3)  # 3 % data-size 2 != 0
+        with pytest.raises(ValueError, match="does not divide the data"):
+            negacyclic_mul_sharded(pl6, odd, odd, mesh=host_mesh_4)
+
+    def test_engine_mesh_mode_end_to_end(self, host_mesh_4):
+        rng = np.random.default_rng(9)
+        eng = PolymulEngine(batch_slots=4, mesh=host_mesh_4)
+        pl = eng.plan(n=64, t=6, v=30)
+        futs, want = [], []
+        for _ in range(6):
+            za, zb = _rand_segments(pl, rng)
+            futs.append(eng.submit(pl, za, zb))
+            want.append(
+                np.asarray(repro.polymul(pl, jnp.asarray(za), jnp.asarray(zb)))
+            )
+        eng.run_until_idle()
+        for fut, w in zip(futs, want):
+            assert np.array_equal(fut.result(), w)
+        assert eng.trace_count == 1
+        assert eng.stats["dispatches"] == 2
+        assert eng.stats["padded_slots"] == 2
+
+    def test_engine_mesh_mode_rejects_nonsharding_slots(self, host_mesh_4):
+        with pytest.raises(ValueError, match="batch_slots"):
+            PolymulEngine(batch_slots=3, mesh=host_mesh_4)
+        eng = PolymulEngine(batch_slots=4, mesh=host_mesh_4)
+        wide = repro.plan(n=32, t=4, v=45)
+        z = np.zeros((32, wide.config.seg_count), np.int64)
+        with pytest.raises(ValueError, match="int64-width plans only"):
+            eng.submit(wide, z, z)
+
+    def test_engine_mesh_mode_rejects_indivisible_t_at_submit(
+        self, host_mesh_4
+    ):
+        """A config that could only fail at trace time would lose its
+        already-popped requests — the engine must refuse it at submit
+        (the queue stays intact, no future is ever orphaned)."""
+        eng = PolymulEngine(batch_slots=4, mesh=host_mesh_4)
+        pl = repro.plan(n=64, t=3, v=30)  # 3 % 2-way model != 0
+        z = np.zeros((64, pl.config.seg_count), np.int64)
+        with pytest.raises(ValueError, match="do not divide"):
+            eng.submit(pl, z, z)
+        assert eng.pending() == 0
+        assert eng.stats["submitted"] == 0
