@@ -45,6 +45,17 @@ from repro.api import (  # noqa: E402  (x64 must flip before jax.numpy use)
     to_segments,
 )
 
+
+def verify_plan(pl, **kwargs):
+    """Statically verify a Plan's kernel datapaths (overflow / envelope /
+    lane / staticness).  Thin lazy wrapper over
+    :func:`repro.analysis.verify.verify_plan` so importing ``repro`` does
+    not pull the analysis stack."""
+    from repro.analysis.verify import verify_plan as _vp
+
+    return _vp(pl, **kwargs)
+
+
 __all__ = [
     "BACKENDS",
     "SCHEDULES",
@@ -64,4 +75,5 @@ __all__ = [
     "polymul",
     "polymul_ints",
     "to_segments",
+    "verify_plan",
 ]

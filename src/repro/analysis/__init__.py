@@ -1,0 +1,54 @@
+"""Static verification of the crypto kernel paths (DESIGN.md §9).
+
+Three passes over the *traced jaxprs* of every kernel datapath, per
+registered ``(n, t, v, backend, schedule)`` preset:
+
+* **overflow / envelope** (:mod:`repro.analysis.interp`) — an interval
+  abstract interpretation with a q-linear bound domain that proves no
+  int64/int32 intermediate can overflow, derives the per-stage lazy
+  window envelope and checks it against the hand-kept
+  :class:`repro.core.ntt.ChannelTables` bookkeeping, and proves the
+  single exit ``canonicalize`` suffices (transform outputs canonical);
+* **lane / layout lint** (:mod:`repro.analysis.passes`) — re-verifies
+  ``sublane_stages == 0`` structurally for the four-step schedule and
+  estimates per-``pallas_call`` VMEM footprint against the budget;
+* **staticness lint** (:mod:`repro.analysis.passes`) — flags host table
+  constants baked into int64 kernel traces that should be Plan pytree
+  leaves (mechanizing the PR-5 leaf-threading invariant).
+
+Front doors: :func:`repro.analysis.verify.verify_plan` (re-exported as
+``repro.verify_plan``) and the ``repro.launch.verify_kernels`` CLI; the
+``verify-kernels`` CI job sweeps every registered preset and runs the
+mutation self-check (:func:`repro.analysis.verify.mutation_selfcheck`).
+"""
+from typing import Any
+
+# Submodule attributes resolve lazily (PEP 562): kernels/ops.py imports
+# repro.analysis.walk for its structural counters, while the verify pass
+# imports kernels/ops.py for its cost models — eager imports here would
+# close that cycle during package init.
+_LAZY = {
+    "AbsVal": ("repro.analysis.domain", "AbsVal"),
+    "units_of_q": ("repro.analysis.domain", "units_of_q"),
+    "AnalysisContext": ("repro.analysis.interp", "AnalysisContext"),
+    "Finding": ("repro.analysis.interp", "Finding"),
+    "analyze_closed_jaxpr": ("repro.analysis.interp", "analyze_closed_jaxpr"),
+    "PRESETS": ("repro.analysis.verify", "PRESETS"),
+    "Preset": ("repro.analysis.verify", "Preset"),
+    "VerifyReport": ("repro.analysis.verify", "VerifyReport"),
+    "mutation_selfcheck": ("repro.analysis.verify", "mutation_selfcheck"),
+    "registered_presets": ("repro.analysis.verify", "registered_presets"),
+    "verify_plan": ("repro.analysis.verify", "verify_plan"),
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name: str) -> Any:
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod_name), attr)

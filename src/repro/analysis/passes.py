@@ -1,0 +1,523 @@
+"""Verifier passes: concrete table integrity, constant seeding/tagging,
+envelope comparison, lane/VMEM lint, staticness lint.
+
+The abstract interpreter only trusts host constants that were verified
+*concretely* here, once per plan: twiddles canonical per channel, Shoup
+companions exactly ``(w << beta) // q``, Barrett ``eps`` exactly
+``floor(2^c / q)`` per family, SAU signed-PoT terms summing to
+``beta_i + 1``.  Each verified array is entered in a registry; when the
+traced jaxpr closes over it (matched by identity, then by equality),
+its abstraction carries the corresponding tag, which is what arms the
+Shoup/Barrett pattern transfers in :mod:`repro.analysis.interp`.
+A mutated table therefore fails twice: the integrity check reports the
+corrupt entry, and the untagged constant disarms the semantic transfer
+so the interval blow-up surfaces as overflow/precondition findings —
+the analyzer cannot silently go vacuous.
+"""
+from __future__ import annotations
+
+from fractions import Fraction
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.analysis import walk
+from repro.analysis.domain import AbsVal, QCtx
+from repro.analysis.interp import AnalysisContext, Finding
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024  # per-core VMEM (pallas guide)
+SMALL_CONST_ELEMS = 64  # <= this many elements: per-channel circuit scalars
+
+
+# --------------------------------------------------------------------------
+# registry + integrity
+# --------------------------------------------------------------------------
+
+
+class ConstRegistry:
+    """Maps concrete host/device constants to tagged abstractions."""
+
+    def __init__(self) -> None:
+        self._by_id: Dict[int, AbsVal] = {}
+        self._entries: List[Tuple[np.ndarray, AbsVal]] = []
+        self.leaf_ids: Dict[int, str] = {}
+        self.leaf_arrays: List[Tuple[str, np.ndarray]] = []
+
+    def add(self, arr: Any, proto: AbsVal) -> None:
+        if arr is None:
+            return
+        self._by_id[id(arr)] = proto
+        self._entries.append((np.asarray(arr), proto))
+
+    def add_leaf(self, name: str, arr: Any) -> None:
+        if arr is None:
+            return
+        self.leaf_ids[id(arr)] = name
+        self.leaf_arrays.append((name, np.asarray(arr)))
+
+    def seed(self, const: Any) -> AbsVal:
+        proto = self._by_id.get(id(const))
+        if proto is not None:
+            return proto.view()
+        try:
+            arr = np.asarray(const)
+        except (TypeError, ValueError):
+            return AbsVal(None, None)
+        if arr.dtype == np.bool_:
+            return AbsVal(0, 1)
+        if not np.issubdtype(arr.dtype, np.integer) or arr.size == 0:
+            return AbsVal(None, None)
+        for known, proto in self._entries:
+            if known.shape == arr.shape and known.dtype == arr.dtype and np.array_equal(
+                known, arr
+            ):
+                return proto.view()
+        # Unregistered integer constant: concrete values are still known,
+        # so its exact min/max is a sound (untagged) abstraction; small
+        # arrays also keep their concrete values for weighted-sum bounds.
+        av = AbsVal(int(arr.min()), int(arr.max()))
+        if arr.size <= 65536:
+            av.prov = ("carr", arr)
+        return av
+
+
+def _tagged(
+    arr: Any,
+    tag: Optional[Tuple[Any, ...]],
+    qctx: QCtx,
+    qlin: Optional[Tuple[Fraction, Fraction]] = None,
+    qlo: Optional[Tuple[Fraction, Fraction]] = None,
+) -> AbsVal:
+    a = np.asarray(arr)
+    av = AbsVal(int(a.min()), int(a.max()), tag=tag)
+    if qlin is not None:
+        av = av.with_qlin(qlin[0], qlin[1], qctx)
+    if qlo is not None:
+        av = av.with_qlo(qlo[0], qlo[1], qctx)
+    av.tag = tag
+    return av
+
+
+def build_context(pl: Any, *, grid_cap: int = 64) -> AnalysisContext:
+    """Concrete integrity pass + tagged-constant registry for one Plan.
+
+    Any integrity violation lands as an ``error`` finding on the
+    returned context (and the corresponding tag is withheld, so the
+    traced-code analysis independently degrades to 'could not prove').
+    """
+    params = pl.params
+    rns = params.plan
+    qs = [int(q) for q in np.asarray(rns.qs)]
+    qctx = QCtx(min(qs), max(qs))
+    ct = params.tables
+    beta = int(ct.shoup_beta) if ct is not None and ct.shoup_beta is not None else None
+    registry = ConstRegistry()
+    families: Dict[Tuple[Any, ...], Dict[str, Any]] = {}
+    ctx = AnalysisContext(
+        qctx=qctx,
+        beta=beta,
+        q_set=frozenset(qs),
+        families=families,
+        seed_const=registry.seed,
+        grid_cap=grid_cap,
+    )
+    ctx.registry = registry
+
+    def bad(msg: str) -> None:
+        ctx.finding("error", "table-integrity", "plan", msg)
+
+    qs_arr = np.asarray(rns.qs)
+    q_col = qs_arr.reshape((len(qs),) + (1,) * 0)
+
+    # channel moduli ---------------------------------------------------
+    for host, dev in ((rns.qs, getattr(rns, "qs_d", None)),):
+        for obj in (host, dev):
+            registry.add(
+                obj,
+                _tagged(
+                    qs_arr, ("q",), qctx,
+                    (Fraction(1), Fraction(0)), (Fraction(1), Fraction(0)),
+                ),
+            )
+    v = int(params.v)
+    for q in qs:
+        if not (1 << (v - 1)) < q < (1 << v):
+            bad(f"modulus {q} is not a {v}-bit prime")
+        if q % 2 == 0:
+            bad(f"modulus {q} is even")
+
+    # NTT twiddle tables + Shoup companions ----------------------------
+    if ct is not None:
+        half = np.asarray(ct.half)
+        if not np.array_equal(half, (qs_arr + 1) // 2):
+            bad("half table != (q+1)/2")
+        else:
+            for obj in (ct.half, getattr(ct, "half_d", None)):
+                registry.add(
+                    obj,
+                    _tagged(
+                        half, ("half",), qctx,
+                        (Fraction(1, 2), Fraction(1, 2)),
+                        (Fraction(1, 2), Fraction(1, 2)),
+                    ),
+                )
+        if ct.lazy_window is not None:
+            try:
+                from repro.core import modmath
+
+                for q in qs:
+                    modmath.validate_lazy_envelope(q, int(ct.lazy_window), int(beta))
+            except ValueError as e:
+                bad(f"lazy envelope invalid: {e}")
+        for name in ("fwd", "inv", "fs_row_fwd", "fs_row_inv"):
+            w = getattr(ct, name, None)
+            if w is None:
+                continue
+            w = np.asarray(w)
+            qb = qs_arr.reshape((len(qs),) + (1,) * (w.ndim - 1))
+            if not bool(np.all((w >= 0) & (w < qb))):
+                bad(f"twiddle table '{name}' has non-canonical entries")
+                continue
+            sh = getattr(ct, name + "_shoup", None)
+            twid = _tagged(
+                w, ("twiddle", name), qctx,
+                (Fraction(1), Fraction(-1)), (Fraction(0), Fraction(0)),
+            )
+            for obj in (getattr(ct, name), getattr(ct, name + "_d", None)):
+                registry.add(obj, twid)
+            if sh is not None and beta is not None:
+                sh_np = np.asarray(sh)
+                expect = (w.astype(object) << beta) // qb.astype(object)
+                if not bool(np.all(sh_np.astype(object) == expect)):
+                    bad(f"Shoup table '{name}_shoup' != (w << beta) // q")
+                    continue
+                proto = _tagged(sh_np, ("shoup", name), qctx)
+                for obj in (sh, getattr(ct, name + "_shoup_d", None)):
+                    registry.add(obj, proto)
+
+        # strict-mode / pointwise Barrett family ------------------------
+        if getattr(ct, "mul_eps", None) is not None and ct.mul_shifts is not None:
+            eps = np.asarray(ct.mul_eps)
+            s1, s2 = (int(s) for s in ct.mul_shifts)
+            ok = all(
+                int(eps[i]) == (1 << (s1 + s2)) // qs[i]
+                and s1 == qs[i].bit_length() - 1
+                for i in range(len(qs))
+            )
+            if not ok:
+                bad("mul_eps != floor(2^c / q) for its (s1, s2) window")
+            else:
+                families[("brt", "mulmod")] = {"s1": s1, "s2_lo": s2, "s2_hi": s2}
+                proto = _tagged(eps, ("brt", "mulmod"), qctx)
+                for obj in (ct.mul_eps, getattr(ct, "mul_eps_d", None)):
+                    registry.add(obj, proto)
+
+    # decompose (SAU) / compose constants ------------------------------
+    registry.add(
+        rns.qi_tilde,
+        _tagged(
+            rns.qi_tilde, None, qctx,
+            (Fraction(1), Fraction(-1)), (Fraction(0), Fraction(0)),
+        ),
+    )
+    registry.add(
+        getattr(rns, "qi_tilde_d", None),
+        _tagged(
+            rns.qi_tilde, None, qctx,
+            (Fraction(1), Fraction(-1)), (Fraction(0), Fraction(0)),
+        ),
+    )
+    if not bool(np.all(np.asarray(rns.qi_tilde) < qs_arr)):
+        bad("qi_tilde has entries >= q_i")
+    if rns.dec is not None:
+        try:
+            from repro.kernels.crt import plan_dec_arrays
+
+            dec_arrs = plan_dec_arrays(rns)
+        except Exception as e:  # pragma: no cover - defensive
+            bad(f"plan_dec_arrays failed: {e}")
+            dec_arrs = None
+        if dec_arrs is not None:
+            s1 = v - 1
+            sau_eps = np.asarray(dec_arrs["sau_eps"])
+            sau_s2 = np.asarray(dec_arrs["sau_s2"])
+            acc_eps = np.asarray(dec_arrs["acc_eps"])
+            ok = all(
+                int(sau_eps[i]) == (1 << (s1 + int(sau_s2[i]))) // qs[i]
+                for i in range(len(qs))
+            )
+            if not ok:
+                bad("sau_eps != floor(2^(s1+s2) / q) per channel")
+            else:
+                families[("brt", "sau")] = {
+                    "s1": s1,
+                    "s2_lo": int(sau_s2.min()),
+                    "s2_hi": int(sau_s2.max()),
+                }
+                registry.add(dec_arrs["sau_eps"], _tagged(sau_eps, ("brt", "sau"), qctx))
+                registry.add(dec_arrs["sau_s2"], _tagged(sau_s2, ("brt_s2", "sau"), qctx))
+            if all(int(acc_eps[i]) == (1 << (s1 + 4)) // qs[i] for i in range(len(qs))):
+                families[("brt", "acc")] = {"s1": s1, "s2_lo": 4, "s2_hi": 4}
+                registry.add(dec_arrs["acc_eps"], _tagged(acc_eps, ("brt", "acc"), qctx))
+            else:
+                bad("acc_eps != floor(2^(s1+4) / q) per channel")
+            beta_e = np.asarray(dec_arrs["beta_e"])
+            beta_s = np.asarray(dec_arrs["beta_s"])
+            coeffs = [
+                sum(int(beta_s[i, j]) << int(beta_e[i, j]) for j in range(beta_e.shape[1]))
+                for i in range(len(qs))
+            ]
+            if all(c - 1 == pow(2, v, qs[i]) for i, c in enumerate(coeffs)):
+                families[("sau", "dyn")] = {"c_lo": min(coeffs), "c_hi": max(coeffs)}
+                registry.add(dec_arrs["beta_s"], _tagged(beta_s, ("sau_s", "dyn"), qctx))
+                registry.add(dec_arrs["beta_e"], _tagged(beta_e, ("sau_e", "dyn"), qctx))
+            else:
+                bad("SAU signed-PoT terms do not sum to beta_i + 1 per channel")
+
+    # Plan pytree leaves (identity set for the staticness lint) ---------
+    for name, leaf in dict(getattr(pl, "consts", {}) or {}).items():
+        registry.add_leaf(name, leaf)
+    return ctx
+
+
+# --------------------------------------------------------------------------
+# envelope comparison
+# --------------------------------------------------------------------------
+
+
+def check_envelope(
+    ctx: AnalysisContext,
+    ct: Any,
+    where: str,
+    *,
+    min_events: int,
+) -> Dict[str, Any]:
+    """Compare the Shoup-event stream against the hand bookkeeping.
+
+    Derived facts must match or tighten ``ChannelTables.stage_bounds``
+    (which is uniform per stage): every Shoup multiplicand within the
+    lazy window in units of q, every inter-stage segment peak within the
+    direction's transient bound (CT peaks ``u + t`` land *after* their
+    stage's Shoup multiply, GS peaks ``u + v`` land *before* it — each
+    segment is checked against the strongest applicable rule).
+    Direction is classified structurally per event: a GS difference
+    operand reaches the Shoup multiply through a conditional-subtract
+    ``select_n``, a CT operand arrives straight from the previous stage.
+    ``min_events`` is the anti-vacuity floor: a lazy-plan trace that
+    produced fewer recognized butterfly stages than transforms*log2(n)
+    means the analyzer lost pattern coverage, and that is an error."""
+    events = list(ctx.stream)
+    summary: Dict[str, Any] = {"events": len(events), "derived": {}, "hand": {}}
+    window = getattr(ct, "lazy_window", None) if ct is not None else None
+    if window is None:
+        if events:
+            ctx.finding(
+                "error",
+                "envelope-mismatch",
+                where,
+                f"{len(events)} Shoup stages recognized in a strict plan",
+            )
+        return summary
+    window = int(window)
+    if len(events) < min_events:
+        ctx.finding(
+            "error",
+            "vacuous-analysis",
+            where,
+            f"lazy plan traced but only {len(events)} Shoup butterfly stages "
+            f"recognized (expected >= {min_events}) — analyzer pattern "
+            "coverage lost",
+        )
+        return summary
+    fwd_bounds = ct.stage_bounds(inverse=False)
+    inv_bounds = ct.stage_bounds(inverse=True)
+    fwd_peak, inv_peak = fwd_bounds[0][1], inv_bounds[0][1]
+    derived: Dict[str, Dict[str, int]] = {}
+    for k, ev in enumerate(events):
+        direction = "inv" if ev["gs"] else "fwd"
+        d = derived.setdefault(direction, {"value": 0, "peak": 0})
+        d["value"] = max(d["value"], ev["units_in"])
+        if ev["units_in"] > window:
+            ctx.finding(
+                "error",
+                "envelope-violation",
+                where,
+                f"Shoup operand at stage event {k} ({direction}) spans "
+                f"{ev['units_in']} units of q > window {window}",
+            )
+        # The segment preceding event k: bounded by the GS transient if
+        # event k is GS, and/or by the CT transient if event k-1 was CT.
+        seg = ev["peak_before"] if k > 0 else None
+        if seg is not None:
+            bound = 0
+            if ev["gs"]:
+                bound = max(bound, inv_peak)
+            if not events[k - 1]["gs"]:
+                bound = max(bound, fwd_peak)
+            if bound == 0:  # GS -> CT boundary: either transient may sit here
+                bound = max(fwd_peak, inv_peak)
+            owner = derived.setdefault(
+                "inv" if ev["gs"] else "fwd", {"value": 0, "peak": 0}
+            )
+            owner["peak"] = max(owner["peak"], seg)
+            if seg > bound:
+                ctx.finding(
+                    "error",
+                    "envelope-violation",
+                    where,
+                    f"inter-stage peak before event {k} spans {seg} units "
+                    f"of q > transient bound {bound}",
+                )
+    tail_bound = inv_peak if events[-1]["gs"] else fwd_peak
+    if ctx.tail_peak > tail_bound:
+        ctx.finding(
+            "error",
+            "envelope-violation",
+            where,
+            f"post-transform peak {ctx.tail_peak} units of q > transient "
+            f"bound {tail_bound}",
+        )
+    summary["derived"] = derived
+    summary["hand"] = {
+        "fwd": {"value": fwd_bounds[0][0], "peak": fwd_peak},
+        "inv": {"value": inv_bounds[0][0], "peak": inv_peak},
+    }
+    for direction, d in derived.items():
+        hand = summary["hand"][direction]
+        if d["value"] < hand["value"] or (d["peak"] and d["peak"] < hand["peak"]):
+            ctx.finding(
+                "info",
+                "envelope-tightens",
+                where,
+                f"derived {direction} envelope (value {d['value']}, peak "
+                f"{d['peak']}) tightens hand bookkeeping (value "
+                f"{hand['value']}, peak {hand['peak']})",
+            )
+    return summary
+
+
+# --------------------------------------------------------------------------
+# lane / VMEM lint
+# --------------------------------------------------------------------------
+
+
+def _aval_bytes(aval: Any) -> int:
+    inner = getattr(aval, "inner_aval", aval)
+    shape = getattr(inner, "shape", None)
+    dtype = getattr(inner, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n * np.dtype(dtype).itemsize
+
+
+def lane_vmem_lint(closed: Any, pl: Any, ctx: AnalysisContext, where: str) -> List[Dict[str, Any]]:
+    """Structural lane checks over every ``pallas_call`` in the trace:
+
+    * four-step schedule must keep ``sublane_stages == 0`` (lane-aligned
+      strides only — the PR 3 contract);
+    * per-kernel VMEM footprint estimate (sum of ref block avals) vs the
+      16 MiB budget the big-n tiling work must fit in.
+    """
+    report: List[Dict[str, Any]] = []
+    if pl.config.width == "int64" and pl.config.schedule == "four_step":
+        from repro.kernels import ops as ops_mod
+
+        for direction in ("fwd", "inv"):
+            cost = ops_mod.transform_cost_model(
+                pl.params, schedule="four_step", direction=direction
+            )
+            if cost.get("sublane_stages", 0) != 0:
+                ctx.finding(
+                    "error",
+                    "lane-lint",
+                    where,
+                    f"four_step {direction} schedule has "
+                    f"{cost['sublane_stages']} sublane stages (want 0)",
+                )
+    for path, eqn in walk.iter_pallas_calls(closed):
+        body = walk.raw(eqn.params.get("jaxpr"))
+        vmem = sum(_aval_bytes(var.aval) for var in body.invars)
+        entry = {
+            "path": "/".join(path) or "top",
+            "vmem_bytes": int(vmem),
+            "budget_bytes": VMEM_BUDGET_BYTES,
+        }
+        report.append(entry)
+        if vmem > VMEM_BUDGET_BYTES:
+            ctx.finding(
+                "error",
+                "vmem-budget",
+                where,
+                f"pallas kernel at {entry['path']} holds ~{vmem} bytes of "
+                f"refs > {VMEM_BUDGET_BYTES} VMEM budget",
+            )
+        elif vmem > VMEM_BUDGET_BYTES // 2:
+            ctx.finding(
+                "warning",
+                "vmem-budget",
+                where,
+                f"pallas kernel at {entry['path']} holds ~{vmem} bytes of "
+                f"refs (> 50% of VMEM budget)",
+            )
+    return report
+
+
+# --------------------------------------------------------------------------
+# staticness lint
+# --------------------------------------------------------------------------
+
+
+def staticness_lint(
+    closed: Any,
+    ctx: AnalysisContext,
+    where: str,
+    *,
+    small_elems: int = SMALL_CONST_ELEMS,
+) -> List[Dict[str, Any]]:
+    """Flag big host constants baked into the trace that are not Plan
+    pytree leaves (the PR 5 leaf-threading invariant, mechanized).
+
+    Small constants (<= ``small_elems`` elements) are the per-channel
+    SAU circuit scalars the design intentionally bakes; everything
+    larger must be threaded as a leaf so serving can redirect it without
+    retracing.  An equality-but-not-identity match to a leaf is the
+    sharpest violation: a baked *copy* of a table silently breaks leaf
+    redirection."""
+    registry = getattr(ctx, "registry")
+    flagged: List[Dict[str, Any]] = []
+    for path, const in walk.iter_consts(closed):
+        try:
+            arr = np.asarray(const)
+        except (TypeError, ValueError):
+            continue
+        if not np.issubdtype(arr.dtype, np.integer) or arr.size <= small_elems:
+            continue
+        if id(const) in registry.leaf_ids:
+            continue
+        loc = "/".join(path) or "top"
+        copy_of = next(
+            (
+                name
+                for name, leaf in registry.leaf_arrays
+                if leaf.shape == arr.shape
+                and leaf.dtype == arr.dtype
+                and np.array_equal(leaf, arr)
+            ),
+            None,
+        )
+        if copy_of is not None:
+            msg = (
+                f"baked copy of plan leaf '{copy_of}' at {loc} "
+                f"(shape {arr.shape}) — breaks leaf redirection"
+            )
+        else:
+            msg = (
+                f"host constant of shape {arr.shape} baked at {loc} "
+                "is not a Plan leaf"
+            )
+        ctx.finding("error", "staticness", where, msg)
+        flagged.append({"path": loc, "shape": list(arr.shape), "copy_of": copy_of})
+    return flagged

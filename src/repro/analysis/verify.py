@@ -1,0 +1,345 @@
+"""Preset registry and the ``verify_plan`` front door.
+
+``verify_plan(plan)`` traces every datapath the plan serves (forward
+and inverse transform, full polymul pipeline), runs the concrete table
+integrity pass, the abstract-interpretation overflow/envelope pass, the
+lane/VMEM lint and the staticness lint, and folds everything into one
+:class:`VerifyReport`.  ``PRESETS`` pins the (n, t, v, backend,
+schedule) matrix the ``verify-kernels`` CI job sweeps;
+:func:`mutation_selfcheck` deliberately corrupts a Shoup constant and
+widens a lazy window in-memory and asserts the verifier flags both, so
+a regression that blinds the analyzer fails CI too.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import json
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.analysis import passes
+from repro.analysis.domain import AbsVal, QCtx
+from repro.analysis.interp import AnalysisContext, Finding, analyze_closed_jaxpr
+
+
+@dataclasses.dataclass(frozen=True)
+class Preset:
+    name: str
+    n: int
+    t: int
+    v: int
+    backend: str
+    schedule: str
+
+    def build_plan(self) -> Any:
+        from repro import api
+
+        return api.plan(
+            n=self.n, t=self.t, v=self.v, backend=self.backend,
+            schedule=self.schedule,
+        )
+
+
+# The registered kernel-path matrix: every backend x schedule the int64
+# datapaths serve, both lazy windows (v=30 -> W=2, v<=29 -> W=4), the
+# strict fallback (v=31: mixed-width-free but beyond the lazy/Barrett
+# envelope) and the wide digit-split width.  Kept at small n so a CI
+# sweep stays cheap — the bounds are n-independent per stage, n only
+# multiplies how many identical stage instances get checked.
+PRESETS: Tuple[Preset, ...] = (
+    Preset("n64_t3_v30_jnp_radix2", 64, 3, 30, "jnp", "radix2"),
+    Preset("n64_t3_v29_jnp_radix2", 64, 3, 29, "jnp", "radix2"),
+    Preset("n256_t2_v30_jnp_four_step", 256, 2, 30, "jnp", "four_step"),
+    Preset("n64_t3_v31_jnp_strict", 64, 3, 31, "jnp", "radix2"),
+    Preset("n64_t3_v30_pallas_radix2", 64, 3, 30, "pallas", "radix2"),
+    Preset("n64_t3_v29_pallas_radix2", 64, 3, 29, "pallas", "radix2"),
+    Preset("n256_t2_v30_pallas_four_step", 256, 2, 30, "pallas", "four_step"),
+    Preset("n64_t3_v30_fused_radix2", 64, 3, 30, "pallas_fused", "radix2"),
+    Preset("n256_t2_v30_fused_four_step", 256, 2, 30, "pallas_fused", "four_step"),
+    Preset("n64_t2_v30_e2e_radix2", 64, 2, 30, "pallas_fused_e2e", "radix2"),
+    Preset("n256_t2_v30_e2e_four_step", 256, 2, 30, "pallas_fused_e2e", "four_step"),
+    Preset("n64_t2_v40_wide", 64, 2, 40, "auto", "radix2"),
+)
+
+
+def registered_presets() -> Tuple[Preset, ...]:
+    return PRESETS
+
+
+@dataclasses.dataclass
+class VerifyReport:
+    plan_desc: Dict[str, Any]
+    findings: List[Finding]
+    envelopes: Dict[str, Dict[str, Any]]
+    vmem: List[Dict[str, Any]]
+    staticness: List[Dict[str, Any]]
+    stats: Dict[str, Any]
+
+    @property
+    def ok(self) -> bool:
+        return not any(f.severity == "error" for f in self.findings)
+
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == "error"]
+
+    def codes(self) -> List[str]:
+        return sorted({f.code for f in self.findings})
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "plan": self.plan_desc,
+            "ok": self.ok,
+            "findings": [f.as_dict() for f in self.findings],
+            "envelopes": self.envelopes,
+            "vmem": self.vmem,
+            "staticness": self.staticness,
+            "stats": self.stats,
+        }
+
+    def to_json(self, **kw: Any) -> str:
+        return json.dumps(self.as_dict(), **kw)
+
+
+def _canonical_seed(qctx: QCtx) -> AbsVal:
+    from fractions import Fraction
+
+    av = AbsVal(0, qctx.q_max - 1).with_qlin(Fraction(1), Fraction(-1), qctx)
+    return av.with_qlo(Fraction(0), Fraction(0), qctx)
+
+
+def _fresh_ctx(base: AnalysisContext, grid_cap: int) -> AnalysisContext:
+    ctx = AnalysisContext(
+        qctx=base.qctx,
+        beta=base.beta,
+        q_set=base.q_set,
+        families=base.families,
+        seed_const=base.seed_const,
+        grid_cap=grid_cap,
+        registry=base.registry,
+    )
+    return ctx
+
+
+def _trace_specs(pl: Any) -> Dict[str, Tuple[Callable[..., Any], Tuple[Any, ...], str]]:
+    """``name -> (callable, example_args, output_contract)`` for every
+    datapath the plan serves.  Contracts: 'canonical' (residues < q) or
+    'limbs' (< 2^w)."""
+    import jax.numpy as jnp
+
+    import repro
+
+    cfg = pl.config
+    n, t = cfg.n, cfg.t
+    residues = jnp.zeros((t, n), dtype=jnp.int64)
+    segments = jnp.zeros((n, cfg.seg_count), dtype=jnp.int64)
+    specs: Dict[str, Tuple[Callable[..., Any], Tuple[Any, ...], str]] = {}
+    if cfg.width in ("int64", "wide"):
+        specs["ntt"] = (lambda a: repro.ntt(pl, a), (residues,), "none")
+        specs["intt"] = (lambda a: repro.intt(pl, a), (residues,), "canonical")
+        specs["polymul"] = (
+            lambda za, zb: repro.polymul(pl, za, zb),
+            (segments, segments),
+            "limbs",
+        )
+    return specs
+
+
+def _seed_for(name: str, arg_idx: int, pl: Any, qctx: QCtx) -> AbsVal:
+    from fractions import Fraction
+
+    if name in ("ntt", "intt"):
+        return _canonical_seed(qctx)
+    # base-2^v digit segments: nonnegative, < 2^v
+    seg = AbsVal(0, (1 << pl.config.v) - 1)
+    return seg.with_qlo(Fraction(0), Fraction(0), qctx)
+
+
+def verify_plan(pl: Any, *, grid_cap: int = 64) -> VerifyReport:
+    """Statically verify every kernel path of one plan.
+
+    Proves per traced jaxpr that (a) no int64/int32 intermediate can
+    overflow, (b) the derived lazy-reduction envelope matches or
+    tightens the hand-kept ``ChannelTables`` bookkeeping, (c) transform
+    outputs are canonical, i.e. the single exit ``canonicalize``
+    suffices; plus the lane/VMEM lint and the staticness (leaf-
+    threading) lint over the same traversal.  Returns a
+    :class:`VerifyReport`; ``report.ok`` is False when any check could
+    not be proven — unknown primitives and unproven preconditions fail
+    closed."""
+    import jax
+
+    base = passes.build_context(pl, grid_cap=grid_cap)
+    findings: List[Finding] = list(base.findings)
+    envelopes: Dict[str, Dict[str, Any]] = {}
+    vmem: List[Dict[str, Any]] = []
+    staticness: List[Dict[str, Any]] = []
+    stats: Dict[str, Any] = {"traces": {}, "selects_crosscheck": {}}
+    cfg = pl.config
+    ct = pl.params.tables
+    log2n = int(math.log2(cfg.n))
+    for name, (fn, args, contract) in sorted(_trace_specs(pl).items()):
+        ctx = _fresh_ctx(base, grid_cap)
+        try:
+            closed = jax.make_jaxpr(fn)(*args)
+        except Exception as e:
+            ctx.finding("error", "trace-failed", name, f"{type(e).__name__}: {e}")
+            findings.extend(ctx.findings)
+            continue
+        seeds = [_seed_for(name, i, pl, base.qctx) for i in range(len(args))]
+        outs = analyze_closed_jaxpr(closed, seeds, ctx, where=name)
+        _check_outputs(ctx, outs, contract, pl, name)
+        if cfg.width == "int64" and cfg.backend.startswith("pallas"):
+            # The lazy-window envelope is a property of the Shoup-based
+            # pallas kernels; the jnp reference path reduces to
+            # canonical after every butterfly and has no window to keep.
+            n_transforms = {"ntt": 1, "intt": 1, "polymul": 3}[name]
+            envelopes[name] = passes.check_envelope(
+                ctx, ct, name, min_events=n_transforms * log2n
+            )
+        vmem.extend(passes.lane_vmem_lint(closed, pl, ctx, name))
+        staticness.extend(passes.staticness_lint(closed, ctx, name))
+        stats["traces"][name] = {
+            "eqns": sum(ctx.prim_counts.values()),
+            "prims": dict(sorted(ctx.prim_counts.items())),
+            "shoup_events": len(ctx.stream),
+        }
+        findings.extend(ctx.findings)
+    _selects_crosscheck(pl, findings, stats)
+    desc = {
+        "n": cfg.n, "t": cfg.t, "v": cfg.v, "width": cfg.width,
+        "backend": cfg.backend, "schedule": cfg.schedule,
+        "lazy_window": None if ct is None else ct.lazy_window,
+        "shoup_beta": None if ct is None else ct.shoup_beta,
+    }
+    return VerifyReport(desc, findings, envelopes, vmem, staticness, stats)
+
+
+def _check_outputs(
+    ctx: AnalysisContext, outs: Sequence[Any], contract: str, pl: Any, name: str
+) -> None:
+    from repro.analysis import domain as D
+
+    if contract == "none":
+        return
+    for i, out in enumerate(outs):
+        if not isinstance(out, AbsVal):
+            continue
+        if out.lo is None or out.hi is None:
+            ctx.finding(
+                "error", "unproven", name, f"output {i} has unbounded interval"
+            )
+            continue
+        if contract == "canonical":
+            units = D.units_of_q(out, ctx.qctx)
+            if out.lo < 0 or units is None or units > 1:
+                ctx.finding(
+                    "error",
+                    "canonicalize-insufficient",
+                    name,
+                    f"output {i} not provably canonical: [{out.lo}, {out.hi}]"
+                    f" spans {units} units of q — one exit canonicalize does"
+                    " not suffice",
+                )
+        elif contract == "limbs":
+            w = pl.config.w
+            if out.lo < 0 or out.hi >= (1 << w):
+                ctx.finding(
+                    "error",
+                    "canonicalize-insufficient",
+                    name,
+                    f"output {i} not within base-2^{w} limb range: "
+                    f"[{out.lo}, {out.hi}]",
+                )
+
+
+def _selects_crosscheck(
+    pl: Any, findings: List[Finding], stats: Dict[str, Any]
+) -> None:
+    """Structural (c)-check: the traced reduction-select count equals the
+    cost model's — one canonicalize per transform, no hidden extras."""
+    cfg = pl.config
+    if cfg.width != "int64" or cfg.backend not in ("pallas", "pallas_fused"):
+        return
+    from repro.kernels import ops as ops_mod
+
+    for direction in ("fwd", "inv"):
+        try:
+            got = ops_mod.count_reduction_selects(
+                pl.params, schedule=cfg.schedule, direction=direction
+            )
+            want = ops_mod.transform_cost_model(
+                pl.params, schedule=cfg.schedule, direction=direction
+            )["reduction_ops"]
+        except Exception as e:  # pragma: no cover - defensive
+            findings.append(
+                Finding("error", "selects-crosscheck", direction, str(e))
+            )
+            continue
+        stats["selects_crosscheck"][direction] = {"traced": got, "model": want}
+        if got != want:
+            findings.append(
+                Finding(
+                    "error",
+                    "selects-crosscheck",
+                    direction,
+                    f"traced reduction selects {got} != cost model {want}",
+                )
+            )
+
+
+# --------------------------------------------------------------------------
+# mutation self-check
+# --------------------------------------------------------------------------
+
+
+def _mutated_shoup_plan(pl: Any) -> Any:
+    """Loosen one Shoup constant by +1 (off-by-one precompute bug)."""
+    from repro import api
+
+    ct = pl.params.tables
+    sh = np.array(ct.fwd_shoup)
+    sh[0, 1] += 1
+    ct2 = dataclasses.replace(ct, fwd_shoup=sh)
+    params2 = dataclasses.replace(pl.params, tables=ct2)
+    return api.plan_from_params(params2)
+
+
+def _mutated_window_plan(pl: Any) -> Any:
+    """Widen the lazy window 2 -> 4 in-memory, bypassing the constructor
+    validation (exactly the hand-bookkeeping drift the verifier guards:
+    at v=30 a window-4 Shoup product no longer fits 63 bits)."""
+    from repro import api
+
+    ct = pl.params.tables
+    ct2 = copy.copy(ct)
+    object.__setattr__(ct2, "lazy_window", 4)
+    params2 = dataclasses.replace(pl.params, tables=ct2)
+    return api.plan_from_params(params2)
+
+
+def mutation_selfcheck(preset: Optional[Preset] = None) -> Dict[str, Any]:
+    """Prove the analyzer is not vacuous: verify a healthy plan, then
+    assert both in-memory mutations are flagged as errors."""
+    if preset is None:
+        preset = next(p for p in PRESETS if p.v == 30 and p.backend == "pallas")
+    pl = preset.build_plan()
+    baseline = verify_plan(pl)
+    shoup_report = verify_plan(_mutated_shoup_plan(pl))
+    window_report = verify_plan(_mutated_window_plan(pl))
+    result = {
+        "preset": preset.name,
+        "baseline_ok": baseline.ok,
+        "shoup_mutation_flagged": not shoup_report.ok,
+        "shoup_mutation_codes": [f.code for f in shoup_report.errors()],
+        "window_mutation_flagged": not window_report.ok,
+        "window_mutation_codes": [f.code for f in window_report.errors()],
+    }
+    result["passed"] = bool(
+        baseline.ok
+        and result["shoup_mutation_flagged"]
+        and result["window_mutation_flagged"]
+    )
+    return result

@@ -65,6 +65,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -169,7 +170,7 @@ class Plan:
 
     config: PlanConfig
     params: ParenttParams
-    consts: dict
+    consts: dict[str, Any]
 
     # -- convenience ---------------------------------------------------
     @property
@@ -189,12 +190,12 @@ class Plan:
         return self.params.q
 
     # -- pytree protocol ----------------------------------------------
-    def tree_flatten(self):
+    def tree_flatten(self) -> tuple[Any, Any]:
         keys = tuple(sorted(self.consts))
         return tuple(self.consts[k] for k in keys), (self.config, self.params, keys)
 
     @classmethod
-    def tree_unflatten(cls, aux, leaves):
+    def tree_unflatten(cls, aux: Any, leaves: Any) -> "Plan":
         config, params, keys = aux
         return cls(config=config, params=params, consts=dict(zip(keys, leaves)))
 
@@ -220,17 +221,17 @@ class _LeafBound:
 
     __slots__ = ("_base", "_over")
 
-    def __init__(self, base, over: dict):
+    def __init__(self, base: Any, over: dict[str, Any]) -> None:
         self._base = base
         self._over = over
 
-    def __getattr__(self, name):  # called only when not found on self
+    def __getattr__(self, name: str) -> Any:  # called only when not found on self
         over = object.__getattribute__(self, "_over")
         if name in over:
             return over[name]
         return getattr(object.__getattribute__(self, "_base"), name)
 
-    def __repr__(self):
+    def __repr__(self) -> str:
         return f"_LeafBound({self._base!r}, over={sorted(self._over)})"
 
 
@@ -243,7 +244,7 @@ _CT_LEAF_STEMS = (
 _RNS_LEAF_STEMS = ("qs", "beta_pows", "qi_tilde", "qi_star_limbs", "q_limbs")
 
 
-def _bound_params(pl: Plan):
+def _bound_params(pl: Plan) -> Any:
     """A ParenttParams view whose NTT/RNS device tables are THIS plan's
     pytree leaves (int64 width; other widths return the params as-is).
 
@@ -285,7 +286,7 @@ def _bound_params(pl: Plan):
 
 
 @functools.lru_cache(maxsize=None)
-def _int64_consts(params: ParenttParams) -> dict:
+def _int64_consts(params: ParenttParams) -> dict[str, Any]:
     """Device constants of the int64 datapath as a named leaf dict.  The
     arrays are the very same device buffers ChannelTables/RnsPlan
     uploaded at construction — building a Plan never re-uploads."""
@@ -307,7 +308,7 @@ def _int64_consts(params: ParenttParams) -> dict:
 
 
 @functools.lru_cache(maxsize=None)
-def _wide_consts(params: ParenttParams) -> dict:
+def _wide_consts(params: ParenttParams) -> dict[str, Any]:
     """Device constants of the digit-split wide datapath: stacked
     per-channel twiddle tables plus POST_W-limb CRT constants, uploaded
     once per params object (cached)."""
@@ -330,11 +331,11 @@ def _wide_consts(params: ParenttParams) -> dict:
 
 
 @functools.lru_cache(maxsize=None)
-def _wide_specs(params: ParenttParams) -> tuple:
+def _wide_specs(params: ParenttParams) -> tuple[Any, ...]:
     return tuple(wide_mod.from_special(p) for p in params.primes)
 
 
-def _consts_for(params: ParenttParams, width: str) -> dict:
+def _consts_for(params: ParenttParams, width: str) -> dict[str, Any]:
     if width == "int64":
         return _int64_consts(params)
     if width == "wide":
@@ -364,7 +365,7 @@ def _resolve_backend(width: str, backend: str) -> str:
     return backend
 
 
-def _check_wide_envelope(width: str, t: int, v: int):
+def _check_wide_envelope(width: str, t: int, v: int) -> None:
     """Wide inverse-CRT envelope: the t-fold sum of y(<2^v) x
     limb(<2^POST_W) contributions must stay inside int64 — reject at
     plan time, never corrupt at execution time."""
@@ -473,7 +474,7 @@ def _require_plan(pl: Plan, fn: str) -> PlanConfig:
     return pl.config
 
 
-def _check_residues(x, cfg: PlanConfig, fn: str):
+def _check_residues(x: Any, cfg: PlanConfig, fn: str) -> None:
     if x.ndim < 2 or x.shape[0] != cfg.t or x.shape[-1] != cfg.n:
         raise ValueError(
             f"{fn}: expected residues (t={cfg.t}, ..., n={cfg.n}), "
@@ -481,7 +482,7 @@ def _check_residues(x, cfg: PlanConfig, fn: str):
         )
 
 
-def _check_poly_segments(z, cfg: PlanConfig, fn: str, name: str):
+def _check_poly_segments(z: Any, cfg: PlanConfig, fn: str, name: str) -> None:
     if z.ndim < 2 or z.shape[-2] != cfg.n or z.shape[-1] != cfg.seg_count:
         raise ValueError(
             f"{fn}: expected {name} segments (..., n={cfg.n}, "
@@ -489,7 +490,7 @@ def _check_poly_segments(z, cfg: PlanConfig, fn: str, name: str):
         )
 
 
-def _no_tracers(cfg: PlanConfig, fn: str, *arrays):
+def _no_tracers(cfg: PlanConfig, fn: str, *arrays: Any) -> None:
     if any(isinstance(a, jax.core.Tracer) for a in arrays):
         raise ValueError(
             f"{fn}: width={cfg.width!r} plans execute on the host "
@@ -503,7 +504,7 @@ def _no_tracers(cfg: PlanConfig, fn: str, *arrays):
 # --------------------------------------------------------------------------
 
 
-def polymul(pl: Plan, za, zb):
+def polymul(pl: Plan, za: Any, zb: Any) -> jax.Array:
     """za, zb: ``(..., n, S)`` base-2^v segment arrays -> ``(..., n, L)``
     base-2^w limbs of ``a * b mod (x^n + 1, q)`` — the whole Fig-10
     pipeline (decompose -> per-channel no-shuffle NTT cascade ->
@@ -537,7 +538,7 @@ def polymul(pl: Plan, za, zb):
     return _oracle_polymul(pl, za, zb)
 
 
-def ntt(pl: Plan, a):
+def ntt(pl: Plan, a: Any) -> jax.Array:
     """a: ``(t, ..., n)`` residues -> forward NTT per RNS channel
     (natural-order in, bit-reversed out — the no-shuffle convention)."""
     cfg = _require_plan(pl, "ntt")
@@ -556,7 +557,7 @@ def ntt(pl: Plan, a):
     )
 
 
-def intt(pl: Plan, a):
+def intt(pl: Plan, a: Any) -> jax.Array:
     """a: ``(t, ..., n)`` bit-reversed spectra -> natural-order residues."""
     cfg = _require_plan(pl, "intt")
     if cfg.width == "int64":
@@ -574,7 +575,7 @@ def intt(pl: Plan, a):
     )
 
 
-def negacyclic_mul(pl: Plan, a, b):
+def negacyclic_mul(pl: Plan, a: Any, b: Any) -> jax.Array:
     """``(t, ..., n) x (t, ..., n)`` -> per-channel negacyclic products
     (the residue-domain cascade — what the BFV layer runs per product)."""
     cfg = _require_plan(pl, "negacyclic_mul")
@@ -600,7 +601,7 @@ def negacyclic_mul(pl: Plan, a, b):
     )
 
 
-def decompose(pl: Plan, z):
+def decompose(pl: Plan, z: Any) -> jax.Array:
     """z: ``(..., S)`` base-2^v segments -> residues ``(t, ...)``."""
     cfg = _require_plan(pl, "decompose")
     if cfg.width == "int64":
@@ -628,7 +629,7 @@ def decompose(pl: Plan, z):
     return jnp.asarray(out.reshape((cfg.t,) + zn.shape[:-1]))
 
 
-def compose(pl: Plan, residues):
+def compose(pl: Plan, residues: Any) -> jax.Array:
     """residues: ``(t, ...)`` -> ``(..., L)`` base-2^w limbs of the
     CRT-composed value (canonical, < q)."""
     cfg = _require_plan(pl, "compose")
@@ -663,13 +664,13 @@ def compose(pl: Plan, residues):
 # --------------------------------------------------------------------------
 
 
-def _wide_decompose(pl: Plan, z):
+def _wide_decompose(pl: Plan, z: Any) -> jax.Array:
     return wide_mod.decompose_channels(
         z, _wide_specs(pl.params), pl.consts["wide_beta_pows"]
     )
 
 
-def _wide_compose(pl: Plan, residues):
+def _wide_compose(pl: Plan, residues: Any) -> jax.Array:
     cfg = pl.config
     limbs14 = wide_mod.compose_channels(
         residues,
@@ -688,7 +689,7 @@ def _wide_compose(pl: Plan, residues):
 # --------------------------------------------------------------------------
 
 
-def _oracle_polymul(pl: Plan, za, zb):
+def _oracle_polymul(pl: Plan, za: Any, zb: Any) -> jax.Array:
     cfg = pl.config
     _no_tracers(cfg, "polymul", za, zb)
     za_n, zb_n = np.asarray(za), np.asarray(zb)
@@ -709,7 +710,7 @@ def _oracle_polymul(pl: Plan, za, zb):
 # --------------------------------------------------------------------------
 
 
-def to_segments(pl: Plan, xs) -> jax.Array:
+def to_segments(pl: Plan, xs: Any) -> jax.Array:
     """Python ints (length n) -> ``(n, S)`` base-2^v segment array."""
     cfg = _require_plan(pl, "to_segments")
     return jnp.asarray(
@@ -717,7 +718,7 @@ def to_segments(pl: Plan, xs) -> jax.Array:
     )
 
 
-def from_limbs(pl: Plan, limbs) -> list[int]:
+def from_limbs(pl: Plan, limbs: Any) -> list[int]:
     """``(..., L)`` base-2^w output limbs -> flat list of Python ints."""
     cfg = _require_plan(pl, "from_limbs")
     return bigint.limbs_to_ints(np.asarray(limbs), cfg.w)
@@ -742,7 +743,7 @@ def plan_key(pl: Plan) -> PlanConfig:
     return _require_plan(pl, "plan_key")
 
 
-def execute(pl: Plan, za, zb, *, donate: bool = False):
+def execute(pl: Plan, za: Any, zb: Any, *, donate: bool = False) -> jax.Array:
     """Jitted :func:`polymul` through the shared module-level executor —
     the serving layer's execute hook.  One compiled entry per distinct
     :func:`plan_key`; ``donate=True`` additionally donates the operand
@@ -759,7 +760,7 @@ def execute(pl: Plan, za, zb, *, donate: bool = False):
     return _polymul_jit(pl, za, zb)
 
 
-def polymul_ints(pl: Plan, a, b) -> list[int]:
+def polymul_ints(pl: Plan, a: Any, b: Any) -> list[int]:
     """Host convenience: Python-int coefficient lists in, Python-int
     product coefficients out, through the plan's full device pipeline
     (or the host oracle for the oracle width)."""

@@ -24,27 +24,34 @@ in-kernel (Pallas ref-value) call sites.
 """
 from __future__ import annotations
 
+from typing import Any
+
 import jax.numpy as jnp
 import numpy as np
+
+# Every helper accepts python ints, numpy arrays, or traced jnp arrays
+# interchangeably (scalar/vmapped/in-kernel call sites) — that union has
+# no precise static type, so the lane-value alias is Any by design.
+Lanes = Any
 
 # --------------------------------------------------------------------------
 # add / sub / halve
 # --------------------------------------------------------------------------
 
 
-def add_mod(x, y, q):
+def add_mod(x: Lanes, y: Lanes, q: Lanes) -> Lanes:
     """(x + y) mod q for x, y in [0, q)."""
     s = x + y
     return jnp.where(s >= q, s - q, s)
 
 
-def sub_mod(x, y, q):
+def sub_mod(x: Lanes, y: Lanes, q: Lanes) -> Lanes:
     """(x - y) mod q for x, y in [0, q)."""
     d = x - y
     return jnp.where(d < 0, d + q, d)
 
 
-def div2_mod(x, q_half):
+def div2_mod(x: Lanes, q_half: Lanes) -> Lanes:
     """x * 2^{-1} mod q via paper Eq 24: (x >> 1) + (x & 1) * (q+1)/2.
     Result < q whenever x < q (no reduction needed)."""
     return (x >> 1) + (x & 1) * q_half
@@ -67,7 +74,7 @@ def barrett_constants(q: int, c: int, v: int) -> tuple[int, int, int]:
     return eps, v - 1, c - v + 1
 
 
-def barrett_reduce(x, q, eps, s1: int, s2: int):
+def barrett_reduce(x: Lanes, q: Lanes, eps: Lanes, s1: int, s2: int) -> Lanes:
     """x mod q for x < 2^c (see barrett_constants). Arrays or scalars."""
     qhat = ((x >> s1) * eps) >> s2
     r = x - qhat * q
@@ -76,7 +83,9 @@ def barrett_reduce(x, q, eps, s1: int, s2: int):
     return r
 
 
-def mul_barrett_constants(qs) -> tuple[np.ndarray, tuple[int, int]] | tuple[None, None]:
+def mul_barrett_constants(
+    qs: Lanes,
+) -> tuple[np.ndarray, tuple[int, int]] | tuple[None, None]:
     """Per-channel constants for reducing residue products x*y, x, y < q_i.
 
     Returns ``(eps, (s1, s2))`` with ``eps`` an int64 array aligned with
@@ -97,7 +106,9 @@ def mul_barrett_constants(qs) -> tuple[np.ndarray, tuple[int, int]] | tuple[None
     return eps, (b - 1, b + 1)
 
 
-def channel_mul_constants(qs):
+def channel_mul_constants(
+    qs: Lanes,
+) -> tuple[tuple[tuple[int, int, int | None], ...], tuple[int, int] | None]:
     """Static per-channel ``(qi, half, eps)`` triples plus the shared
     shift pair, as plain python ints.
 
@@ -117,7 +128,9 @@ def channel_mul_constants(qs):
     return triples, shifts
 
 
-def mul_mod(x, y, q, eps=None, shifts: tuple[int, int] | None = None):
+def mul_mod(
+    x: Lanes, y: Lanes, q: Lanes, eps: Lanes = None, shifts: tuple[int, int] | None = None
+) -> Lanes:
     """(x * y) mod q for x, y in [0, q).
 
     With ``eps``/``shifts`` (from :func:`mul_barrett_constants`,
@@ -125,7 +138,7 @@ def mul_mod(x, y, q, eps=None, shifts: tuple[int, int] | None = None):
     without them it falls back to a generic ``%``.
     """
     p = x * y
-    if eps is None:
+    if eps is None or shifts is None:
         return p % q
     s1, s2 = shifts
     return barrett_reduce(p, q, eps, s1, s2)
@@ -155,7 +168,7 @@ def mul_mod(x, y, q, eps=None, shifts: tuple[int, int] | None = None):
 STRICT_SELECTS_PER_STAGE = 5  # Barrett 3 + add_mod 1 + sub_mod 1
 
 
-def lazy_params(qs) -> tuple[int, int] | tuple[None, None]:
+def lazy_params(qs: Lanes) -> tuple[int, int] | tuple[None, None]:
     """(window, beta) for the lazy butterflies, or (None, None) when the
     configuration is outside the 63-bit-safe envelope (mixed widths or
     q >= 2^31 — exactly the configurations strict Barrett also rejects)."""
@@ -196,7 +209,9 @@ def validate_lazy_envelope(q: int, window: int, beta: int) -> None:
         )
 
 
-def lazy_stage_bounds(window: int, n_stages: int, inverse: bool = False):
+def lazy_stage_bounds(
+    window: int, n_stages: int, inverse: bool = False
+) -> tuple[tuple[int, int], ...]:
     """(value_bound, in_stage_peak) per stage, in units of q.  The
     butterflies below maintain value_bound = window across every stage;
     the peak is the transient before the window subtract (CT: u + t <
@@ -219,26 +234,28 @@ def canonicalize_selects(window: int) -> int:
     return 1 if window == 2 else 2
 
 
-def shoup_constants(table, q: int, beta: int) -> np.ndarray:
+def shoup_constants(table: Lanes, q: int, beta: int) -> np.ndarray:
     """w' = floor(w * 2^beta / q) per twiddle (host bigints, any shape)."""
     tab = np.asarray(table, dtype=np.int64)
     flat = [((int(w) << beta) // int(q)) for w in tab.reshape(-1)]
     return np.array(flat, dtype=np.int64).reshape(tab.shape)
 
 
-def cond_sub(x, m):
+def cond_sub(x: Lanes, m: Lanes) -> Lanes:
     """x - m if x >= m else x: ONE conditional (window) subtraction."""
     return jnp.where(x >= m, x - m, x)
 
 
-def shoup_mul(v, w, w_shoup, q, beta: int):
+def shoup_mul(v: Lanes, w: Lanes, w_shoup: Lanes, q: Lanes, beta: int) -> Lanes:
     """v * w mod q up to one extra q: output in [0, 2q), no conditional
     subtraction.  Requires v <= 2^beta and w in [0, q) canonical (w is a
     precomputed twiddle; w_shoup its Shoup constant)."""
     return v * w - ((v * w_shoup) >> beta) * q
 
 
-def lazy_ct_butterfly(u, v, w, w_shoup, q, *, beta: int, window: int):
+def lazy_ct_butterfly(
+    u: Lanes, v: Lanes, w: Lanes, w_shoup: Lanes, q: Lanes, *, beta: int, window: int
+) -> tuple[Lanes, Lanes]:
     """DIT/CT butterfly keeping both outputs in [0, window*q).
 
     window=4: 1 conditional subtraction (vs 5 strict); window=2: 2."""
@@ -251,7 +268,9 @@ def lazy_ct_butterfly(u, v, w, w_shoup, q, *, beta: int, window: int):
     return x, y
 
 
-def lazy_gs_butterfly(u, v, w, w_shoup, q, half, *, beta: int, window: int):
+def lazy_gs_butterfly(
+    u: Lanes, v: Lanes, w: Lanes, w_shoup: Lanes, q: Lanes, half: Lanes, *, beta: int, window: int
+) -> tuple[Lanes, Lanes]:
     """Mirror-order GS butterfly with the Eq-24 halving folded in; values
     stay in [0, window*q).  2 conditional subtractions either window."""
     wq = window * q
@@ -261,7 +280,7 @@ def lazy_gs_butterfly(u, v, w, w_shoup, q, half, *, beta: int, window: int):
     return div2_mod(s, half), div2_mod(d, half)
 
 
-def canonicalize(x, q, window: int):
+def canonicalize(x: Lanes, q: Lanes, window: int) -> Lanes:
     """[0, window*q) -> [0, q): the single exit reduce of a lazy
     transform (O(1) selects per transform instead of O(log n))."""
     if window == 4:

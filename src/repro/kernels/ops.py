@@ -52,6 +52,8 @@ may pass any leading shape (``ParenttMultiplier.preprocess`` passes
 """
 from __future__ import annotations
 
+from typing import Any
+
 import jax
 import jax.numpy as jnp
 
@@ -65,6 +67,7 @@ from repro.core.params import (
     resolve_schedule_for,
     validate_backend,
 )
+from repro.analysis import walk as walk_mod
 from repro.kernels import crt as crt_kernels
 from repro.kernels import ntt as ntt_kernels
 
@@ -92,7 +95,7 @@ def _is_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def unbind(obj):
+def unbind(obj: Any) -> Any:
     """The stable host object behind a leaf-bound view (see
     ``repro.api._LeafBound``), or ``obj`` itself.
 
@@ -146,7 +149,7 @@ def resolve_schedule(params: ParenttParams, schedule: str | None = None) -> str:
     return resolve_schedule_for(params.n, schedule)
 
 
-def _lazy_of(ct: ntt_mod.ChannelTables):
+def _lazy_of(ct: ntt_mod.ChannelTables) -> tuple[int, int] | None:
     """(window, beta) for the Harvey lazy butterflies, or None when the
     table set has no Shoup constants (outside the 63-bit envelope)."""
     if ct.lazy_window is None or ct.mul_shifts is None:
@@ -154,7 +157,9 @@ def _lazy_of(ct: ntt_mod.ChannelTables):
     return (ct.lazy_window, ct.shoup_beta)
 
 
-def _sched_tables(ct: ntt_mod.ChannelTables, schedule: str, lazy, direction: str):
+def _sched_tables(
+    ct: ntt_mod.ChannelTables, schedule: str, lazy: tuple[int, int] | None, direction: str
+) -> tuple[Any, Any, Any, Any]:
     """(table, shoup, row_table, row_shoup) device arrays for one
     transform direction under (schedule, lazy) — the positional tail the
     kernel wrappers expect after their required args."""
@@ -179,7 +184,10 @@ def _sched_tables(ct: ntt_mod.ChannelTables, schedule: str, lazy, direction: str
     )
 
 
-def _kernel_kw(params: ParenttParams, schedule: str, lazy) -> dict:
+def _kernel_kw(
+    params: ParenttParams, schedule: str, lazy: tuple[int, int] | None
+) -> dict[str, Any]:
+    assert params.tables is not None  # callers guard via _require_tables
     kw = dict(
         shifts=params.tables.mul_shifts,
         schedule=schedule,
@@ -196,7 +204,7 @@ def _kernel_kw(params: ParenttParams, schedule: str, lazy) -> dict:
 # --------------------------------------------------------------------------
 
 
-def _check_residues(x, params: ParenttParams, fn: str):
+def _check_residues(x: Any, params: ParenttParams, fn: str) -> None:
     if x.ndim < 2 or x.shape[0] != params.t or x.shape[-1] != params.n:
         raise ValueError(
             f"{fn}: expected residues (t={params.t}, ..., n={params.n}), "
@@ -204,7 +212,7 @@ def _check_residues(x, params: ParenttParams, fn: str):
         )
 
 
-def _check_segments(z, params: ParenttParams, fn: str):
+def _check_segments(z: Any, params: ParenttParams, fn: str) -> None:
     S = params.plan.seg_count
     if z.ndim < 1 or z.shape[-1] != S:
         raise ValueError(
@@ -223,7 +231,7 @@ def _require_tables(params: ParenttParams, fn: str) -> ntt_mod.ChannelTables:
     return params.tables
 
 
-def _fold_rows(x):
+def _fold_rows(x: Any) -> tuple[Any, tuple[int, ...]]:
     """(t, ..., n) -> ((t, rows, n), unfold)"""
     t, n = x.shape[0], x.shape[-1]
     lead = x.shape[1:-1]
@@ -235,8 +243,8 @@ def _fold_rows(x):
 # --------------------------------------------------------------------------
 
 
-def ntt_forward(a, params: ParenttParams, *, backend: str | None = None,
-                use_pallas: bool | None = None, schedule: str | None = None):
+def ntt_forward(a: Any, params: ParenttParams, *, backend: str | None = None,
+                use_pallas: bool | None = None, schedule: str | None = None) -> Any:
     """a: (t, ..., n) -> forward NTT per RNS channel."""
     backend = _stage_backend(resolve_backend(params, backend, use_pallas))
     schedule = resolve_schedule(params, schedule)
@@ -254,8 +262,8 @@ def ntt_forward(a, params: ParenttParams, *, backend: str | None = None,
     return out.reshape(a.shape[:1] + lead + a.shape[-1:])
 
 
-def ntt_inverse(a, params: ParenttParams, *, backend: str | None = None,
-                use_pallas: bool | None = None, schedule: str | None = None):
+def ntt_inverse(a: Any, params: ParenttParams, *, backend: str | None = None,
+                use_pallas: bool | None = None, schedule: str | None = None) -> Any:
     """a: (t, ..., n) bit-reversed spectra -> natural-order coefficients."""
     backend = _stage_backend(resolve_backend(params, backend, use_pallas))
     schedule = resolve_schedule(params, schedule)
@@ -273,8 +281,10 @@ def ntt_inverse(a, params: ParenttParams, *, backend: str | None = None,
     return out.reshape(a.shape[:1] + lead + a.shape[-1:])
 
 
-def negacyclic_mul(a, b, params: ParenttParams, *, backend: str | None = None,
-                   use_pallas: bool | None = None, schedule: str | None = None):
+def negacyclic_mul(a: Any, b: Any, params: ParenttParams, *,
+                   backend: str | None = None,
+                   use_pallas: bool | None = None,
+                   schedule: str | None = None) -> Any:
     """(t, ..., n) x (t, ..., n) -> negacyclic products per RNS channel
     (the no-shuffle NTT -> ⊙ -> iNTT cascade)."""
     backend = _stage_backend(
@@ -323,8 +333,8 @@ def negacyclic_mul(a, b, params: ParenttParams, *, backend: str | None = None,
 # --------------------------------------------------------------------------
 
 
-def rns_decompose(z, params: ParenttParams, *, backend: str | None = None,
-                  use_pallas: bool | None = None, use_sau: bool = True):
+def rns_decompose(z: Any, params: ParenttParams, *, backend: str | None = None,
+                  use_pallas: bool | None = None, use_sau: bool = True) -> Any:
     """z: (..., S) base-2^v segments -> residues (t, ...)."""
     backend = _stage_backend(resolve_backend(params, backend, use_pallas))
     _check_segments(z, params, "rns_decompose")
@@ -339,8 +349,9 @@ def rns_decompose(z, params: ParenttParams, *, backend: str | None = None,
     return out.reshape((params.t,) + lead)
 
 
-def rns_compose(residues, params: ParenttParams, *, backend: str | None = None,
-                use_pallas: bool | None = None):
+def rns_compose(residues: Any, params: ParenttParams, *,
+                backend: str | None = None,
+                use_pallas: bool | None = None) -> Any:
     """residues: (t, ...) -> (..., L) base-2^w limbs of the composed value."""
     backend = _stage_backend(resolve_backend(params, backend, use_pallas))
     if residues.ndim < 1 or residues.shape[0] != params.t:
@@ -367,10 +378,10 @@ def rns_compose(residues, params: ParenttParams, *, backend: str | None = None,
 # --------------------------------------------------------------------------
 
 
-def fused_polymul_e2e(za, zb, params: ParenttParams, *,
+def fused_polymul_e2e(za: Any, zb: Any, params: ParenttParams, *,
                       backend: str | None = None,
                       use_pallas: bool | None = None, use_sau: bool = True,
-                      schedule: str | None = None):
+                      schedule: str | None = None) -> Any:
     """za, zb: (..., n, S) segment arrays -> (..., n, L) product limbs:
     decompose -> per-channel NTT cascade -> compose.
 
@@ -421,7 +432,7 @@ def fused_polymul_e2e(za, zb, params: ParenttParams, *,
 
 
 def hbm_traffic_model(params: ParenttParams, rows: int,
-                      backend: str | None = None) -> dict:
+                      backend: str | None = None) -> dict[str, Any]:
     """Modeled HBM bytes crossing kernel/stage boundaries for ONE
     end-to-end multiply of ``rows`` polynomials (both operands in, limbs
     out), per backend.
@@ -489,20 +500,7 @@ def count_pallas_launches(params: ParenttParams, backend: str | None = None,
     jaxpr = jax.make_jaxpr(
         lambda a, b: fused_polymul_e2e(a, b, params, backend=backend)
     )(z, z)
-
-    def count(jx) -> int:
-        n = 0
-        for eqn in jx.eqns:
-            if eqn.primitive.name == "pallas_call":
-                n += 1
-            for v in eqn.params.values():
-                if hasattr(v, "jaxpr"):  # ClosedJaxpr (jit/pjit bodies)
-                    n += count(v.jaxpr)
-                elif hasattr(v, "eqns"):  # raw Jaxpr
-                    n += count(v)
-        return n
-
-    return count(jaxpr.jaxpr)
+    return walk_mod.count_prim(jaxpr, "pallas_call")
 
 
 # --------------------------------------------------------------------------
@@ -512,7 +510,7 @@ def count_pallas_launches(params: ParenttParams, backend: str | None = None,
 
 
 def transform_cost_model(params: ParenttParams, *, schedule: str | None = None,
-                         direction: str = "fwd") -> dict:
+                         direction: str = "fwd") -> dict[str, Any]:
     """Structural cost of ONE NTT transform under a schedule:
 
     * ``sublane_stages`` — stages whose butterfly pairs sit within the
@@ -573,30 +571,4 @@ def count_reduction_selects(params: ParenttParams, *,
     jaxpr = jax.make_jaxpr(
         lambda x: fn(x, params, backend="pallas", schedule=schedule)
     )(a)
-
-    def count_selects(jx) -> int:
-        num = 0
-        for eqn in jx.eqns:
-            if eqn.primitive.name == "select_n":
-                num += 1
-            for v in eqn.params.values():
-                if hasattr(v, "jaxpr"):
-                    num += count_selects(v.jaxpr)
-                elif hasattr(v, "eqns"):
-                    num += count_selects(v)
-        return num
-
-    def walk(jx) -> int:
-        num = 0
-        for eqn in jx.eqns:
-            if eqn.primitive.name == "pallas_call":
-                num += count_selects(eqn.params["jaxpr"])
-            else:
-                for v in eqn.params.values():
-                    if hasattr(v, "jaxpr"):
-                        num += walk(v.jaxpr)
-                    elif hasattr(v, "eqns"):
-                        num += walk(v)
-        return num
-
-    return walk(jaxpr.jaxpr)
+    return walk_mod.count_prim(jaxpr, "select_n", inside_pallas_only=True)

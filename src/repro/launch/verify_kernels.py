@@ -1,0 +1,110 @@
+"""CLI front door for the kernel verifier (DESIGN.md §9).
+
+Sweeps registered presets through :func:`repro.analysis.verify.verify_plan`
+(abstract-interpretation overflow / envelope / canonicalize proof + lane
+and staticness lints over the traced kernel jaxprs) and optionally runs
+the mutation self-check (corrupt a Shoup constant / widen the lazy window
+in-memory and assert the verifier flags it).  Exit status is nonzero on
+any verification failure, so the ``verify-kernels`` CI job is blocking.
+
+Usage::
+
+    python -m repro.launch.verify_kernels --all-presets --mutation-check \
+        --out VERIFY_report.json
+    python -m repro.launch.verify_kernels --preset n64_t3_v30_pallas_radix2
+    python -m repro.launch.verify_kernels --list
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Any, Dict, List, Optional
+
+
+def _run_preset(preset: Any) -> Dict[str, Any]:
+    from repro.analysis.verify import verify_plan
+
+    t0 = time.time()
+    try:
+        report = verify_plan(preset.build_plan())
+        entry = report.as_dict()
+        entry["ok"] = report.ok
+    except Exception as exc:  # surface crashes as failures, not green runs
+        entry = {"ok": False, "crash": f"{type(exc).__name__}: {exc}"}
+    entry["preset"] = preset.name
+    entry["seconds"] = round(time.time() - t0, 2)
+    return entry
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.verify_kernels",
+        description="Static verification sweep over registered kernel presets",
+    )
+    ap.add_argument(
+        "--all-presets", action="store_true", help="verify every registered preset"
+    )
+    ap.add_argument(
+        "--preset", action="append", default=[],
+        help="verify one preset by name (repeatable)",
+    )
+    ap.add_argument(
+        "--mutation-check", action="store_true",
+        help="run the corrupted-table self-check",
+    )
+    ap.add_argument("--out", default=None, help="write the JSON report here")
+    ap.add_argument("--list", action="store_true", help="list registered presets and exit")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.verify import PRESETS, mutation_selfcheck
+
+    by_name = {p.name: p for p in PRESETS}
+    if args.list:
+        for p in PRESETS:
+            print(f"{p.name}  n={p.n} t={p.t} v={p.v} backend={p.backend} schedule={p.schedule}")
+        return 0
+
+    selected = list(PRESETS) if args.all_presets or not args.preset else []
+    for name in args.preset:
+        if name not in by_name:
+            ap.error(f"unknown preset {name!r}; --list shows the registry")
+        if by_name[name] not in selected:
+            selected.append(by_name[name])
+
+    report: Dict[str, Any] = {"presets": [], "ok": True}
+    for preset in selected:
+        entry = _run_preset(preset)
+        report["presets"].append(entry)
+        status = "ok" if entry["ok"] else "FAIL"
+        print(f"[verify-kernels] {preset.name:<28} {status}  ({entry['seconds']}s)")
+        if not entry["ok"]:
+            report["ok"] = False
+            for f in entry.get("findings", [])[:6]:
+                print(
+                    f"    {f.get('severity')}/{f.get('code')} @ "
+                    f"{f.get('where')}: {f.get('message')}"
+                )
+            if "crash" in entry:
+                print(f"    crash: {entry['crash']}")
+
+    if args.mutation_check:
+        mc = mutation_selfcheck()
+        report["mutation_selfcheck"] = mc
+        status = "ok" if mc["passed"] else "FAIL"
+        print(f"[verify-kernels] mutation-selfcheck           {status}")
+        if not mc["passed"]:
+            report["ok"] = False
+            print(f"    {json.dumps(mc, default=str)}")
+
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(report, fh, indent=1, default=str)
+        print(f"[verify-kernels] report -> {args.out}")
+
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,369 @@
+"""Kernel-verifier tests (DESIGN.md §9).
+
+Four layers:
+
+* abstract-domain unit tests — interval/q-linear transfer functions
+  against brute-force concrete enumeration;
+* preset sweep — every registered preset must verify clean (the same
+  sweep the blocking ``verify-kernels`` CI job runs);
+* adversarial — the mutation self-check plus planted overflow and
+  staticness violations, proving the analyzer is not vacuous;
+* soundness property (hypothesis) — every integer intermediate of a
+  concretely evaluated trace lands inside the interval the abstract
+  interpreter predicted for it.
+"""
+from fractions import Fraction
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+import repro
+from repro.analysis import domain as D
+from repro.analysis import passes, verify, walk
+from repro.analysis.domain import AbsVal, QCtx
+from repro.analysis.interp import analyze_closed_jaxpr
+
+
+QCTX = QCtx(q_min=535756801, q_max=1071643649)  # spans v29..v30 moduli
+
+
+def _plan(name):
+    preset = next(p for p in verify.PRESETS if p.name == name)
+    return preset.build_plan()
+
+
+# --------------------------------------------------------------------------
+# abstract domain
+# --------------------------------------------------------------------------
+
+
+class TestDomain:
+    def test_interval_transfer_vs_concrete(self):
+        """add/sub/mul bounds contain every concrete combination."""
+        samples = [(-3, 2), (0, 5), (4, 4), (-7, -1)]
+        for alo, ahi in samples:
+            for blo, bhi in samples:
+                a, b = D.from_ints(alo, ahi), D.from_ints(blo, bhi)
+                xs = range(alo, ahi + 1)
+                ys = range(blo, bhi + 1)
+                for op, ref in (
+                    (D.add, lambda x, y: x + y),
+                    (D.sub, lambda x, y: x - y),
+                    (D.mul, lambda x, y: x * y),
+                ):
+                    out = op(a, b, QCTX)
+                    vals = [ref(x, y) for x in xs for y in ys]
+                    assert out.lo <= min(vals) and max(vals) <= out.hi
+
+    def test_units_of_q_canonical_and_window(self):
+        one_q = AbsVal(0, QCTX.q_max - 1).with_qlin(
+            Fraction(1), Fraction(-1), QCTX
+        )
+        assert D.units_of_q(one_q, QCTX) == 1
+        two_q = D.add(one_q, one_q, QCTX)
+        assert D.units_of_q(two_q, QCTX) == 2
+
+    def test_join_keeps_dominating_qlin(self):
+        """pad/select joins must not lose 'x < q' when the other branch's
+        constant bound already sits below q at the worst channel."""
+        canon = AbsVal(0, QCTX.q_max - 1).with_qlin(
+            Fraction(1), Fraction(-1), QCTX
+        )
+        zero = D.const(0)
+        out = D.join(canon, zero, QCTX)
+        assert out.qa == Fraction(1) and out.qb == Fraction(-1)
+        # ... but a constant ABOVE qa*q_min+qb kills the q-linear form
+        big = D.const(QCTX.q_min + 7)
+        out2 = D.join(canon, big, QCTX)
+        assert out2.qa is None
+
+    def test_mul_scales_qlin_only_by_small_singletons(self):
+        canon = AbsVal(0, QCTX.q_max - 1).with_qlin(
+            Fraction(1), Fraction(-1), QCTX
+        )
+        doubled = D.mul(canon, D.const(2), QCTX)
+        assert doubled.qa == Fraction(2)
+        # a data-sized factor must NOT manufacture a q-linear form
+        wide = D.mul(canon, D.from_ints(0, 1 << 20), QCTX)
+        assert wide.qa is None
+
+    def test_shift_left_scales_both_qlinear_forms(self):
+        av = AbsVal(1, QCTX.q_max - 1).with_qlin(
+            Fraction(1), Fraction(-1), QCTX
+        ).with_qlo(Fraction(0), Fraction(1), QCTX)
+        out = D.shift_left(av, D.const(2), QCTX)
+        assert out.qa == Fraction(4) and out.la == Fraction(0)
+        assert out.lb == Fraction(4)
+
+
+# --------------------------------------------------------------------------
+# preset sweep (what the verify-kernels CI job runs)
+# --------------------------------------------------------------------------
+
+
+class TestPresetSweep:
+    @pytest.mark.parametrize(
+        "preset", verify.PRESETS, ids=[p.name for p in verify.PRESETS]
+    )
+    def test_preset_verifies_clean(self, preset):
+        report = repro.verify_plan(preset.build_plan())
+        assert report.ok, [f.as_dict() for f in report.errors()]
+
+    def test_pallas_envelope_matches_hand_bookkeeping(self):
+        report = repro.verify_plan(_plan("n64_t3_v30_pallas_radix2"))
+        assert report.ok
+        assert set(report.envelopes) == {"ntt", "intt", "polymul"}
+        for env in report.envelopes.values():
+            assert env["events"] > 0
+            for direction, d in env["derived"].items():
+                hand = env["hand"][direction]
+                assert d["value"] <= hand["value"]
+                assert d["peak"] <= hand["peak"]
+
+    def test_report_round_trips_json(self):
+        import json
+
+        report = repro.verify_plan(_plan("n64_t3_v30_jnp_radix2"))
+        blob = json.loads(report.to_json())
+        assert blob["ok"] is True
+        assert blob["plan"]["n"] == 64
+
+
+# --------------------------------------------------------------------------
+# adversarial: the analyzer must catch planted violations
+# --------------------------------------------------------------------------
+
+
+class TestAdversarial:
+    def test_mutation_selfcheck(self):
+        result = verify.mutation_selfcheck()
+        assert result["passed"], result
+
+    def test_planted_overflow_is_flagged(self):
+        """Cubing a canonical v30 residue exceeds 63 bits — the abstract
+        walk must prove the overflow, not assume int64 wraps away."""
+        pl = _plan("n64_t3_v30_jnp_radix2")
+        closed = jax.make_jaxpr(lambda x: x * x * x)(
+            jnp.zeros((3, 64), jnp.int64)
+        )
+        ctx = verify._fresh_ctx(passes.build_context(pl), 64)
+        analyze_closed_jaxpr(
+            closed, [verify._canonical_seed(ctx.qctx)], ctx, where="cube"
+        )
+        assert any(f.code == "overflow" for f in ctx.findings)
+
+    def test_planted_staticness_violation_is_flagged(self):
+        """A baked COPY of a plan leaf (vs the threaded leaf itself) must
+        trip the staticness lint — that is the PR 5 invariant."""
+        pl = _plan("n64_t3_v30_jnp_radix2")
+        baked = np.array(pl.params.tables.fwd)  # copy, not the leaf
+
+        def leaky(x):
+            return x + jnp.asarray(baked)[:, :64]
+
+        closed = jax.make_jaxpr(leaky)(jnp.zeros((3, 64), jnp.int64))
+        ctx = verify._fresh_ctx(passes.build_context(pl), 64)
+        flagged = passes.staticness_lint(closed, ctx, "leaky")
+        assert flagged and flagged[0]["copy_of"] is not None
+        assert any(f.code == "staticness" for f in ctx.findings)
+
+    def test_unknown_primitive_fails_closed(self):
+        pl = _plan("n64_t3_v30_jnp_radix2")
+        closed = jax.make_jaxpr(lambda x: jnp.sin(x.astype(jnp.float32)))(
+            jnp.zeros((8,), jnp.int64)
+        )
+        ctx = verify._fresh_ctx(passes.build_context(pl), 64)
+        outs = analyze_closed_jaxpr(
+            closed, [verify._canonical_seed(ctx.qctx)], ctx, where="f32"
+        )
+        # float outputs are outside the domain: result is unconstrained,
+        # never a silently-trusted bound
+        assert all(
+            not isinstance(o, AbsVal) or o.lo is None or o.hi is None
+            for o in outs
+        ) or not ctx.ok
+
+
+# --------------------------------------------------------------------------
+# structural walk helpers
+# --------------------------------------------------------------------------
+
+
+class TestWalk:
+    def test_count_prim_matches_dispatch_claim(self):
+        pl = _plan("n64_t3_v30_pallas_radix2")
+        a = jnp.zeros((3, 2, 64), jnp.int64)
+        closed = jax.make_jaxpr(lambda x: repro.ntt(pl, x))(a)
+        assert walk.count_prim(closed, "pallas_call") == 1
+        inside = walk.count_prim(closed, "select_n", inside_pallas_only=True)
+        total = walk.count_prim(closed, "select_n")
+        assert 0 < inside <= total
+
+
+# --------------------------------------------------------------------------
+# soundness property: concrete execution never escapes predicted bounds
+# --------------------------------------------------------------------------
+
+
+def _eval_checking_bounds(closed, concrete, bounds, where):
+    """Evaluate the jaxpr eqn-by-eqn; assert every top-level integer
+    intermediate lands inside the analyzer's predicted interval."""
+    env = {}
+
+    def read(atom):
+        return atom.val if hasattr(atom, "val") else env[atom]
+
+    for var, val in zip(closed.jaxpr.constvars, closed.consts):
+        env[var] = val
+    for var, val in zip(closed.jaxpr.invars, concrete):
+        env[var] = val
+    for idx, eqn in enumerate(closed.jaxpr.eqns):
+        ins = [read(x) for x in eqn.invars]
+        subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
+        outs = eqn.primitive.bind(*subfuns, *ins, **bind_params)
+        if not eqn.primitive.multiple_results:
+            outs = [outs]
+        for oi, (var, val) in enumerate(zip(eqn.outvars, outs)):
+            env[var] = val
+            lo, hi = bounds.get((where, idx, oi), (None, None))
+            arr = np.asarray(val)
+            if not np.issubdtype(arr.dtype, np.integer) or arr.size == 0:
+                continue
+            if lo is not None:
+                assert int(arr.min()) >= lo, (idx, eqn.primitive.name)
+            if hi is not None:
+                assert int(arr.max()) <= hi, (idx, eqn.primitive.name)
+    return [read(v) for v in closed.jaxpr.outvars]
+
+
+def test_soundness_deterministic_smoke():
+    """Non-hypothesis twin of the property below: one fixed draw, so the
+    soundness machinery is exercised even where hypothesis is absent."""
+    pl = _plan("n64_t3_v30_jnp_radix2")
+    cfg = pl.config
+    closed = jax.make_jaxpr(lambda a: repro.intt(pl, a))(
+        jnp.zeros((cfg.t, cfg.n), jnp.int64)
+    )
+    ctx = verify._fresh_ctx(passes.build_context(pl), 64)
+    ctx.bounds_out = {}
+    analyze_closed_jaxpr(
+        closed, [verify._canonical_seed(ctx.qctx)], ctx, where="intt"
+    )
+    assert ctx.ok and ctx.bounds_out
+    rng = np.random.RandomState(20260809)
+    qs = np.asarray(pl.params.plan.qs, dtype=np.int64)
+    a = np.stack(
+        [rng.randint(0, int(q), size=cfg.n).astype(np.int64) for q in qs]
+    )
+    _eval_checking_bounds(closed, [jnp.asarray(a)], ctx.bounds_out, "intt")
+
+
+class TestSoundnessProperty:
+    @pytest.mark.parametrize(
+        "preset_name",
+        ["n64_t3_v30_jnp_radix2", "n64_t3_v29_jnp_radix2"],
+    )
+    @settings(max_examples=8, deadline=None)
+    @given(data=st.data())
+    def test_concrete_intt_within_predicted_intervals(self, preset_name, data):
+        pl = _plan(preset_name)
+        cfg = pl.config
+        closed = jax.make_jaxpr(lambda a: repro.intt(pl, a))(
+            jnp.zeros((cfg.t, cfg.n), jnp.int64)
+        )
+        ctx = verify._fresh_ctx(passes.build_context(pl), 64)
+        ctx.bounds_out = {}
+        analyze_closed_jaxpr(
+            closed, [verify._canonical_seed(ctx.qctx)], ctx, where="intt"
+        )
+        assert ctx.ok, [f.as_dict() for f in ctx.findings]
+        seed = data.draw(st.integers(min_value=0, max_value=2**31 - 1))
+        rng = np.random.RandomState(seed)
+        qs = np.asarray(pl.params.plan.qs, dtype=np.int64)
+        a = np.stack(
+            [rng.randint(0, int(q), size=cfg.n).astype(np.int64) for q in qs]
+        )
+        outs = _eval_checking_bounds(
+            closed, [jnp.asarray(a)], ctx.bounds_out, "intt"
+        )
+        out = np.asarray(outs[0])
+        assert (out >= 0).all() and (out < qs[:, None]).all()
+
+    @settings(max_examples=5, deadline=None)
+    @given(data=st.data())
+    def test_concrete_polymul_within_predicted_intervals(self, data):
+        pl = _plan("n64_t3_v30_jnp_radix2")
+        cfg = pl.config
+        S = cfg.seg_count
+        closed = jax.make_jaxpr(lambda za, zb: repro.polymul(pl, za, zb))(
+            jnp.zeros((cfg.n, S), jnp.int64), jnp.zeros((cfg.n, S), jnp.int64)
+        )
+        ctx = verify._fresh_ctx(passes.build_context(pl), 64)
+        ctx.bounds_out = {}
+        seeds = [
+            verify._seed_for("polymul", i, pl, ctx.qctx) for i in range(2)
+        ]
+        analyze_closed_jaxpr(closed, seeds, ctx, where="polymul")
+        assert ctx.ok, [f.as_dict() for f in ctx.findings]
+        seed = data.draw(st.integers(min_value=0, max_value=2**31 - 1))
+        rng = np.random.RandomState(seed)
+        za, zb = (
+            jnp.asarray(
+                rng.randint(0, 1 << cfg.v, size=(cfg.n, S)).astype(np.int64)
+            )
+            for _ in range(2)
+        )
+        _eval_checking_bounds(closed, [za, zb], ctx.bounds_out, "polymul")
+
+
+# --------------------------------------------------------------------------
+# CLI front doors
+# --------------------------------------------------------------------------
+
+
+class TestCLIs:
+    def test_verify_kernels_cli_single_preset(self, tmp_path, capsys):
+        from repro.launch import verify_kernels
+
+        out = tmp_path / "report.json"
+        rc = verify_kernels.main(
+            ["--preset", "n64_t3_v30_jnp_radix2", "--out", str(out)]
+        )
+        assert rc == 0
+        import json
+
+        blob = json.loads(out.read_text())
+        assert blob["ok"] and blob["presets"][0]["ok"]
+
+    def test_dead_modules_cli(self, tmp_path):
+        from repro.launch import dead_modules
+
+        out = tmp_path / "dead.json"
+        rc = dead_modules.main(["--out", str(out)])
+        assert rc == 0  # non-blocking by design
+        import json
+
+        blob = json.loads(out.read_text())
+        assert blob["reachable_count"] > 0
+        # the verifier stack itself must be reachable from the surface
+        assert "repro.analysis.verify" not in blob["dead_modules"]
+
+    def test_mutated_shoup_plan_fails_verification(self):
+        pl = _plan("n64_t3_v30_pallas_radix2")
+        bad = verify._mutated_shoup_plan(pl)
+        report = repro.verify_plan(bad)
+        assert not report.ok
+        assert "table-integrity" in report.codes()
+
+
+def test_verify_plan_is_exported():
+    assert hasattr(repro, "verify_plan")
+    assert "verify_plan" in repro.__all__
