@@ -19,7 +19,9 @@ runs the small-preset interpret-mode smoke used by the ``bench-smoke``
 CI job: it records wall-clock + modeled HBM bytes for all four
 backends across BOTH stage schedules (radix2 / four_step), checks every
 path bit-exact against the bigint oracle, verifies the
-reduction-op/lane-alignment cost model against the traced kernels, and
+reduction-op/lane-alignment cost model against the traced kernels,
+executes one n=4096 four-step fused-e2e point bit-exact against the
+host-NTT bigint oracle (recording its frozen ScheduleSpec tile), and
 exits non-zero if any fusion/lane/lazy invariant regressed.  With
 ``--baseline BENCH_seed.json`` it additionally diffs op counts and
 modeled HBM bytes against the committed baseline, so the perf
@@ -294,6 +296,16 @@ def diff_against_baseline(rec: dict, baseline: dict) -> list[str]:
                         f"baseline regression [{scope}.{schedule}].{key}: "
                         f"{c[key]} > committed {base[key]}"
                     )
+    for name, c in rec.get("big_n", {}).items():
+        base = baseline.get("big_n", {}).get(name)
+        if not base:
+            continue
+        for key in ("hbm_bytes", "kernel_launches", "tile_bytes", "depth"):
+            if c[key] > base[key]:
+                fails.append(
+                    f"baseline regression [big_n.{name}].{key}: "
+                    f"{c[key]} > committed {base[key]}"
+                )
     return fails
 
 
@@ -360,6 +372,34 @@ def run_ci_smoke(out_path: str, n: int = 64, t: int = 3, v: int = 30,
     rec["cost_model_n256"] = _cost_model_record(
         params_mod.make_params(n=256, t=6, v=30)
     )
+    # big-n point (PR 7): the n=4096 four-step operating size through the
+    # fused-e2e Pallas path, bit-exact vs the host-NTT bigint oracle, with
+    # the frozen ScheduleSpec's VMEM tile recorded so tiling regressions
+    # show up in the baseline diff (interpret mode: one execution, t=2
+    # keeps the smoke under a few seconds)
+    p4k = params_mod.make_params(n=4096, t=2, v=30)
+    pl4k = _plan(p4k, backend="pallas_fused_e2e", schedule="four_step")
+    spec4k = pl4k.config.schedule
+    rng4k = random.Random(11)
+    a4 = [rng4k.randrange(p4k.q) for _ in range(p4k.n)]
+    b4 = [rng4k.randrange(p4k.q) for _ in range(p4k.n)]
+    t0 = time.perf_counter()
+    got4k = repro.polymul_ints(pl4k, a4, b4)
+    us4k = (time.perf_counter() - t0) * 1e6
+    m4k = ops_mod.hbm_traffic_model(p4k, rows=1, backend="pallas_fused_e2e")
+    rec["big_n"] = {
+        "n4096_fused_e2e_four_step": {
+            "schedule": str(spec4k),
+            "depth": spec4k.depth,
+            "row_blk": spec4k.row_blk,
+            "tile_bytes": spec4k.tile_bytes,
+            "vmem_budget": spec4k.vmem_budget,
+            "hbm_bytes": m4k["hbm_bytes"],
+            "kernel_launches": m4k["kernel_launches"],
+            "us_per_poly": us4k,
+            "bit_exact_vs_oracle": got4k == pm.oracle_multiply(a4, b4, p4k),
+        }
+    }
     fused = rec["backends"]["pallas_fused_e2e"]
     three = rec["backends"]["pallas"]
     rec["fused_e2e_hbm_reduction_vs_pallas"] = (
@@ -414,6 +454,16 @@ def run_ci_smoke(out_path: str, n: int = 64, t: int = 3, v: int = 30,
                     f"({c['reduction_ops_fwd']} vs strict "
                     f"{c['strict_reduction_ops']})"
                 )
+    for name, c in rec["big_n"].items():
+        if not c["bit_exact_vs_oracle"]:
+            failures.append(
+                f"big_n {name} is not bit-exact vs the bigint oracle"
+            )
+        if c["tile_bytes"] > c["vmem_budget"]:
+            failures.append(
+                f"big_n {name}: frozen schedule tile ({c['tile_bytes']} B) "
+                f"exceeds the VMEM budget ({c['vmem_budget']} B)"
+            )
     if baseline_path:
         with open(baseline_path) as f:
             failures += diff_against_baseline(rec, json.load(f))

@@ -25,12 +25,18 @@ _config.update("jax_enable_x64", True)
 
 __version__ = "0.2.0"
 
+from repro.errors import (  # noqa: E402
+    PlanError,
+    UnknownKnobError,
+    UnservableConfigError,
+)
 from repro.api import (  # noqa: E402  (x64 must flip before jax.numpy use)
     BACKENDS,
     SCHEDULES,
     WIDTHS,
     Plan,
     PlanConfig,
+    ScheduleSpec,
     compose,
     decompose,
     execute,
@@ -62,6 +68,10 @@ __all__ = [
     "WIDTHS",
     "Plan",
     "PlanConfig",
+    "PlanError",
+    "ScheduleSpec",
+    "UnknownKnobError",
+    "UnservableConfigError",
     "__version__",
     "compose",
     "decompose",

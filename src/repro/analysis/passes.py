@@ -24,8 +24,8 @@ import numpy as np
 from repro.analysis import walk
 from repro.analysis.domain import AbsVal, QCtx
 from repro.analysis.interp import AnalysisContext, Finding
+from repro.core.schedule import VMEM_BUDGET_BYTES  # per-core VMEM (pallas guide)
 
-VMEM_BUDGET_BYTES = 16 * 1024 * 1024  # per-core VMEM (pallas guide)
 SMALL_CONST_ELEMS = 64  # <= this many elements: per-channel circuit scalars
 
 
@@ -169,21 +169,43 @@ def build_context(pl: Any, *, grid_cap: int = 64) -> AnalysisContext:
                     modmath.validate_lazy_envelope(q, int(ct.lazy_window), int(beta))
             except ValueError as e:
                 bad(f"lazy envelope invalid: {e}")
+        # Scalar-per-direction tables, then the per-level hierarchical
+        # sub-row tables (tuple-valued attrs, one entry per sub level).
+        named: List[Tuple[str, Any, Any, Any, Any]] = []
         for name in ("fwd", "inv", "fs_row_fwd", "fs_row_inv"):
-            w = getattr(ct, name, None)
-            if w is None:
+            named.append((
+                name,
+                getattr(ct, name, None),
+                getattr(ct, name + "_d", None),
+                getattr(ct, name + "_shoup", None),
+                getattr(ct, name + "_shoup_d", None),
+            ))
+        for name in ("fs_sub_fwd", "fs_sub_inv"):
+            tabs = getattr(ct, name, None) or ()
+            devs = getattr(ct, name + "_d", None) or ()
+            shs = getattr(ct, name + "_shoup", None) or ()
+            shds = getattr(ct, name + "_shoup_d", None) or ()
+            for lvl in range(len(tabs)):
+                named.append((
+                    f"{name}[{lvl}]",
+                    tabs[lvl],
+                    devs[lvl] if lvl < len(devs) else None,
+                    shs[lvl] if lvl < len(shs) else None,
+                    shds[lvl] if lvl < len(shds) else None,
+                ))
+        for name, host, dev, sh, sh_dev in named:
+            if host is None:
                 continue
-            w = np.asarray(w)
+            w = np.asarray(host)
             qb = qs_arr.reshape((len(qs),) + (1,) * (w.ndim - 1))
             if not bool(np.all((w >= 0) & (w < qb))):
                 bad(f"twiddle table '{name}' has non-canonical entries")
                 continue
-            sh = getattr(ct, name + "_shoup", None)
             twid = _tagged(
                 w, ("twiddle", name), qctx,
                 (Fraction(1), Fraction(-1)), (Fraction(0), Fraction(0)),
             )
-            for obj in (getattr(ct, name), getattr(ct, name + "_d", None)):
+            for obj in (host, dev):
                 registry.add(obj, twid)
             if sh is not None and beta is not None:
                 sh_np = np.asarray(sh)
@@ -192,7 +214,7 @@ def build_context(pl: Any, *, grid_cap: int = 64) -> AnalysisContext:
                     bad(f"Shoup table '{name}_shoup' != (w << beta) // q")
                     continue
                 proto = _tagged(sh_np, ("shoup", name), qctx)
-                for obj in (sh, getattr(ct, name + "_shoup_d", None)):
+                for obj in (sh, sh_dev):
                     registry.add(obj, proto)
 
         # strict-mode / pointwise Barrett family ------------------------
@@ -422,12 +444,13 @@ def lane_vmem_lint(closed: Any, pl: Any, ctx: AnalysisContext, where: str) -> Li
       16 MiB budget the big-n tiling work must fit in.
     """
     report: List[Dict[str, Any]] = []
-    if pl.config.width == "int64" and pl.config.schedule == "four_step":
+    sched = pl.config.schedule
+    if pl.config.width == "int64" and getattr(sched, "kind", sched) == "four_step":
         from repro.kernels import ops as ops_mod
 
         for direction in ("fwd", "inv"):
             cost = ops_mod.transform_cost_model(
-                pl.params, schedule="four_step", direction=direction
+                pl.params, schedule=sched, direction=direction
             )
             if cost.get("sublane_stages", 0) != 0:
                 ctx.finding(

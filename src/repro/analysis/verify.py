@@ -62,6 +62,12 @@ PRESETS: Tuple[Preset, ...] = (
     Preset("n64_t2_v30_e2e_radix2", 64, 2, 30, "pallas_fused_e2e", "radix2"),
     Preset("n256_t2_v30_e2e_four_step", 256, 2, 30, "pallas_fused_e2e", "four_step"),
     Preset("n64_t2_v40_wide", 64, 2, 40, "auto", "radix2"),
+    # Big-n hierarchical four-step (DESIGN §10): the n=4096 single-level
+    # tile and the n=8192 depth-2 chain, traced through the channel-tiled
+    # fused-e2e kernel (interpret-mode off TPU; the static sweep is the
+    # gate — no overflow, envelope == bookkeeping, sublane_stages == 0).
+    Preset("n4096_t2_v30_e2e_four_step", 4096, 2, 30, "pallas_fused_e2e", "four_step"),
+    Preset("n8192_t2_v30_e2e_hier", 8192, 2, 30, "pallas_fused_e2e", "four_step:h"),
 )
 
 
@@ -208,9 +214,11 @@ def verify_plan(pl: Any, *, grid_cap: int = 64) -> VerifyReport:
         }
         findings.extend(ctx.findings)
     _selects_crosscheck(pl, findings, stats)
+    sched = cfg.schedule
     desc = {
         "n": cfg.n, "t": cfg.t, "v": cfg.v, "width": cfg.width,
-        "backend": cfg.backend, "schedule": cfg.schedule,
+        "backend": cfg.backend, "schedule": str(sched),
+        "schedule_depth": getattr(sched, "depth", 0),
         "lazy_window": None if ct is None else ct.lazy_window,
         "shoup_beta": None if ct is None else ct.shoup_beta,
     }

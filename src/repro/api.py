@@ -74,15 +74,17 @@ import numpy as np
 from repro.core import bigint
 from repro.core import ntt as ntt_mod
 from repro.core import polymul as polymul_mod
+from repro.core import schedule as schedule_mod
 from repro.core import wide as wide_mod
 from repro.core.params import (
     BACKENDS,
     SCHEDULES,
     ParenttParams,
     make_params,
-    resolve_schedule_for,
     validate_backend,
 )
+from repro.core.schedule import ScheduleSpec
+from repro.errors import PlanError, UnknownKnobError, UnservableConfigError
 from repro.kernels import ops as ops_mod
 
 __all__ = [
@@ -91,6 +93,10 @@ __all__ = [
     "WIDTHS",
     "Plan",
     "PlanConfig",
+    "PlanError",
+    "ScheduleSpec",
+    "UnknownKnobError",
+    "UnservableConfigError",
     "plan",
     "plan_from_params",
     "plan_key",
@@ -137,14 +143,18 @@ def width_for(v: int) -> str:
 class PlanConfig:
     """Frozen, fully-resolved execution config — the static aux data of a
     :class:`Plan`.  No ``"auto"`` survives into a PlanConfig: ``backend``
-    and ``schedule`` are concrete, so executing never re-resolves."""
+    is a concrete string and ``schedule`` a fully-resolved (hashable)
+    :class:`repro.core.schedule.ScheduleSpec` — kind, hierarchical tile
+    chain, row block and VMEM accounting are all frozen here, so jit
+    keys, :func:`plan_key` buckets and verifier presets see one
+    canonical form and executing never re-resolves."""
 
     n: int
     t: int
     v: int
     width: str  # "int64" | "wide" | "oracle"
     backend: str  # BACKENDS entry, or "oracle" for the oracle width
-    schedule: str  # concrete: "radix2" | "four_step"
+    schedule: ScheduleSpec  # concrete spec (kind + splits + row_blk)
     row_blk: int | None
     use_sau: bool
     # derived I/O format (duplicated from the RnsPlan for self-description)
@@ -241,6 +251,12 @@ _CT_LEAF_STEMS = (
     "qs", "fwd", "inv", "half", "mul_eps", "fs_row_fwd", "fs_row_inv",
     "fwd_shoup", "inv_shoup", "fs_row_fwd_shoup", "fs_row_inv_shoup",
 )
+# Tuple-valued stems (one device array per hierarchical sub level); each
+# level flattens to its own leaf "ntt_<stem><level>" so the pytree stays
+# array-leaved and shard_map/device_put treat every level independently.
+_CT_TUPLE_STEMS = (
+    "fs_sub_fwd", "fs_sub_inv", "fs_sub_fwd_shoup", "fs_sub_inv_shoup",
+)
 _RNS_LEAF_STEMS = ("qs", "beta_pows", "qi_tilde", "qi_star_limbs", "q_limbs")
 
 
@@ -264,6 +280,12 @@ def _bound_params(pl: Plan) -> Any:
         leaf = c.get("ntt_" + stem)
         if leaf is not None:
             ct_over[stem + "_d"] = leaf
+    for stem in _CT_TUPLE_STEMS:
+        levels = []
+        while (leaf := c.get(f"ntt_{stem}{len(levels)}")) is not None:
+            levels.append(leaf)
+        if levels:
+            ct_over[stem + "_d"] = tuple(levels)
     rns_over = {"t": t_local}
     for stem in _RNS_LEAF_STEMS:
         rns_over[stem + "_d"] = c["rns_" + stem]
@@ -292,13 +314,15 @@ def _int64_consts(params: ParenttParams) -> dict[str, Any]:
     uploaded at construction — building a Plan never re-uploads."""
     ct, rp = params.tables, params.plan
     out = {}
-    for name in (
-        "qs", "fwd", "inv", "half", "mul_eps", "fs_row_fwd", "fs_row_inv",
-        "fwd_shoup", "inv_shoup", "fs_row_fwd_shoup", "fs_row_inv_shoup",
-    ):
+    for name in _CT_LEAF_STEMS:
         dev = getattr(ct, name + "_d")
         if dev is not None:
             out["ntt_" + name] = dev
+    for name in _CT_TUPLE_STEMS:
+        dev = getattr(ct, name + "_d")
+        if dev is not None:
+            for lvl, arr in enumerate(dev):
+                out[f"ntt_{name}{lvl}"] = arr
     out["rns_qs"] = rp.qs_d
     out["rns_beta_pows"] = rp.beta_pows_d
     out["rns_qi_tilde"] = rp.qi_tilde_d
@@ -352,15 +376,18 @@ def _resolve_backend(width: str, backend: str) -> str:
         return validate_backend(backend)
     if width == "wide":
         if backend != "jnp":
-            raise ValueError(
+            raise UnservableConfigError(
                 f"the wide (v in (31, 46]) datapath is pure-jnp: "
-                f"backend={backend!r} is not available (use 'auto' or 'jnp')"
+                f"backend={backend!r} is not available (use 'auto' or 'jnp')",
+                knob="backend", value=backend, alternatives=("auto", "jnp"),
             )
         return backend
     if backend != ORACLE_BACKEND:
-        raise ValueError(
+        raise UnservableConfigError(
             f"v > 46 is served by the host bigint oracle only: "
-            f"backend={backend!r} is not available (use 'auto' or 'oracle')"
+            f"backend={backend!r} is not available (use 'auto' or 'oracle')",
+            knob="backend", value=backend,
+            alternatives=("auto", ORACLE_BACKEND),
         )
     return backend
 
@@ -370,23 +397,57 @@ def _check_wide_envelope(width: str, t: int, v: int) -> None:
     limb(<2^POST_W) contributions must stay inside int64 — reject at
     plan time, never corrupt at execution time."""
     if width == "wide" and t * (1 << (v + wide_mod.POST_W)) > (1 << 63):
-        raise ValueError(
+        raise UnservableConfigError(
             f"t={t} channels of v={v}-bit moduli overflow the wide "
             f"datapath's int64 inverse-CRT accumulator (need "
             f"t * 2^(v+{wide_mod.POST_W}) <= 2^63); use fewer/narrower "
-            f"channels"
+            f"channels",
+            knob="t", value=t, alternatives=(),
         )
 
 
-def _resolve_schedule(width: str, n: int, schedule: str) -> str:
-    if width == "int64":
-        return resolve_schedule_for(n, schedule)  # raises for bad combos
-    if schedule not in ("auto", "radix2"):
-        raise ValueError(
-            f"the {width} datapath serves schedule='radix2' only, "
-            f"got {schedule!r}"
-        )
-    return "radix2"
+def _resolve_spec(
+    width: str,
+    n: int,
+    schedule,
+    *,
+    tiling=None,
+    row_blk: int | None = None,
+    params: ParenttParams | None = None,
+) -> ScheduleSpec:
+    """Resolve the schedule knobs into a concrete :class:`ScheduleSpec`.
+
+    Called twice by :func:`plan`: once with ``params=None`` as the cheap
+    pre-params pass (vocabulary + hierarchical-chain servability, so bad
+    combos fail before the prime search), and once after ``make_params``
+    for the full VMEM-budget row-block resolution (which needs S, L and
+    the lazy-reduction flag off the built tables).  The wide and oracle
+    widths have no kernel schedule — they serve radix2 with no tile
+    accounting (``row_blk=0``)."""
+    if width != "int64":
+        kind = getattr(schedule, "kind", schedule)
+        if kind not in ("auto", "radix2"):
+            raise UnservableConfigError(
+                f"the {width} datapath serves schedule='radix2' only, "
+                f"got {schedule!r}",
+                knob="schedule", value=schedule,
+                alternatives=("auto", "radix2"),
+            )
+        if tiling is not None:
+            raise UnservableConfigError(
+                f"tiling= is a kernel-schedule hint; the {width} datapath "
+                f"has no Pallas tile schedule",
+                knob="tiling", value=tiling, alternatives=(),
+            )
+        return ScheduleSpec(kind="radix2")
+    if params is None:
+        return schedule_mod.concrete_spec(n, schedule)
+    ct = params.tables
+    return schedule_mod.resolve_spec(
+        n, schedule, tiling=tiling, row_blk=row_blk,
+        seg_count=params.plan.seg_count, limb_count=params.plan.L,
+        lazy=ct is not None and ct.lazy_window is not None,
+    )
 
 
 def plan(
@@ -395,7 +456,8 @@ def plan(
     v: int = 30,
     *,
     backend: str = "auto",
-    schedule: str = "auto",
+    schedule="auto",
+    tiling=None,
     row_blk: int | None = None,
     use_sau: bool = True,
 ) -> Plan:
@@ -405,31 +467,53 @@ def plan(
 
     ``backend="auto"`` picks the fused single-kernel Pallas path on TPU
     and the pure-jnp reference elsewhere (for v <= 31); the wide and
-    oracle widths have exactly one datapath each.  ``schedule="auto"``
-    picks the lane-aligned four-step schedule for n >= 256.  Invalid
-    combinations (unknown backend, four_step on an unservable n, a
-    Pallas backend on the wide width, v outside [8, 60], ...) raise
-    ``ValueError`` here, at plan time — never mid-execution.
+    oracle widths have exactly one datapath each.  ``schedule`` accepts
+    ``"auto"`` (lane-aligned four-step for n >= 256), ``"radix2"``,
+    ``"four_step"``, ``"four_step:h"`` (asserts the hierarchical
+    depth >= 2 chain, available from n = 8192) or an explicit
+    :class:`ScheduleSpec`; whichever is given, the config freezes one
+    fully-resolved spec — tile chain, row block and VMEM accounting
+    included.  ``tiling`` is an optional hint: an int is a row-block
+    request, a tuple of per-level ``(columns, rows)`` pairs asserts the
+    expected tile chain.  Invalid knobs raise
+    :class:`repro.errors.UnknownKnobError` and structurally valid but
+    unservable combinations (four_step on a tiny n, a Pallas backend on
+    the wide width, a row block that overflows VMEM, ...) raise
+    :class:`repro.errors.UnservableConfigError` — both ``ValueError``
+    subclasses, both at plan time, never mid-execution.
     """
     if not isinstance(n, int) or n < 4 or n & (n - 1):
-        raise ValueError(f"n must be a power of two >= 4, got n={n!r}")
+        raise UnknownKnobError(
+            f"n must be a power of two >= 4, got n={n!r}",
+            knob="n", value=n, alternatives=(),
+        )
     if not isinstance(t, int) or t < 1:
-        raise ValueError(f"t must be a positive int, got t={t!r}")
+        raise UnknownKnobError(
+            f"t must be a positive int, got t={t!r}",
+            knob="t", value=t, alternatives=(),
+        )
     if not isinstance(v, int) or not (_V_MIN <= v <= _V_MAX):
-        raise ValueError(
+        raise UnknownKnobError(
             f"v must be an int in [{_V_MIN}, {_V_MAX}], got v={v!r} "
-            f"(the paper's configs are v=30 and v=45)"
+            f"(the paper's configs are v=30 and v=45)",
+            knob="v", value=v, alternatives=(),
         )
     if row_blk is not None and row_blk < 1:
-        raise ValueError(f"row_blk must be >= 1, got {row_blk}")
+        raise UnknownKnobError(
+            f"row_blk must be >= 1, got {row_blk}",
+            knob="row_blk", value=row_blk, alternatives=(1, 2, 4, 8),
+        )
     width = width_for(v)
     # resolve the cheap knobs BEFORE the prime search so bad combos fail fast
     backend = _resolve_backend(width, backend)
-    schedule = _resolve_schedule(width, n, schedule)
+    _resolve_spec(width, n, schedule, tiling=tiling)
     _check_wide_envelope(width, t, v)
     params = make_params(n=n, t=t, v=v, row_blk=row_blk)
+    spec = _resolve_spec(
+        width, n, schedule, tiling=tiling, row_blk=row_blk, params=params
+    )
     cfg = PlanConfig(
-        n=n, t=t, v=v, width=width, backend=backend, schedule=schedule,
+        n=n, t=t, v=v, width=width, backend=backend, schedule=spec,
         row_blk=row_blk, use_sau=use_sau,
         seg_count=params.plan.seg_count, w=params.plan.w, L=params.plan.L,
     )
@@ -450,11 +534,14 @@ def plan_from_params(
         backend = ops_mod.resolve_backend(params, backend)
     else:
         backend = _resolve_backend(width, backend or "auto")
-    schedule = _resolve_schedule(width, params.n, params.schedule)
+    spec = _resolve_spec(
+        width, params.n, params.schedule, row_blk=params.row_blk,
+        params=params,
+    )
     _check_wide_envelope(width, params.t, params.v)
     cfg = PlanConfig(
         n=params.n, t=params.t, v=params.v, width=width, backend=backend,
-        schedule=schedule, row_blk=params.row_blk, use_sau=use_sau,
+        schedule=spec, row_blk=params.row_blk, use_sau=use_sau,
         seg_count=params.plan.seg_count, w=params.plan.w, L=params.plan.L,
     )
     return Plan(config=cfg, params=params, consts=_consts_for(params, width))

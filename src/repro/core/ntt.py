@@ -93,6 +93,35 @@ def four_step_split(n: int) -> tuple[int, int]:
     return n // n2, n2
 
 
+# Column lengths above this recurse into a further four-step split (the
+# hierarchical schedule): at n = 2^13 the level-0 column length n1 = n/128
+# crosses the 8-sublane vreg height and a (n1, 128) tile stops being a
+# single-tile transpose, so the column transforms themselves re-split with
+# the sublane factor 8 until the remaining column fits.
+MAX_FS_COL = 32
+SUB_ROW_FACTOR = 8  # TPU sublane height: deeper-level row length
+
+
+def four_step_chain(n: int) -> tuple[tuple[int, int], ...]:
+    """The canonical hierarchical split chain for a transform length n:
+    per-level ``(columns, rows)`` factors, outermost first.
+
+    Level 0 is :func:`four_step_split` (rows = the 128-lane factor);
+    while the remaining column length exceeds ``MAX_FS_COL`` it re-splits
+    with ``SUB_ROW_FACTOR`` rows.  Level ``l``'s columns are level
+    ``l+1``'s transform length, so ``chain[l][0] == prod(chain[l+1:])``
+    holds by construction.  Examples: n=4096 -> ((32, 128),); n=8192 ->
+    ((64, 128), (8, 8)); n=65536 -> ((512, 128), (64, 8), (8, 8)).
+    """
+    n1, n2 = four_step_split(n)
+    chain = [(n1, n2)]
+    c = n1
+    while c > MAX_FS_COL:
+        c //= SUB_ROW_FACTOR
+        chain.append((c, SUB_ROW_FACTOR))
+    return tuple(chain)
+
+
 def four_step_row_indices(n1: int, n2: int) -> np.ndarray:
     """(n2, n1) gather into a length-n stage table: the row-stage twiddle
     for transposed-tile entry (m', j) — m' = 2^k + l the DIT block index
@@ -109,18 +138,21 @@ def four_step_row_indices(n1: int, n2: int) -> np.ndarray:
     return idx
 
 
-def stage_lane_strides(n: int, schedule: str) -> tuple[int, ...]:
+def stage_lane_strides(n: int, schedule) -> tuple[int, ...]:
     """Butterfly pair distance along the LANE (last tile) axis per stage
     of one transform — the structural definition the cost model's
     ``sublane_stages`` count is computed from.  radix2 pairs in the flat
-    coefficient axis at strides n/2 .. 1; four_step pairs only along the
-    sublane axis of its (n1, n2) / transposed (n2, n1) tiles, so its
-    lane-axis distance is 0 at every stage."""
+    coefficient axis at strides n/2 .. 1; four_step pairs only along
+    sublane-side axes of its tiles (at any hierarchy depth — deeper
+    levels pair along reshaped sublane factors), so its lane-axis
+    distance is 0 at every stage.  ``schedule`` may be a concrete string
+    or a resolved :class:`repro.core.schedule.ScheduleSpec`."""
     stages = n.bit_length() - 1
-    if schedule == "four_step":
+    kind = getattr(schedule, "kind", schedule)
+    if kind == "four_step":
         four_step_split(n)  # validate n
         return (0,) * stages
-    if schedule != "radix2":
+    if kind != "radix2":
         raise ValueError(f"unknown concrete schedule {schedule!r}")
     return tuple(n >> (s + 1) for s in range(stages))
 
@@ -201,29 +233,107 @@ def intt_raw(a: jax.Array, inv: jax.Array, q, half, eps=None, shifts=None) -> ja
     return a
 
 
-def ntt_raw_four_step(a, fwd, row_fwd, q, eps=None, shifts=None) -> jax.Array:
-    """Forward NWC NTT via the lane-aligned four-step schedule —
-    bit-identical to :func:`ntt_raw` (same flow graph, re-grouped).
+def _hier_cols_fwd(x, fwd, sub_tabs, q, eps, shifts):
+    """Length-c forward NWC NTT along axis -2 of a ``lead + (c, B)`` tile.
 
-    fwd: (n,) radix-2 table (columns use the [:n1] prefix); row_fwd:
-    (n2, n1) twist-merged row tables (``fwd[four_step_row_indices(...)]``).
-    Column stages pair along the n1 (sublane) axis; rows pair along the
-    former n2 axis after the tile transpose — never along lanes."""
+    ``sub_tabs`` is the tuple of twist-merged row tables for the remaining
+    sub-splits of c (outermost first, each ``(sr, sc)``).  Empty tuple ->
+    plain radix-2 column stages (twiddles = the ``fwd[:c]`` prefix).
+    Non-empty -> recurse: view c = sc * sr, run the length-sc sub-column
+    transform with sr folded into the batch axis (a pure reshape — only
+    level 0 of the whole transform ever needs a physical transpose), then
+    the length-sr sub-row stages with per-sub-column twist tables."""
+    c, B = x.shape[-2], x.shape[-1]
+    lead = x.shape[:-2]
+    if not sub_tabs:
+        m, tc = 1, c
+        while m < c:
+            tc //= 2
+            w = fwd[m : 2 * m]
+            y = x.reshape(lead + (m, 2, tc, B))
+            u = y[..., 0, :, :]
+            v = mul_mod(y[..., 1, :, :], w[:, None, None], q, eps, shifts)
+            x = jnp.stack([add_mod(u, v, q), sub_mod(u, v, q)], axis=-3)
+            x = x.reshape(lead + (c, B))
+            m *= 2
+        return x
+    rtab = sub_tabs[0]  # (sr, sc)
+    sr, sc = rtab.shape
+    # sub-columns: length-sc transform with sr collapsed into the batch
+    x = x.reshape(lead + (sc, sr * B))
+    x = _hier_cols_fwd(x, fwd, sub_tabs[1:], q, eps, shifts)
+    x = x.reshape(lead + (sc, sr, B))
+    # sub-rows: pair along the sr axis; twist tables indexed per sub-column
+    m, tr = 1, sr
+    while m < sr:
+        tr //= 2
+        w = jnp.swapaxes(rtab[m : 2 * m], 0, 1)[:, :, None, None]  # (sc,m,1,1)
+        y = x.reshape(lead + (sc, m, 2, tr, B))
+        u = y[..., 0, :, :]
+        v = mul_mod(y[..., 1, :, :], w, q, eps, shifts)
+        x = jnp.stack([add_mod(u, v, q), sub_mod(u, v, q)], axis=-3)
+        x = x.reshape(lead + (sc, sr, B))
+        m *= 2
+    return x.reshape(lead + (c, B))
+
+
+def _hier_cols_inv(x, inv, sub_tabs, q, half, eps, shifts):
+    """Inverse mirror of :func:`_hier_cols_fwd`: sub-row GS stages first,
+    then the sub-column recursion, retracing the forward flow in reverse
+    stage order (per-stage halving folds in the length factor)."""
+    c, B = x.shape[-2], x.shape[-1]
+    lead = x.shape[:-2]
+    if not sub_tabs:
+        h, tc = c // 2, 1
+        while h >= 1:
+            w = inv[h : 2 * h]
+            y = x.reshape(lead + (h, 2, tc, B))
+            u, v = y[..., 0, :, :], y[..., 1, :, :]
+            s = add_mod(u, v, q)
+            d = mul_mod(sub_mod(u, v, q), w[:, None, None], q, eps, shifts)
+            x = jnp.stack([div2_mod(s, half), div2_mod(d, half)], axis=-3)
+            x = x.reshape(lead + (c, B))
+            h //= 2
+            tc *= 2
+        return x
+    rtab = sub_tabs[0]  # (sr, sc)
+    sr, sc = rtab.shape
+    x = x.reshape(lead + (sc, sr, B))
+    h, tr = sr // 2, 1
+    while h >= 1:
+        w = jnp.swapaxes(rtab[h : 2 * h], 0, 1)[:, :, None, None]  # (sc,h,1,1)
+        y = x.reshape(lead + (sc, h, 2, tr, B))
+        u, v = y[..., 0, :, :], y[..., 1, :, :]
+        s = add_mod(u, v, q)
+        d = mul_mod(sub_mod(u, v, q), w, q, eps, shifts)
+        x = jnp.stack([div2_mod(s, half), div2_mod(d, half)], axis=-3)
+        x = x.reshape(lead + (sc, sr, B))
+        h //= 2
+        tr *= 2
+    x = x.reshape(lead + (sc, sr * B))
+    x = _hier_cols_inv(x, inv, sub_tabs[1:], q, half, eps, shifts)
+    return x.reshape(lead + (c, B))
+
+
+def ntt_raw_hier(a, fwd, row_tabs, q, eps=None, shifts=None) -> jax.Array:
+    """Forward NWC NTT via the (possibly hierarchical) four-step schedule
+    — bit-identical to :func:`ntt_raw` at any depth (same flow graph,
+    re-grouped).
+
+    ``row_tabs`` is the per-level tuple of twist-merged row tables,
+    outermost first: ``row_tabs[0]`` is the (n2, n1) level-0 table
+    (``fwd[four_step_row_indices(n1, n2)]``); ``row_tabs[1:]`` are the
+    (r_l, c_l) sub-level tables the column recursion consumes.  Column
+    stages pair along sublane-side axes at every depth; level-0 rows pair
+    along the former n2 axis after the one tile transpose — no butterfly
+    ever pairs along the lane axis."""
     n = a.shape[-1]
-    n2, n1 = row_fwd.shape
+    n2, n1 = row_tabs[0].shape
     lead = a.shape[:-1]
     x = a.reshape(lead + (n1, n2))
-    m, tc = 1, n1
-    while m < n1:
-        tc //= 2
-        w = fwd[m : 2 * m]
-        y = x.reshape(lead + (m, 2, tc, n2))
-        u = y[..., 0, :, :]
-        v = mul_mod(y[..., 1, :, :], w[:, None, None], q, eps, shifts)
-        x = jnp.stack([add_mod(u, v, q), sub_mod(u, v, q)], axis=-3)
-        x = x.reshape(lead + (n1, n2))
-        m *= 2
+    x = _hier_cols_fwd(x, fwd, tuple(row_tabs[1:]), q, eps, shifts)
     xt = jnp.swapaxes(x, -1, -2)  # (n2, n1): row stages pair on sublanes
+    row_fwd = row_tabs[0]
     m, tr = 1, n2
     while m < n2:
         tr //= 2
@@ -237,14 +347,16 @@ def ntt_raw_four_step(a, fwd, row_fwd, q, eps=None, shifts=None) -> jax.Array:
     return jnp.swapaxes(xt, -1, -2).reshape(lead + (n,))
 
 
-def intt_raw_four_step(a, inv, row_inv, q, half, eps=None, shifts=None) -> jax.Array:
-    """Inverse mirror of :func:`ntt_raw_four_step` — bit-identical to
-    :func:`intt_raw`.  Row stages (transposed tile) first, then column
-    stages, retracing the forward flow in reverse stage order."""
+def intt_raw_hier(a, inv, row_tabs, q, half, eps=None, shifts=None) -> jax.Array:
+    """Inverse mirror of :func:`ntt_raw_hier` — bit-identical to
+    :func:`intt_raw` at any depth.  Level-0 row stages (transposed tile)
+    first, then the hierarchical column inverse, retracing the forward
+    flow in reverse stage order."""
     n = a.shape[-1]
-    n2, n1 = row_inv.shape
+    n2, n1 = row_tabs[0].shape
     lead = a.shape[:-1]
     xt = jnp.swapaxes(a.reshape(lead + (n1, n2)), -1, -2)  # (n2, n1)
+    row_inv = row_tabs[0]
     h, tr = n2 // 2, 1
     while h >= 1:
         wr = row_inv[h : 2 * h]  # (h, n1)
@@ -257,18 +369,19 @@ def intt_raw_four_step(a, inv, row_inv, q, half, eps=None, shifts=None) -> jax.A
         h //= 2
         tr *= 2
     x = jnp.swapaxes(xt, -1, -2)  # back to (n1, n2)
-    h, tc = n1 // 2, 1
-    while h >= 1:
-        w = inv[h : 2 * h]
-        y = x.reshape(lead + (h, 2, tc, n2))
-        u, v = y[..., 0, :, :], y[..., 1, :, :]
-        s = add_mod(u, v, q)
-        d = mul_mod(sub_mod(u, v, q), w[:, None, None], q, eps, shifts)
-        x = jnp.stack([div2_mod(s, half), div2_mod(d, half)], axis=-3)
-        x = x.reshape(lead + (n1, n2))
-        h //= 2
-        tc *= 2
+    x = _hier_cols_inv(x, inv, tuple(row_tabs[1:]), q, half, eps, shifts)
     return x.reshape(lead + (n,))
+
+
+def ntt_raw_four_step(a, fwd, row_fwd, q, eps=None, shifts=None) -> jax.Array:
+    """Depth-1 four-step forward NTT (kept as the historical entry point;
+    the general machinery is :func:`ntt_raw_hier`)."""
+    return ntt_raw_hier(a, fwd, (row_fwd,), q, eps, shifts)
+
+
+def intt_raw_four_step(a, inv, row_inv, q, half, eps=None, shifts=None) -> jax.Array:
+    """Depth-1 four-step inverse NTT (see :func:`intt_raw_hier`)."""
+    return intt_raw_hier(a, inv, (row_inv,), q, half, eps, shifts)
 
 
 def ntt(a: jax.Array, tables: NttTables) -> jax.Array:
@@ -326,12 +439,18 @@ class ChannelTables:
     # the fwd/inv [:, :n1] prefixes — no extra storage); None when n < 4
     fs_row_fwd: np.ndarray | None = None
     fs_row_inv: np.ndarray | None = None
+    # hierarchical levels >= 1 of the canonical chain: per-level
+    # (t, r_l, c_l) twist-merged sub-row tables; () when depth is 1
+    fs_sub_fwd: tuple[np.ndarray, ...] = ()
+    fs_sub_inv: tuple[np.ndarray, ...] = ()
     # Harvey lazy reduction: per-twiddle Shoup constants, same layouts as
     # their twiddle tables; None outside the 63-bit-safe lazy envelope
     fwd_shoup: np.ndarray | None = None
     inv_shoup: np.ndarray | None = None
     fs_row_fwd_shoup: np.ndarray | None = None
     fs_row_inv_shoup: np.ndarray | None = None
+    fs_sub_fwd_shoup: tuple[np.ndarray, ...] | None = None
+    fs_sub_inv_shoup: tuple[np.ndarray, ...] | None = None
     lazy_window: int | None = None  # butterfly values stay in [0, window*q)
     shoup_beta: int | None = None  # static Shoup shift
 
@@ -346,6 +465,10 @@ class ChannelTables:
     @property
     def fs_split(self) -> tuple[int, int]:
         return four_step_split(self.n)
+
+    @property
+    def fs_chain(self) -> tuple[tuple[int, int], ...]:
+        return four_step_chain(self.n)
 
     def stage_bounds(self, inverse: bool = False):
         """Per-stage (value_bound, peak) in units of q under the lazy
@@ -386,6 +509,18 @@ class ChannelTables:
             object.__setattr__(
                 self, name + "_d", None if host is None else jnp.asarray(host)
             )
+        for name in (
+            "fs_sub_fwd",
+            "fs_sub_inv",
+            "fs_sub_fwd_shoup",
+            "fs_sub_inv_shoup",
+        ):
+            host = getattr(self, name)
+            object.__setattr__(
+                self,
+                name + "_d",
+                None if host is None else tuple(jnp.asarray(h) for h in host),
+            )
 
 
 def make_channel_tables(qs, n: int) -> ChannelTables:
@@ -394,24 +529,43 @@ def make_channel_tables(qs, n: int) -> ChannelTables:
     fwd = np.stack([t.fwd for t in tabs])
     inv = np.stack([t.inv for t in tabs])
     fs_row_fwd = fs_row_inv = None
+    fs_sub_fwd: tuple[np.ndarray, ...] = ()
+    fs_sub_inv: tuple[np.ndarray, ...] = ()
     if n >= 4:
-        idx = four_step_row_indices(*four_step_split(n))
+        chain = four_step_chain(n)
+        idx = four_step_row_indices(*chain[0])
         fs_row_fwd = fwd[:, idx]  # (t, n2, n1)
         fs_row_inv = inv[:, idx]
+        # deeper levels: the level-l split factors a level-(l-1) COLUMN,
+        # whose twiddles are the fwd[:c_{l-1}] prefix — so the sub-row
+        # gather indexes straight into the full stage table as well
+        # (all indices < c_{l-1} <= n).
+        sub_f, sub_i = [], []
+        for c_l, r_l in chain[1:]:
+            sidx = four_step_row_indices(c_l, r_l)  # (r_l, c_l)
+            sub_f.append(fwd[:, sidx])  # (t, r_l, c_l)
+            sub_i.append(inv[:, sidx])
+        fs_sub_fwd, fs_sub_inv = tuple(sub_f), tuple(sub_i)
     window, beta = modmath.lazy_params([t.q for t in tabs])
     shoups = {}
+
+    def _shoup_stack(tab):
+        return np.stack(
+            [
+                modmath.shoup_constants(tab[i], int(t.q), beta)
+                for i, t in enumerate(tabs)
+            ]
+        )
+
     if window is not None:
         for name, tab in (
             ("fwd_shoup", fwd), ("inv_shoup", inv),
             ("fs_row_fwd_shoup", fs_row_fwd), ("fs_row_inv_shoup", fs_row_inv),
         ):
             if tab is not None:
-                shoups[name] = np.stack(
-                    [
-                        modmath.shoup_constants(tab[i], int(t.q), beta)
-                        for i, t in enumerate(tabs)
-                    ]
-                )
+                shoups[name] = _shoup_stack(tab)
+        shoups["fs_sub_fwd_shoup"] = tuple(_shoup_stack(t_) for t_ in fs_sub_fwd)
+        shoups["fs_sub_inv_shoup"] = tuple(_shoup_stack(t_) for t_ in fs_sub_inv)
     return ChannelTables(
         qs=np.array([t.q for t in tabs], dtype=np.int64),
         fwd=fwd,
@@ -421,6 +575,8 @@ def make_channel_tables(qs, n: int) -> ChannelTables:
         mul_shifts=shifts,
         fs_row_fwd=fs_row_fwd,
         fs_row_inv=fs_row_inv,
+        fs_sub_fwd=fs_sub_fwd,
+        fs_sub_inv=fs_sub_inv,
         lazy_window=window,
         shoup_beta=beta,
         **shoups,
@@ -434,28 +590,45 @@ def _eps_axes(ct: ChannelTables):
     return ct.mul_eps_d, 0
 
 
+def _hier_depth(ct: ChannelTables, schedule) -> int:
+    """Resolve the four-step hierarchy depth for a schedule string or
+    resolved spec: specs carry their depth; the plain ``"four_step"``
+    string means the full canonical chain (depth 1 below n=8192)."""
+    depth = getattr(schedule, "depth", None)
+    if depth is None:
+        depth = 1 + len(ct.fs_sub_fwd)
+    return depth
+
+
 def ntt_channels(
-    a: jax.Array, ct: ChannelTables, schedule: str = "radix2"
+    a: jax.Array, ct: ChannelTables, schedule="radix2"
 ) -> jax.Array:
-    """a: (t, ..., n) -> (t, ..., n), channel c transformed mod qs[c]."""
+    """a: (t, ..., n) -> (t, ..., n), channel c transformed mod qs[c].
+
+    ``schedule``: concrete string (``"radix2"``/``"four_step"``) or a
+    resolved :class:`repro.core.schedule.ScheduleSpec`."""
     eps, ax = _eps_axes(ct)
-    if schedule == "four_step":
-        fn = functools.partial(ntt_raw_four_step, shifts=ct.mul_shifts)
+    if getattr(schedule, "kind", schedule) == "four_step":
+        depth = _hier_depth(ct, schedule)
+        tabs = (ct.fs_row_fwd_d,) + tuple(ct.fs_sub_fwd_d[: depth - 1])
+        fn = functools.partial(ntt_raw_hier, shifts=ct.mul_shifts)
         return jax.vmap(fn, in_axes=(0, 0, 0, 0, ax))(
-            a, ct.fwd_d, ct.fs_row_fwd_d, ct.qs_d, eps
+            a, ct.fwd_d, tabs, ct.qs_d, eps
         )
     fn = functools.partial(ntt_raw, shifts=ct.mul_shifts)
     return jax.vmap(fn, in_axes=(0, 0, 0, ax))(a, ct.fwd_d, ct.qs_d, eps)
 
 
 def intt_channels(
-    a: jax.Array, ct: ChannelTables, schedule: str = "radix2"
+    a: jax.Array, ct: ChannelTables, schedule="radix2"
 ) -> jax.Array:
     eps, ax = _eps_axes(ct)
-    if schedule == "four_step":
-        fn = functools.partial(intt_raw_four_step, shifts=ct.mul_shifts)
+    if getattr(schedule, "kind", schedule) == "four_step":
+        depth = _hier_depth(ct, schedule)
+        tabs = (ct.fs_row_inv_d,) + tuple(ct.fs_sub_inv_d[: depth - 1])
+        fn = functools.partial(intt_raw_hier, shifts=ct.mul_shifts)
         return jax.vmap(fn, in_axes=(0, 0, 0, 0, 0, ax))(
-            a, ct.inv_d, ct.fs_row_inv_d, ct.qs_d, ct.half_d, eps
+            a, ct.inv_d, tabs, ct.qs_d, ct.half_d, eps
         )
     fn = functools.partial(intt_raw, shifts=ct.mul_shifts)
     return jax.vmap(fn, in_axes=(0, 0, 0, 0, ax))(
@@ -464,7 +637,7 @@ def intt_channels(
 
 
 def negacyclic_mul_channels(
-    a, b, ct: ChannelTables, schedule: str = "radix2"
+    a, b, ct: ChannelTables, schedule="radix2"
 ) -> jax.Array:
     """(t, ..., n) x (t, ..., n) — the full RNS-parallel no-shuffle cascade."""
     bshape = (ct.t,) + (1,) * (a.ndim - 1)

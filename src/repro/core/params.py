@@ -13,6 +13,7 @@ import functools
 from repro.core import ntt as ntt_mod
 from repro.core import primes as primes_mod
 from repro.core import rns as rns_mod
+from repro.errors import UnknownKnobError
 
 
 # Datapath selection for the whole stack (see repro.kernels.ops, which
@@ -23,35 +24,36 @@ from repro.core import rns as rns_mod
 # HBM).
 BACKENDS = ("jnp", "pallas", "pallas_fused", "pallas_fused_e2e")
 
-# NTT stage schedule (see repro.core.ntt / DESIGN.md §6): "radix2" is the
-# flat loop (late forward stages pair at lane stride < 128), "four_step"
-# the lane-aligned (n1, n2) tile schedule (no butterfly stage pairs along
-# the lane axis), "auto" picks four_step when n >= 256 (where the tile
-# reaches the full 128-lane width) and radix2 below.
-SCHEDULES = ("auto", "radix2", "four_step")
+# NTT stage schedule (see repro.core.ntt / DESIGN.md §6 & §10): "radix2"
+# is the flat loop (late forward stages pair at lane stride < 128),
+# "four_step" the lane-aligned (n1, n2) tile schedule (no butterfly stage
+# pairs along the lane axis; recurses into the hierarchical chain at
+# n >= 8192), "four_step:h" asserts the hierarchical (depth >= 2) form,
+# "auto" picks four_step when n >= 256 (where the tile reaches the full
+# 128-lane width) and radix2 below.  plan() resolves any of these into a
+# concrete repro.core.schedule.ScheduleSpec.
+SCHEDULES = ("auto", "radix2", "four_step", "four_step:h")
 
 
 def validate_backend(backend: str) -> str:
     if backend not in BACKENDS:
-        raise ValueError(f"unknown backend {backend!r}: expected one of {BACKENDS}")
+        raise UnknownKnobError(
+            f"unknown backend {backend!r}: expected one of {BACKENDS}",
+            knob="backend",
+            value=backend,
+            alternatives=BACKENDS,
+        )
     return backend
 
 
 def validate_schedule(schedule: str) -> str:
     if schedule not in SCHEDULES:
-        raise ValueError(
-            f"unknown schedule {schedule!r}: expected one of {SCHEDULES}"
+        raise UnknownKnobError(
+            f"unknown schedule {schedule!r}: expected one of {SCHEDULES}",
+            knob="schedule",
+            value=schedule,
+            alternatives=SCHEDULES,
         )
-    return schedule
-
-
-def resolve_schedule_for(n: int, schedule: str) -> str:
-    """'auto' -> the concrete schedule for a transform length n."""
-    validate_schedule(schedule)
-    if schedule == "auto":
-        return "four_step" if n >= 256 else "radix2"
-    if schedule == "four_step":
-        ntt_mod.four_step_split(n)  # raises for n the tile cannot serve
     return schedule
 
 

@@ -1,29 +1,27 @@
-"""Ground-truth oracles for the PaReNTT multiplier (paper Fig 10), plus
-the deprecated :class:`ParenttMultiplier` class front door.
+"""Ground-truth oracles for the PaReNTT multiplier (paper Fig 10).
 
 Oracles:
   * ``schoolbook_negacyclic`` — O(n^2) Python-bigint negacyclic product.
+  * ``ntt_negacyclic_host``   — O(n log n) Python-bigint negacyclic
+    product via a host NTT (any channel prime with 2n | q-1), the big-n
+    reference the hierarchical-schedule bit-exactness tests run against.
   * ``oracle_multiply``       — the RNS+NTT pipeline in Python bigints
     (any v, including the t=4 / v=45 config whose products exceed
     int64).  This is also the execution path of ``width="oracle"``
     plans in :mod:`repro.api`.
 
-The end-to-end device pipeline moved behind the plan/execute API
+The end-to-end device pipeline lives behind the plan/execute API
 (:func:`repro.api.plan` / :func:`repro.api.polymul`), which dispatches
-on modulus width internally; :class:`ParenttMultiplier` remains as a
-thin delegating shim so existing snippets keep running.
+on modulus width internally.
 """
 from __future__ import annotations
 
 import functools
-import warnings
 
-import jax
 import numpy as np
 
-from repro.core import bigint, rns as rns_mod
+from repro.core import bigint, primes as primes_mod, rns as rns_mod
 from repro.core.params import ParenttParams
-from repro.kernels import ops as ops_mod
 
 # --------------------------------------------------------------------------
 # Oracles (host, exact)
@@ -47,13 +45,82 @@ def schoolbook_negacyclic(a: list[int], b: list[int], q: int) -> list[int]:
     return p
 
 
+def _host_fft(v: list[int], q: int, root: int) -> list[int]:
+    """In-place iterative Cooley-Tukey NTT over Python ints; ``root`` is
+    a primitive len(v)-th root of unity mod q."""
+    n = len(v)
+    j = 0
+    for i in range(1, n):
+        bit = n >> 1
+        while j & bit:
+            j ^= bit
+            bit >>= 1
+        j |= bit
+        if i < j:
+            v[i], v[j] = v[j], v[i]
+    length = 2
+    while length <= n:
+        wlen = pow(root, n // length, q)
+        half = length >> 1
+        for start in range(0, n, length):
+            wcur = 1
+            for k in range(start, start + half):
+                u = v[k]
+                t = v[k + half] * wcur % q
+                v[k] = (u + t) % q
+                v[k + half] = (u - t) % q
+                wcur = wcur * wlen % q
+        length <<= 1
+    return v
+
+
+@functools.lru_cache(maxsize=None)
+def _host_twist(q: int, n: int) -> tuple[tuple[int, ...], tuple[int, ...], int]:
+    """(psi^i, psi^-i, n^-1) mod q for the negacyclic twist, cached."""
+    psi = primes_mod.root_of_unity(q, 2 * n)
+    psi_inv = pow(psi, q - 2, q)
+    tw, itw = [1] * n, [1] * n
+    for i in range(1, n):
+        tw[i] = tw[i - 1] * psi % q
+        itw[i] = itw[i - 1] * psi_inv % q
+    return tuple(tw), tuple(itw), pow(n, q - 2, q)
+
+
+def ntt_negacyclic_host(a: list[int], b: list[int], q: int) -> list[int]:
+    """p = a*b mod (x^n + 1, q) via the twisted cyclic NTT, O(n log n)
+    Python bigints — the scalable twin of :func:`schoolbook_negacyclic`
+    (requires 2n | q-1, which every special channel prime satisfies).
+    Cross-checked against the schoolbook oracle in the test suite."""
+    n = len(a)
+    tw, itw, n_inv = _host_twist(q, n)
+    w = tw[1] * tw[1] % q  # psi^2: primitive n-th root
+    w_inv = itw[1] * itw[1] % q
+    fa = _host_fft([x % q * t % q for x, t in zip(a, tw)], q, w)
+    fb = _host_fft([x % q * t % q for x, t in zip(b, tw)], q, w)
+    fp = _host_fft([x * y % q for x, y in zip(fa, fb)], q, w_inv)
+    return [x * n_inv % q * t % q for x, t in zip(fp, itw)]
+
+
+# Below this transform length oracle_multiply keeps the schoolbook path,
+# preserving a reference with no shared structure with any NTT.
+_FAST_ORACLE_MIN_N = 512
+
+
 def oracle_multiply(a: list[int], b: list[int], params: ParenttParams) -> list[int]:
-    """RNS+NTT pipeline in Python bigints (reference for any v)."""
+    """RNS+NTT pipeline in Python bigints (reference for any v).  Per
+    channel, small n uses the schoolbook negacyclic product and big n
+    the host-NTT product (O(n^2) bigints are infeasible at n >= 4096 —
+    the big-n presets' bit-exactness gates run through this path)."""
     plan = params.plan
     out = [0] * params.n
     for i in range(params.t):
         qi = int(plan.qs[i])
-        pi = schoolbook_negacyclic([x % qi for x in a], [x % qi for x in b], qi)
+        ai = [x % qi for x in a]
+        bi = [x % qi for x in b]
+        if params.n >= _FAST_ORACLE_MIN_N:
+            pi = ntt_negacyclic_host(ai, bi, qi)
+        else:
+            pi = schoolbook_negacyclic(ai, bi, qi)
         star = plan.q // qi
         tilde = int(plan.qi_tilde[i])
         for j in range(params.n):
@@ -74,86 +141,3 @@ def limbs_out_to_ints(limbs, plan: rns_mod.RnsPlan) -> list[int]:
     return bigint.limbs_to_ints(limbs, plan.w)
 
 
-# --------------------------------------------------------------------------
-# jit pipeline
-# --------------------------------------------------------------------------
-
-
-class ParenttMultiplier:
-    """DEPRECATED — use ``repro.api.plan(...)`` + ``repro.api.polymul``:
-    the plan/execute API is the single front door and absorbs the
-    backend/schedule/width dispatch this class used to expose.  This
-    shim delegates every method so existing snippets keep running.
-
-    ``backend`` selects the datapath for all three steps (see
-    :mod:`repro.kernels.ops`); ``None`` defers to ``params.backend``.
-    """
-
-    def __init__(
-        self,
-        params: ParenttParams,
-        use_sau: bool = True,
-        backend: str | None = None,
-    ):
-        if params.tables is None:
-            raise ValueError(
-                f"ParenttMultiplier requires int64-safe NTT tables, but params "
-                f"(n={params.n}, t={params.t}, v={params.v}) have none: v > 31 "
-                f"means residue products overflow int64.  Use "
-                f"polymul.oracle_multiply (exact host bigints, any v) or "
-                f"repro.core.wide.WideParenttMultiplier (digit-split v=45 "
-                f"datapath) instead — or simply repro.api.plan(...), which "
-                f"dispatches on width automatically."
-            )
-        from repro import api  # deferred: api imports this module
-
-        warnings.warn(
-            "ParenttMultiplier is deprecated; use repro.api.plan(...) + "
-            "repro.api.polymul(...) (one entry point for every modulus width)",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        self.params = params
-        self.use_sau = use_sau
-        self.backend = ops_mod.resolve_backend(params, backend)
-        self._plan = api.plan_from_params(
-            params, backend=self.backend, use_sau=use_sau
-        )
-
-    # -- step 1: pre-processing ------------------------------------------
-    def preprocess(self, z: jax.Array) -> jax.Array:
-        """z: (..., n, S) segments -> residues (t, ..., n)."""
-        from repro import api
-
-        return api.decompose(self._plan, z)
-
-    # -- step 2: evaluation in the residue domain ------------------------
-    def residue_mul(self, ra: jax.Array, rb: jax.Array) -> jax.Array:
-        """(t, ..., n) x (t, ..., n) -> (t, ..., n): parallel no-shuffle
-        NTT cascades, one per RNS channel."""
-        from repro import api
-
-        return api.negacyclic_mul(self._plan, ra, rb)
-
-    # -- step 3: post-processing ------------------------------------------
-    def postprocess(self, residues: jax.Array) -> jax.Array:
-        """(t, ..., n) -> (..., n, L) limbs of p mod q."""
-        from repro import api
-
-        return api.compose(self._plan, residues)
-
-    # -- full pipeline ----------------------------------------------------
-    @functools.partial(jax.jit, static_argnums=0)
-    def __call__(self, za: jax.Array, zb: jax.Array) -> jax.Array:
-        """za, zb: (..., n, S) segment arrays -> (..., n, L) limb array,
-        via :func:`repro.api.polymul` (one pallas_call end to end on
-        ``backend="pallas_fused_e2e"``)."""
-        from repro import api
-
-        return api.polymul(self._plan, za, zb)
-
-    # -- host convenience ---------------------------------------------------
-    def multiply_ints(self, a: list[int], b: list[int]) -> list[int]:
-        from repro import api
-
-        return api.polymul_ints(self._plan, a, b)

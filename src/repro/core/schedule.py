@@ -120,3 +120,246 @@ def simulate_cascade(n: int, bit_reversed_intt: bool = True) -> CascadeSim:
         occupancy[c] -= 1
     peak = int(np.max(np.cumsum(occupancy))) - 1  # pass-through pair not buffered
     return CascadeSim(n=n, max_buffer_pairs=max(peak, 0), added_latency=slip)
+
+
+# --------------------------------------------------------------------------
+# Resolved schedule specs (PR 7): the plan-time-frozen form of the
+# `schedule=` knob.  `plan()` accepts the string vocabulary
+# ("auto" | "radix2" | "four_step" | "four_step:h") plus an optional
+# `tiling=` hint and resolves them HERE into a concrete, hashable
+# ScheduleSpec — depth, per-level (columns, rows) splits, the e2e
+# row-block streamed per grid step, and the VMEM accounting that chose
+# it.  Jit keys, `plan_key`, verifier presets and serving bucket keys
+# all see this one canonical form; no "auto" survives planning.
+# --------------------------------------------------------------------------
+
+from repro.core.ntt import four_step_chain  # noqa: E402
+from repro.errors import UnknownKnobError, UnservableConfigError  # noqa: E402
+
+#: Per-core VMEM budget the tile model resolves row blocks against
+#: (mirrors the pallas accelerator guide; analysis.passes re-exports it).
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+#: Preferred polynomials per grid step of the channel-tiled fused-e2e
+#: kernel; halved until the tile model fits the budget.
+DEFAULT_E2E_ROW_BLK = 4
+
+SCHEDULE_STRINGS = ("auto", "radix2", "four_step", "four_step:h")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleSpec:
+    """A fully-resolved NTT schedule: the hashable value frozen into
+    ``PlanConfig.schedule``.
+
+    Attributes
+    ----------
+    kind:
+        Concrete schedule family, ``"radix2"`` or ``"four_step"`` —
+        never ``"auto"``.
+    splits:
+        Per-level ``(columns, rows)`` tile factors of the hierarchical
+        four-step chain, outermost first (``()`` for radix2).  Level 0's
+        rows is the 128-lane factor; deeper levels re-split the column
+        transform with the sublane factor.  Always the canonical
+        :func:`repro.core.ntt.four_step_chain` — depth is decided at
+        plan time from n alone, which is what keeps jit keys and
+        verifier presets static.
+    row_blk:
+        Polynomials streamed per grid step of the channel-tiled
+        fused-e2e kernel, resolved against the VMEM budget (0 when the
+        config has no Pallas datapath, e.g. the wide width).
+    vmem_budget:
+        Budget in bytes the resolution was performed against.
+    tile_bytes:
+        The tile model's footprint for one grid step at ``row_blk``
+        (0 when ``row_blk`` is 0).
+    """
+
+    kind: str
+    splits: tuple[tuple[int, int], ...] = ()
+    row_blk: int = 0
+    vmem_budget: int = VMEM_BUDGET_BYTES
+    tile_bytes: int = 0
+
+    @property
+    def depth(self) -> int:
+        return len(self.splits)
+
+    @property
+    def canonical(self) -> str:
+        """Round-trippable string form: the string vocabulary member this
+        spec is the resolution of (plus the tile chain for display)."""
+        if self.kind != "four_step":
+            return self.kind
+        if self.depth <= 1:
+            return "four_step"
+        return "four_step:h"
+
+    def __str__(self) -> str:  # compact display for logs / bench tables
+        if self.kind != "four_step":
+            return self.kind
+        tiles = "x".join(f"{c}.{r}" for c, r in self.splits)
+        return f"four_step[{tiles}]"
+
+
+def parse_schedule(schedule: str) -> tuple[str, bool]:
+    """Validate a schedule string -> ``(request, hier_required)`` where
+    request is ``"auto" | "radix2" | "four_step"``."""
+    if not isinstance(schedule, str):
+        raise UnknownKnobError(
+            f"unknown schedule {schedule!r}: expected one of "
+            f"{SCHEDULE_STRINGS} or a ScheduleSpec",
+            knob="schedule",
+            value=schedule,
+            alternatives=SCHEDULE_STRINGS,
+        )
+    if schedule == "four_step:h":
+        return "four_step", True
+    if schedule in ("auto", "radix2", "four_step"):
+        return schedule, False
+    raise UnknownKnobError(
+        f"unknown schedule {schedule!r}: expected one of {SCHEDULE_STRINGS}",
+        knob="schedule",
+        value=schedule,
+        alternatives=SCHEDULE_STRINGS,
+    )
+
+
+def concrete_spec(n: int, schedule) -> ScheduleSpec:
+    """Kernel-side normalization: a string or spec -> a ScheduleSpec with
+    the canonical splits for n (row_blk/tile accounting left at 0 — use
+    :func:`resolve_spec` for the full plan-time resolution)."""
+    if isinstance(schedule, ScheduleSpec):
+        return schedule
+    kind, hier = parse_schedule(schedule)
+    if kind == "auto":
+        kind = "four_step" if n >= 256 else "radix2"
+    if kind == "radix2":
+        if hier:  # unreachable today ("radix2:h" is not vocabulary) — guard
+            raise UnknownKnobError(
+                "radix2 has no hierarchical form",
+                knob="schedule", value=schedule, alternatives=("radix2",),
+            )
+        return ScheduleSpec(kind="radix2")
+    splits = four_step_chain(n)
+    if hier and len(splits) < 2:
+        raise UnservableConfigError(
+            f"schedule='four_step:h' requires a hierarchical chain but "
+            f"n={n} resolves to the single-level split {splits[0]} "
+            f"(hierarchy starts at n=8192)",
+            knob="schedule",
+            value="four_step:h",
+            alternatives=("four_step", "auto"),
+        )
+    return ScheduleSpec(kind="four_step", splits=splits)
+
+
+def tile_bytes_model(
+    kind: str,
+    n: int,
+    splits: tuple[tuple[int, int], ...],
+    row_blk: int,
+    seg_count: int,
+    limb_count: int,
+    lazy: bool,
+) -> int:
+    """Per-grid-step VMEM footprint of the channel-tiled fused-e2e
+    kernel (int64 elements x 8 bytes), mirroring what
+    ``analysis.passes.lane_vmem_lint`` sums over the traced kernel's ref
+    avals: one channel's twiddle tables (fwd + inv + both level-0 row
+    tables = 4n entries for four_step, 2n for radix2, plus the small
+    per-level sub-row tables; doubled again for the Shoup companions
+    when the lazy envelope holds) plus ``row_blk`` rows of the two
+    decomposed input operands (seg_count segment columns each) and the
+    output limbs."""
+    if kind == "four_step":
+        tables = 4 * n + 2 * sum(c * r for c, r in splits[1:])
+    else:
+        tables = 2 * n
+    if lazy:
+        tables *= 2
+    data = row_blk * n * (2 * seg_count + limb_count)
+    return 8 * (tables + data)
+
+
+def resolve_spec(
+    n: int,
+    schedule,
+    *,
+    tiling=None,
+    row_blk: int | None = None,
+    seg_count: int = 1,
+    limb_count: int = 1,
+    lazy: bool = True,
+    budget: int = VMEM_BUDGET_BYTES,
+) -> ScheduleSpec:
+    """Full plan-time resolution of the schedule knobs into a
+    :class:`ScheduleSpec`.
+
+    ``tiling`` is an optional hint: an int is a row-block request
+    (equivalent to ``row_blk=``); a tuple of per-level ``(columns,
+    rows)`` pairs asserts the expected tile chain and is validated
+    against the canonical one (the chain is a function of n alone — a
+    mismatching assertion is an unservable config, not a knob we honor).
+    When no row block is requested, ``DEFAULT_E2E_ROW_BLK`` is halved
+    until the tile model fits the budget; if even ``row_blk=1`` does not
+    fit, the config is unservable."""
+    spec = concrete_spec(n, schedule)
+    if tiling is not None:
+        if isinstance(tiling, int):
+            if row_blk is None:
+                row_blk = tiling
+        else:
+            tiling = tuple(tuple(map(int, lvl)) for lvl in tiling)
+            if tiling != spec.splits:
+                raise UnservableConfigError(
+                    f"tiling hint {tiling} does not match the canonical "
+                    f"chain {spec.splits} for n={n}, schedule="
+                    f"{spec.canonical!r} (splits are plan-time-static "
+                    f"functions of n)",
+                    knob="tiling",
+                    value=tiling,
+                    alternatives=(spec.splits,),
+                )
+
+    def fit(rb: int) -> int:
+        return tile_bytes_model(
+            spec.kind, n, spec.splits, rb, seg_count, limb_count, lazy
+        )
+
+    if row_blk is not None:
+        if row_blk < 1 or row_blk & (row_blk - 1):
+            raise UnknownKnobError(
+                f"row_blk must be a positive power of two, got {row_blk}",
+                knob="row_blk",
+                value=row_blk,
+                alternatives=(1, 2, 4, 8),
+            )
+        rb = row_blk
+        if fit(rb) > budget:
+            alts = [r for r in (1, 2, 4, 8) if r < rb and fit(r) <= budget]
+            raise UnservableConfigError(
+                f"row_blk={rb} needs {fit(rb)} bytes of VMEM per grid "
+                f"step (> budget {budget}) at n={n}, S={seg_count}, "
+                f"L={limb_count}",
+                knob="row_blk",
+                value=rb,
+                alternatives=tuple(alts),
+            )
+    else:
+        rb = DEFAULT_E2E_ROW_BLK
+        while rb > 1 and fit(rb) > budget:
+            rb //= 2
+        if fit(rb) > budget:
+            raise UnservableConfigError(
+                f"no servable row block: even row_blk=1 needs {fit(1)} "
+                f"bytes of VMEM per grid step (> budget {budget}) at "
+                f"n={n}, S={seg_count}, L={limb_count}",
+                knob="n",
+                value=n,
+                alternatives=(),
+            )
+    return dataclasses.replace(
+        spec, row_blk=rb, vmem_budget=budget, tile_bytes=fit(rb)
+    )

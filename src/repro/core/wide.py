@@ -15,13 +15,11 @@ schoolbook polynomial oracle (tests/test_wide.py).
 
 The end-to-end pipeline lives behind :mod:`repro.api` (width dispatch at
 plan time); the ``*_channels`` functions below are the array-in/array-out
-building blocks it executes.  :class:`WideParenttMultiplier` remains as a
-thin deprecation shim over that API.
+building blocks it executes.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import jax.numpy as jnp
 
@@ -257,67 +255,3 @@ def repack_limbs(limbs, w_in: int, w_out: int):
         [1 << (w_in * j) for j in range(k)], dtype=limbs.dtype
     )
     return (grouped * shifts).sum(axis=-1)
-
-
-# --------------------------------------------------------------------------
-# Deprecated front door (PR 4): the t=4 / v=45 multiplier as a class.
-# --------------------------------------------------------------------------
-
-
-class WideParenttMultiplier:
-    """DEPRECATED — use ``repro.api.plan(n=..., t=..., v=45)`` +
-    ``repro.api.polymul``: width dispatch is a plan-time decision now,
-    not a user-facing class choice.  This shim delegates every method to
-    the api so external snippets keep running.
-
-    Note one intentional format change from the pre-api class:
-    ``postprocess``/``__call__`` now return the standard base-2^w
-    (w = plan.w = 28) output limbs shared by every width path, not the
-    internal POST_W=14 accumulation limbs (``multiply_ints`` results are
-    unchanged — same integers, wider limbs).
-    """
-
-    POST_W = POST_W
-
-    def __init__(self, params):
-        assert params.v > 31, "use ParenttMultiplier for v <= 31"
-        from repro import api  # deferred: api imports this module
-
-        warnings.warn(
-            "WideParenttMultiplier is deprecated; use repro.api.plan(...) "
-            "+ repro.api.polymul(...) (width dispatch happens at plan time)",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        self.params = params
-        self._plan = api.plan_from_params(params)
-
-    # -- step 1: residues via per-channel folding of base-2^v segments ----
-    def preprocess(self, z):
-        """z: (..., n, S) base-2^v segments -> residues (t, ..., n)."""
-        from repro import api
-
-        return api.decompose(self._plan, z)
-
-    # -- step 2 ------------------------------------------------------------
-    def residue_mul(self, ra, rb):
-        from repro import api
-
-        return api.negacyclic_mul(self._plan, ra, rb)
-
-    # -- step 3: Eq 10 ------------------------------------------------------
-    def postprocess(self, residues):
-        from repro import api
-
-        return api.compose(self._plan, residues)
-
-    def __call__(self, za, zb):
-        from repro import api
-
-        return api.polymul(self._plan, za, zb)
-
-    # -- host convenience ----------------------------------------------------
-    def multiply_ints(self, a, b):
-        from repro import api
-
-        return api.polymul_ints(self._plan, a, b)

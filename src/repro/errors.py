@@ -1,0 +1,59 @@
+"""Structured plan-time error taxonomy (PR 7).
+
+Every rejection in :func:`repro.plan` raises one of these instead of a
+bare ``ValueError`` so callers (and serving front ends) can react to the
+*shape* of the failure, not a message string:
+
+* :class:`PlanError` — base class; subclasses ``ValueError`` so existing
+  ``except ValueError`` call sites keep working.
+* :class:`UnknownKnobError` — the value of a single knob is not in its
+  vocabulary (unknown backend/schedule string, malformed ``n``/``v``).
+* :class:`UnservableConfigError` — every knob is individually valid but
+  the combination cannot be served (four_step depth beyond the canonical
+  chain, a tile that cannot fit the VMEM budget at ``row_blk=1``, a
+  Pallas backend on the wide width, the wide inverse-CRT overflow).
+
+All three carry the offending ``knob`` name, the rejected ``value`` and
+a tuple of nearest valid ``alternatives`` (may be empty when nothing is
+close).
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable
+
+
+class PlanError(ValueError):
+    """A configuration was rejected at plan time.
+
+    Attributes
+    ----------
+    knob:
+        Name of the offending keyword (``"backend"``, ``"schedule"``,
+        ``"tiling"``, ``"row_blk"``, ``"n"``, ``"v"``, ...), or ``None``
+        when the failure is not attributable to a single knob.
+    value:
+        The rejected value, verbatim.
+    alternatives:
+        Nearest valid values for that knob (possibly empty).
+    """
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        knob: str | None = None,
+        value: Any = None,
+        alternatives: Iterable[Any] = (),
+    ) -> None:
+        super().__init__(message)
+        self.knob = knob
+        self.value = value
+        self.alternatives = tuple(alternatives)
+
+
+class UnknownKnobError(PlanError):
+    """A single knob's value is outside its vocabulary."""
+
+
+class UnservableConfigError(PlanError):
+    """Individually-valid knobs combine into a config no datapath serves."""

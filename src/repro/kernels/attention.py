@@ -10,7 +10,7 @@ Grid: (batch, q_heads, Sq / BLK_Q).  Each step loads a (BLK_Q, D) query
 tile into VMEM and streams (BLK_K, D) key/value tiles with a fori_loop of
 dynamic slices, carrying the running max / normalizer / accumulator.
 
-Validated in interpret mode against kernels/ref.py::attention_ref for a
+Validated in interpret mode against a pure-jnp reference attention for a
 sweep of shapes (tests/test_kernels_attention.py).  On-TPU HBM traffic
 per layer = (Sq*H*D + 2*Skv*Hk*D) * ceil(Sq/BLK_Q reuse) + Sq*H*D output —
 this analytic figure is what §Perf uses (interpret-mode HLO inlines the

@@ -215,21 +215,121 @@ def _fs_cols_inv(x, inv, inv_sh, gs):
     return x
 
 
+# -- hierarchical column transforms (DESIGN.md §10): at n >= 8192 the
+# level-0 column length n1 = n/128 no longer fits a vreg-height tile, so
+# the column transform itself recurses through the canonical
+# four_step_chain — a length-c sub-transform along the sublane-side axis
+# of a (rows, c, B) view, with deeper levels reached by RESHAPE only
+# (the one physical transpose stays at level 0).
+
+
+def _slc_sub(tab, lo, hi):
+    """Static sub-row twiddle slice: a (sr, sc) per-level table sliced
+    along sr and laid out (1, sc, m, 1, 1) to broadcast over the
+    (rows, sc, m, tr, B) pairing view; None-safe."""
+    if tab is None:
+        return None
+    w = jnp.swapaxes(jax.lax.slice_in_dim(tab, lo, hi), 0, 1)
+    return w[None, :, :, None, None]
+
+
+def _fs_sub_rows_fwd(x, rtab, rsh, ct):
+    """Sub-row CT stages on a (rows, sc, sr, B) view: pairing along the
+    sr axis with the per-sub-column twist-merged tables (rtab: (sr, sc))."""
+    rows, sc, sr, B = x.shape
+    m, tr = 1, sr
+    while m < sr:
+        tr //= 2
+        w = _slc_sub(rtab, m, 2 * m)
+        ws = _slc_sub(rsh, m, 2 * m)
+        y = x.reshape(rows, sc, m, 2, tr, B)
+        hi, lo = ct(y[:, :, :, 0], y[:, :, :, 1], w, ws)
+        x = jnp.stack([hi, lo], axis=3).reshape(rows, sc, sr, B)
+        m *= 2
+    return x
+
+
+def _fs_sub_rows_inv(x, rtab, rsh, gs):
+    rows, sc, sr, B = x.shape
+    h, tr = sr // 2, 1
+    while h >= 1:
+        w = _slc_sub(rtab, h, 2 * h)
+        ws = _slc_sub(rsh, h, 2 * h)
+        y = x.reshape(rows, sc, h, 2, tr, B)
+        s, d = gs(y[:, :, :, 0], y[:, :, :, 1], w, ws)
+        x = jnp.stack([s, d], axis=3).reshape(rows, sc, sr, B)
+        h //= 2
+        tr *= 2
+    return x
+
+
+def _fs_cols_fwd_hier(x, fwd, fwd_sh, sub_tabs, sub_shs, ct):
+    """Length-c forward transform along axis 1 of a (rows, c, B) tile;
+    ``sub_tabs`` holds the remaining per-level (sr, sc) sub-row tables
+    (empty -> plain column stages on the fwd[:c] prefix).  The sub-column
+    recursion folds sr into the batch axis — a reshape, not a transpose."""
+    if not sub_tabs:
+        return _fs_cols_fwd(x, fwd, fwd_sh, ct)
+    rows, c, B = x.shape
+    rtab = sub_tabs[0]
+    sr, sc = rtab.shape[-2:]
+    x = x.reshape(rows, sc, sr * B)
+    x = _fs_cols_fwd_hier(x, fwd, fwd_sh, sub_tabs[1:], sub_shs[1:], ct)
+    x = _fs_sub_rows_fwd(x.reshape(rows, sc, sr, B), rtab, sub_shs[0], ct)
+    return x.reshape(rows, c, B)
+
+
+def _fs_cols_inv_hier(x, inv, inv_sh, sub_tabs, sub_shs, gs):
+    """Inverse mirror: sub-row GS stages first, then the sub-column
+    recursion."""
+    if not sub_tabs:
+        return _fs_cols_inv(x, inv, inv_sh, gs)
+    rows, c, B = x.shape
+    rtab = sub_tabs[0]
+    sr, sc = rtab.shape[-2:]
+    x = _fs_sub_rows_inv(x.reshape(rows, sc, sr, B), rtab, sub_shs[0], gs)
+    x = x.reshape(rows, sc, sr * B)
+    x = _fs_cols_inv_hier(x, inv, inv_sh, sub_tabs[1:], sub_shs[1:], gs)
+    return x.reshape(rows, c, B)
+
+
+def _as_level_tuple(x):
+    """Normalize a row-table argument: None / per-level tuple kept,
+    single array -> 1-tuple (the historical depth-1 calling convention)."""
+    if x is None or isinstance(x, tuple):
+        return x
+    return (x,)
+
+
+def _level_shoups(row_sh, depth):
+    """Per-level shoup companions; (None,) * depth for strict
+    butterflies so the hier recursion can zip them with the tables."""
+    if row_sh is None:
+        return (None,) * depth
+    return row_sh
+
+
 def _fwd_stages(a, tabs, ct, *, schedule, to_transposed=False):
     """One forward transform of a (rows, n) tile.
 
     tabs = (fwd, fwd_shoup, row_fwd, row_fwd_shoup); the shoup entries
-    are None for strict butterflies, the row entries for radix2.  With
-    ``to_transposed`` the four-step result is returned as the
-    (rows, n2, n1) transposed tile so a fused cascade can run the
-    pointwise product and start the inverse without transposing back."""
+    are None for strict butterflies, the row entries for radix2.  Row
+    entries are per-level tuples for the hierarchical schedule (a single
+    array means depth 1).  With ``to_transposed`` the four-step result
+    is returned as the (rows, n2, n1) transposed tile so a fused cascade
+    can run the pointwise product and start the inverse without
+    transposing back."""
     fwd, fwd_sh, row_fwd, row_sh = tabs
     if schedule != "four_step":
         return _radix2_fwd(a, fwd, fwd_sh, ct)
+    row_fwd = _as_level_tuple(row_fwd)
+    row_sh = _level_shoups(_as_level_tuple(row_sh), len(row_fwd))
     rows, n = a.shape
-    n2, n1 = row_fwd.shape
-    x = _fs_cols_fwd(a.reshape(rows, n1, n2), fwd, fwd_sh, ct)
-    xt = _fs_rows_fwd(jnp.swapaxes(x, -1, -2), row_fwd, row_sh, ct)
+    n2, n1 = row_fwd[0].shape[-2:]
+    x = _fs_cols_fwd_hier(
+        a.reshape(rows, n1, n2), fwd, fwd_sh, row_fwd[1:], row_sh[1:], ct
+    )
+    xt = _fs_rows_fwd(jnp.swapaxes(x, -1, -2), row_fwd[0], row_sh[0], ct)
     if to_transposed:
         return xt
     return jnp.swapaxes(xt, -1, -2).reshape(rows, n)
@@ -241,14 +341,18 @@ def _inv_stages(a, tabs, gs, *, schedule, from_transposed=False):
     inv, inv_sh, row_inv, row_sh = tabs
     if schedule != "four_step":
         return _radix2_inv(a, inv, inv_sh, gs)
-    n2, n1 = row_inv.shape
+    row_inv = _as_level_tuple(row_inv)
+    row_sh = _level_shoups(_as_level_tuple(row_sh), len(row_inv))
+    n2, n1 = row_inv[0].shape[-2:]
     rows = a.shape[0]
     if from_transposed:
         xt = a
     else:
         xt = jnp.swapaxes(a.reshape(rows, n1, n2), -1, -2)
-    xt = _fs_rows_inv(xt, row_inv, row_sh, gs)
-    x = _fs_cols_inv(jnp.swapaxes(xt, -1, -2), inv, inv_sh, gs)
+    xt = _fs_rows_inv(xt, row_inv[0], row_sh[0], gs)
+    x = _fs_cols_inv_hier(
+        jnp.swapaxes(xt, -1, -2), inv, inv_sh, row_inv[1:], row_sh[1:], gs
+    )
     return x.reshape(rows, n1 * n2)
 
 
@@ -280,15 +384,25 @@ def _ref_or_none(ref):
     return None if ref is None else ref[...]
 
 
-def _make_ntt_kernel(shifts, schedule, lazy):
+def _take_levels(it, cond, depth, load=True):
+    """Consume one ref per hierarchy level (ORDER CONTRACT below): a
+    per-level tuple when cond, else None.  ``load=False`` keeps the refs
+    unread for kernels that slice per channel."""
+    if not cond:
+        return None
+    refs = tuple(next(it) for _ in range(depth))
+    return tuple(r[...] for r in refs) if load else refs
+
+
+def _make_ntt_kernel(shifts, schedule, lazy, depth=1):
     four = schedule == "four_step"
 
     def kernel(*refs):
         it = iter(refs)
         q_ref, eps_ref, fwd_ref = next(it), next(it), next(it)
         fwd_sh = _ref_or_none(_take(it, lazy is not None))
-        row_fwd = _ref_or_none(_take(it, four))
-        row_sh = _ref_or_none(_take(it, four and lazy is not None))
+        row_fwd = _take_levels(it, four, depth)
+        row_sh = _take_levels(it, four and lazy is not None, depth)
         a_ref, o_ref = next(it), next(it)
         q = q_ref[0]
         eps = eps_ref[0] if shifts is not None else None
@@ -302,15 +416,15 @@ def _make_ntt_kernel(shifts, schedule, lazy):
     return kernel
 
 
-def _make_intt_kernel(shifts, schedule, lazy):
+def _make_intt_kernel(shifts, schedule, lazy, depth=1):
     four = schedule == "four_step"
 
     def kernel(*refs):
         it = iter(refs)
         q_ref, eps_ref, half_ref, inv_ref = next(it), next(it), next(it), next(it)
         inv_sh = _ref_or_none(_take(it, lazy is not None))
-        row_inv = _ref_or_none(_take(it, four))
-        row_sh = _ref_or_none(_take(it, four and lazy is not None))
+        row_inv = _take_levels(it, four, depth)
+        row_sh = _take_levels(it, four and lazy is not None, depth)
         a_ref, o_ref = next(it), next(it)
         q = q_ref[0]
         eps = eps_ref[0] if shifts is not None else None
@@ -325,7 +439,7 @@ def _make_intt_kernel(shifts, schedule, lazy):
     return kernel
 
 
-def _make_fused_kernel(shifts, schedule, lazy):
+def _make_fused_kernel(shifts, schedule, lazy, depth=1):
     four = schedule == "four_step"
 
     def kernel(*refs):
@@ -334,10 +448,10 @@ def _make_fused_kernel(shifts, schedule, lazy):
         fwd_ref, inv_ref = next(it), next(it)
         fwd_sh = _ref_or_none(_take(it, lazy is not None))
         inv_sh = _ref_or_none(_take(it, lazy is not None))
-        row_fwd = _ref_or_none(_take(it, four))
-        row_inv = _ref_or_none(_take(it, four))
-        row_fsh = _ref_or_none(_take(it, four and lazy is not None))
-        row_ish = _ref_or_none(_take(it, four and lazy is not None))
+        row_fwd = _take_levels(it, four, depth)
+        row_inv = _take_levels(it, four, depth)
+        row_fsh = _take_levels(it, four and lazy is not None, depth)
+        row_ish = _take_levels(it, four and lazy is not None, depth)
         a_ref, b_ref, o_ref = next(it), next(it), next(it)
         q = q_ref[0]
         eps = eps_ref[0] if shifts is not None else None
@@ -353,11 +467,16 @@ def _make_fused_kernel(shifts, schedule, lazy):
 
 
 def _chan_tabs(ref, i):
-    """Channel i's slice of a stacked (t, ...) table ref; None-safe."""
-    return None if ref is None else ref[i]
+    """Channel i's slice of a stacked (t, ...) table ref; None-safe and
+    per-level for the hierarchical row-table tuples."""
+    if ref is None:
+        return None
+    if isinstance(ref, tuple):
+        return tuple(r[i] for r in ref)
+    return ref[i]
 
 
-def _make_fused_e2e_kernel(plan, scalars, shifts, schedule, lazy):
+def _make_fused_e2e_kernel(plan, scalars, shifts, schedule, lazy, depth=1):
     """The paper's full feed-forward datapath in ONE kernel: CRT
     pre-processing, the per-channel NTT -> ⊙ -> iNTT cascade and CRT
     post-processing, with every residue polynomial VMEM-resident.
@@ -374,10 +493,10 @@ def _make_fused_e2e_kernel(plan, scalars, shifts, schedule, lazy):
         fwd_ref, inv_ref = next(it), next(it)
         fwd_sh = _take(it, lazy is not None)
         inv_sh = _take(it, lazy is not None)
-        row_fwd = _take(it, four)
-        row_inv = _take(it, four)
-        row_fsh = _take(it, four and lazy is not None)
-        row_ish = _take(it, four and lazy is not None)
+        row_fwd = _take_levels(it, four, depth, load=False)
+        row_inv = _take_levels(it, four, depth, load=False)
+        row_fsh = _take_levels(it, four and lazy is not None, depth, load=False)
+        row_ish = _take_levels(it, four and lazy is not None, depth, load=False)
         star_ref, qlimb_ref, za_ref, zb_ref, o_ref = (
             next(it), next(it), next(it), next(it), next(it)
         )
@@ -408,7 +527,7 @@ def _make_fused_e2e_kernel(plan, scalars, shifts, schedule, lazy):
     return kernel
 
 
-def _make_fused_e2e_chgrid_kernel(plan, shifts, schedule, lazy, t):
+def _make_fused_e2e_chgrid_kernel(plan, shifts, schedule, lazy, t, depth=1):
     """Channel-tiled variant: grid (row_blocks, t), ONE channel per grid
     step.  The per-channel SAU/Barrett/twiddle constants arrive as
     channel-indexed blocks (the data-driven decompose), the Eq-10
@@ -426,10 +545,10 @@ def _make_fused_e2e_chgrid_kernel(plan, shifts, schedule, lazy, t):
         fwd_ref, inv_ref = next(it), next(it)
         fwd_sh = _ref_or_none(_take(it, lazy is not None))
         inv_sh = _ref_or_none(_take(it, lazy is not None))
-        row_fwd = _ref_or_none(_take(it, four))
-        row_inv = _ref_or_none(_take(it, four))
-        row_fsh = _ref_or_none(_take(it, four and lazy is not None))
-        row_ish = _ref_or_none(_take(it, four and lazy is not None))
+        row_fwd = _take_levels(it, four, depth)
+        row_inv = _take_levels(it, four, depth)
+        row_fsh = _take_levels(it, four and lazy is not None, depth)
+        row_ish = _take_levels(it, four and lazy is not None, depth)
         star_ref, qlimb_ref, za_ref, zb_ref, o_ref = (
             next(it), next(it), next(it), next(it), next(it)
         )
@@ -504,11 +623,13 @@ def _stage_tables(inputs, specs, lazy, four, make_table_spec, make_fs_spec,
     """Append the optional shoup/four-step table inputs + specs.
 
     ORDER CONTRACT (the single owner, used by every wrapper; the kernel
-    factories unpack with ``_take`` in the same order): [shoup
-    tables...] when lazy, then [four-step row tables...] when four, then
-    [their shoup tables...] when both.  ``shoups``/``rows``/
+    factories unpack with ``_take``/``_take_levels`` in the same order):
+    [shoup tables...] when lazy, then [four-step row tables...] when
+    four, then [their shoup tables...] when both.  ``shoups``/``rows``/
     ``row_shoups`` are per-direction tuples (1 entry for the
-    single-direction kernels, fwd+inv for the fused ones);
+    single-direction kernels, fwd+inv for the fused ones); each
+    direction's row entry may itself be a per-level tuple for the
+    hierarchical schedule, flattened direction-major, level-minor.
     ``make_table_spec``/``make_fs_spec`` build the grid-appropriate
     BlockSpec from the array."""
     if lazy is not None:
@@ -517,12 +638,14 @@ def _stage_tables(inputs, specs, lazy, four, make_table_spec, make_fs_spec,
             specs.append(make_table_spec(x))
     if four:
         for x in rows:
-            inputs.append(x)
-            specs.append(make_fs_spec(x))
+            for lv in (x if isinstance(x, tuple) else (x,)):
+                inputs.append(lv)
+                specs.append(make_fs_spec(lv))
         if lazy is not None:
             for x in row_shoups:
-                inputs.append(x)
-                specs.append(make_fs_spec(x))
+                for lv in (x if isinstance(x, tuple) else (x,)):
+                    inputs.append(lv)
+                    specs.append(make_fs_spec(lv))
 
 
 # BlockSpec builders for the three grid layouts the tables ride in:
@@ -560,22 +683,28 @@ def ntt_channels_pallas(
     row_blk: int = DEFAULT_ROWS, interpret: bool = True,
 ):
     """a: (t, rows, n) -> forward NTT per channel.  qs: (t,), fwd: (t, n);
-    row_fwd: (t, n2, n1) twist-merged row tables (four_step only); the
-    *_shoup tables ride along when lazy=(window, beta)."""
+    row_fwd: (t, n2, n1) twist-merged row tables (four_step only) or a
+    per-level tuple of them for the hierarchical schedule; the *_shoup
+    tables ride along (same structure) when lazy=(window, beta).
+    ``schedule`` is a concrete string or a resolved ScheduleSpec."""
+    kind = getattr(schedule, "kind", schedule)
+    row_fwd = _as_level_tuple(row_fwd)
+    row_fwd_shoup = _as_level_tuple(row_fwd_shoup)
+    depth = len(row_fwd) if isinstance(row_fwd, tuple) else 1
     t, _, n = a.shape
     a, rows = _pad_rows(a, row_blk)
     scalar, table, data = _grid_specs(t, a.shape[1], n, row_blk)
     inputs = [qs.reshape(t, 1), _eps_block(eps, qs, t), fwd]
     specs = [scalar, scalar, table]
     _stage_tables(
-        inputs, specs, lazy, schedule == "four_step",
+        inputs, specs, lazy, kind == "four_step",
         _chan_table_spec, _chan_fs_spec,
         (fwd_shoup,), (row_fwd,), (row_fwd_shoup,),
     )
     inputs.append(a)
     specs.append(data)
     out = pl.pallas_call(
-        _make_ntt_kernel(shifts, schedule, lazy),
+        _make_ntt_kernel(shifts, kind, lazy, depth),
         grid=(t, a.shape[1] // row_blk),
         in_specs=specs,
         out_specs=data,
@@ -594,20 +723,24 @@ def intt_channels_pallas(
     *, shifts=None, schedule: str = "radix2", lazy=None,
     row_blk: int = DEFAULT_ROWS, interpret: bool = True,
 ):
+    kind = getattr(schedule, "kind", schedule)
+    row_inv = _as_level_tuple(row_inv)
+    row_inv_shoup = _as_level_tuple(row_inv_shoup)
+    depth = len(row_inv) if isinstance(row_inv, tuple) else 1
     t, _, n = a.shape
     a, rows = _pad_rows(a, row_blk)
     scalar, table, data = _grid_specs(t, a.shape[1], n, row_blk)
     inputs = [qs.reshape(t, 1), _eps_block(eps, qs, t), half.reshape(t, 1), inv]
     specs = [scalar, scalar, scalar, table]
     _stage_tables(
-        inputs, specs, lazy, schedule == "four_step",
+        inputs, specs, lazy, kind == "four_step",
         _chan_table_spec, _chan_fs_spec,
         (inv_shoup,), (row_inv,), (row_inv_shoup,),
     )
     inputs.append(a)
     specs.append(data)
     out = pl.pallas_call(
-        _make_intt_kernel(shifts, schedule, lazy),
+        _make_intt_kernel(shifts, kind, lazy, depth),
         grid=(t, a.shape[1] // row_blk),
         in_specs=specs,
         out_specs=data,
@@ -628,6 +761,11 @@ def fused_polymul_pallas(
     row_blk: int = DEFAULT_ROWS, interpret: bool = True,
 ):
     """(t, rows, n) x (t, rows, n) -> negacyclic products, fused cascade."""
+    kind = getattr(schedule, "kind", schedule)
+    row_fwd, row_inv = _as_level_tuple(row_fwd), _as_level_tuple(row_inv)
+    row_fwd_shoup = _as_level_tuple(row_fwd_shoup)
+    row_inv_shoup = _as_level_tuple(row_inv_shoup)
+    depth = len(row_fwd) if isinstance(row_fwd, tuple) else 1
     t, _, n = a.shape
     a, rows = _pad_rows(a, row_blk)
     b, _ = _pad_rows(b, row_blk)
@@ -637,7 +775,7 @@ def fused_polymul_pallas(
     ]
     specs = [scalar, scalar, scalar, table, table]
     _stage_tables(
-        inputs, specs, lazy, schedule == "four_step",
+        inputs, specs, lazy, kind == "four_step",
         _chan_table_spec, _chan_fs_spec,
         (fwd_shoup, inv_shoup), (row_fwd, row_inv),
         (row_fwd_shoup, row_inv_shoup),
@@ -645,7 +783,7 @@ def fused_polymul_pallas(
     inputs += [a, b]
     specs += [data, data]
     out = pl.pallas_call(
-        _make_fused_kernel(shifts, schedule, lazy),
+        _make_fused_kernel(shifts, kind, lazy, depth),
         grid=(t, a.shape[1] // row_blk),
         in_specs=specs,
         out_specs=data,
@@ -690,20 +828,27 @@ def fused_e2e_polymul_pallas(
     MiB — both << 16 MiB.
     """
     require_dec(plan)
+    kind = getattr(schedule, "kind", schedule)
+    row_fwd, row_inv = _as_level_tuple(row_fwd), _as_level_tuple(row_inv)
+    row_fwd_shoup = _as_level_tuple(row_fwd_shoup)
+    row_inv_shoup = _as_level_tuple(row_inv_shoup)
+    depth = len(row_fwd) if isinstance(row_fwd, tuple) else 1
     rows, n, S = za.shape
     t, L = plan.t, plan.L
     scalars, shifts = modmath.channel_mul_constants(plan.qs)
     if channel_grid is None:
         channel_grid = t >= 2
     if row_blk is None:
-        row_blk = DEFAULT_E2E_ROWS_CHGRID if channel_grid else DEFAULT_E2E_ROWS
+        row_blk = getattr(schedule, "row_blk", 0) or (
+            DEFAULT_E2E_ROWS_CHGRID if channel_grid else DEFAULT_E2E_ROWS
+        )
     pad = (-rows) % row_blk
     if pad:
         zpad = ((0, pad), (0, 0), (0, 0))
         za = jnp.pad(za, zpad)
         zb = jnp.pad(zb, zpad)
     row_blocks = za.shape[0] // row_blk
-    four = schedule == "four_step"
+    four = kind == "four_step"
     if not channel_grid:
         table = pl.BlockSpec((t, n), lambda r: (0, 0))
         data = pl.BlockSpec((row_blk, n, S), lambda r: (r, 0, 0))
@@ -722,7 +867,7 @@ def fused_e2e_polymul_pallas(
             data,
         ]
         out = pl.pallas_call(
-            _make_fused_e2e_kernel(plan, scalars, shifts, schedule, lazy),
+            _make_fused_e2e_kernel(plan, scalars, shifts, kind, lazy, depth),
             grid=(row_blocks,),
             in_specs=specs,
             out_specs=pl.BlockSpec((row_blk, n, L), lambda r: (r, 0, 0)),
@@ -777,7 +922,7 @@ def fused_e2e_polymul_pallas(
         data,
     ]
     out = pl.pallas_call(
-        _make_fused_e2e_chgrid_kernel(plan, shifts, schedule, lazy, t),
+        _make_fused_e2e_chgrid_kernel(plan, shifts, kind, lazy, t, depth),
         grid=(row_blocks, t),
         in_specs=specs,
         out_specs=pl.BlockSpec((row_blk, n, L), lambda r, c: (r, 0, 0)),

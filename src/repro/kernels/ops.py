@@ -1,5 +1,6 @@
 """Backend-dispatch layer: ONE switch selects the datapath for the whole
-stack (``ParenttMultiplier``, the BFV layer, benchmarks, examples).
+stack (``repro.plan``/``repro.polymul``, the BFV layer, benchmarks,
+examples).
 
 Backends
 --------
@@ -47,8 +48,7 @@ violations raise immediately so a backend mismatch fails loudly):
 
 The Pallas kernels internally operate on flattened ``(t, rows, n)`` /
 ``(rows, S)`` tiles; this layer folds/unfolds the batch dims, so callers
-may pass any leading shape (``ParenttMultiplier.preprocess`` passes
-``(..., n, S)``).
+may pass any leading shape (``repro.decompose`` passes ``(..., n, S)``).
 """
 from __future__ import annotations
 
@@ -60,11 +60,11 @@ import jax.numpy as jnp
 from repro.core import modmath
 from repro.core import ntt as ntt_mod
 from repro.core import rns as rns_mod
+from repro.core import schedule as schedule_mod
 from repro.core.params import (
     BACKENDS,
     SCHEDULES,
     ParenttParams,
-    resolve_schedule_for,
     validate_backend,
 )
 from repro.analysis import walk as walk_mod
@@ -139,14 +139,18 @@ def resolve_backend(
     return validate_backend(backend)
 
 
-def resolve_schedule(params: ParenttParams, schedule: str | None = None) -> str:
+def resolve_schedule(
+    params: ParenttParams, schedule=None
+) -> schedule_mod.ScheduleSpec:
     """Pick the concrete NTT stage schedule: explicit ``schedule`` >
-    ``params.schedule`` > ``"auto"`` (four_step when n >= 256).  Unlike
+    ``params.schedule`` > ``"auto"`` (four_step when n >= 256).  Returns
+    the resolved :class:`~repro.core.schedule.ScheduleSpec` (an already
+    resolved spec — e.g. off a ``PlanConfig`` — passes through).  Unlike
     :func:`resolve_backend`, params is required — auto resolution needs
     the transform length."""
     if schedule is None:
         schedule = getattr(params, "schedule", None) or "auto"
-    return resolve_schedule_for(params.n, schedule)
+    return schedule_mod.concrete_spec(params.n, schedule)
 
 
 def _lazy_of(ct: ntt_mod.ChannelTables) -> tuple[int, int] | None:
@@ -158,23 +162,38 @@ def _lazy_of(ct: ntt_mod.ChannelTables) -> tuple[int, int] | None:
 
 
 def _sched_tables(
-    ct: ntt_mod.ChannelTables, schedule: str, lazy: tuple[int, int] | None, direction: str
+    ct: ntt_mod.ChannelTables, schedule, lazy: tuple[int, int] | None, direction: str
 ) -> tuple[Any, Any, Any, Any]:
-    """(table, shoup, row_table, row_shoup) device arrays for one
+    """(table, shoup, row_tables, row_shoups) device arrays for one
     transform direction under (schedule, lazy) — the positional tail the
-    kernel wrappers expect after their required args."""
-    four = schedule == "four_step"
+    kernel wrappers expect after their required args.  The row entries
+    are per-level tuples (level 0 = the (t, n2, n1) tables, deeper
+    levels the hierarchical sub-row tables, truncated to the schedule's
+    depth); ``schedule`` is a concrete string or a resolved spec."""
+    kind = getattr(schedule, "kind", schedule)
+    four = kind == "four_step"
     if four and ct.fs_row_fwd is None:
         raise ValueError(
             f"four_step schedule unavailable for n={ct.n}: no row tables"
         )
+    depth = getattr(schedule, "depth", 0) or (1 + len(ct.fs_sub_fwd))
     if direction == "fwd":
-        tab, sh, row, rsh = (
-            ct.fwd_d, ct.fwd_shoup_d, ct.fs_row_fwd_d, ct.fs_row_fwd_shoup_d
+        tab, sh = ct.fwd_d, ct.fwd_shoup_d
+        row = (ct.fs_row_fwd_d,) + tuple(ct.fs_sub_fwd_d[: depth - 1])
+        rsh = (
+            None
+            if ct.fs_row_fwd_shoup_d is None
+            else (ct.fs_row_fwd_shoup_d,)
+            + tuple(ct.fs_sub_fwd_shoup_d[: depth - 1])
         )
     else:
-        tab, sh, row, rsh = (
-            ct.inv_d, ct.inv_shoup_d, ct.fs_row_inv_d, ct.fs_row_inv_shoup_d
+        tab, sh = ct.inv_d, ct.inv_shoup_d
+        row = (ct.fs_row_inv_d,) + tuple(ct.fs_sub_inv_d[: depth - 1])
+        rsh = (
+            None
+            if ct.fs_row_inv_shoup_d is None
+            else (ct.fs_row_inv_shoup_d,)
+            + tuple(ct.fs_sub_inv_shoup_d[: depth - 1])
         )
     return (
         tab,
@@ -226,7 +245,7 @@ def _require_tables(params: ParenttParams, fn: str) -> ntt_mod.ChannelTables:
         raise ValueError(
             f"{fn}: params (n={params.n}, t={params.t}, v={params.v}) have no "
             "int64-safe NTT tables (v > 31); use polymul.oracle_multiply or "
-            "core.wide.WideParenttMultiplier"
+            "repro.plan(..., v=45) (the wide width resolves at plan time)"
         )
     return params.tables
 
@@ -432,7 +451,8 @@ def fused_polymul_e2e(za: Any, zb: Any, params: ParenttParams, *,
 
 
 def hbm_traffic_model(params: ParenttParams, rows: int,
-                      backend: str | None = None) -> dict[str, Any]:
+                      backend: str | None = None,
+                      schedule=None) -> dict[str, Any]:
     """Modeled HBM bytes crossing kernel/stage boundaries for ONE
     end-to-end multiply of ``rows`` polynomials (both operands in, limbs
     out), per backend.
@@ -474,6 +494,17 @@ def hbm_traffic_model(params: ParenttParams, rows: int,
         total = seg_in + 6 * res + limb
     else:  # pallas_fused_e2e: segments in, limbs out, nothing between
         launches, seg_in, total = 1, 2 * seg, 2 * seg + limb
+    # schedule/tiling view of the same traffic (hierarchy-aware): how the
+    # e2e bytes stream through VMEM — row_blk rows per grid step, each
+    # step's working set bounded by the tile model the planner resolved
+    # row_blk against.  Depth does NOT change HBM bytes (deeper levels
+    # are VMEM reshapes); it changes the per-step tile, reported here.
+    spec = resolve_schedule(params, schedule)
+    row_blk = spec.row_blk or params.row_blk or ntt_kernels.DEFAULT_E2E_ROWS_CHGRID
+    tile = schedule_mod.tile_bytes_model(
+        spec.kind, params.n, spec.splits, row_blk, plan.seg_count, plan.L,
+        lazy=params.tables is not None and params.tables.lazy_window is not None,
+    )
     return {
         "backend": backend,
         "rows": rows,
@@ -482,6 +513,11 @@ def hbm_traffic_model(params: ParenttParams, rows: int,
         "segment_bytes_in": seg_in,
         "limb_bytes_out": limb,
         "intermediate_bytes": total - seg_in - limb,
+        "schedule": str(spec),
+        "schedule_depth": max(spec.depth, 1),
+        "row_blk": row_blk,
+        "grid_row_steps": -(-rows // row_blk),
+        "vmem_tile_bytes": tile,
     }
 
 
@@ -509,7 +545,7 @@ def count_pallas_launches(params: ParenttParams, backend: str | None = None,
 # --------------------------------------------------------------------------
 
 
-def transform_cost_model(params: ParenttParams, *, schedule: str | None = None,
+def transform_cost_model(params: ParenttParams, *, schedule=None,
                          direction: str = "fwd") -> dict[str, Any]:
     """Structural cost of ONE NTT transform under a schedule:
 
@@ -517,20 +553,27 @@ def transform_cost_model(params: ParenttParams, *, schedule: str | None = None,
       lane (minor) axis at distance < 128, i.e. stages that need lane
       shuffles/strided access on real TPU vregs.  Computed from
       :func:`repro.core.ntt.stage_lane_strides` (the schedule's
-      structural definition); 0 for four_step at every n.
+      structural definition); 0 for four_step at every n AND every
+      hierarchy depth (deeper levels pair along reshaped sublane
+      factors — the depth-agnosticity claim of DESIGN.md §10).
     * ``reduction_ops`` — conditional-subtract (jnp.where -> select_n)
       ops the transform traces to: 5 per stage strict, 1-2 per stage +
       an O(1) exit canonicalize under Harvey lazy reduction.  The
       bench-smoke gate cross-checks this number against the actual
       traced kernel via :func:`count_reduction_selects`, so the model
-      cannot drift from the implementation.
+      cannot drift from the implementation.  The total stage count is
+      log2(n) at any depth — the hierarchy regroups stages, it does not
+      add butterflies.
+    * ``vmem_transposes`` — physical tile transposes per transform: 1
+      for four_step at ANY depth (only level 0 transposes; deeper
+      levels are reshapes), 0 for radix2.
     """
     if direction not in ("fwd", "inv"):
         raise ValueError(f"direction must be 'fwd' or 'inv', got {direction!r}")
-    schedule = resolve_schedule(params, schedule)
+    spec = resolve_schedule(params, schedule)
     n = params.n
     stages = n.bit_length() - 1
-    strides = ntt_mod.stage_lane_strides(n, schedule)
+    strides = ntt_mod.stage_lane_strides(n, spec)
     sublane = sum(1 for s in strides if 0 < s < 128)
     ct = params.tables
     lazy = None if ct is None else _lazy_of(ct)
@@ -545,7 +588,11 @@ def transform_cost_model(params: ParenttParams, *, schedule: str | None = None,
         window = None
         red = modmath.STRICT_SELECTS_PER_STAGE * stages
     return {
-        "schedule": schedule,
+        "schedule": spec.kind,
+        "spec": spec,
+        "depth": max(spec.depth, 1) if spec.kind == "four_step" else 0,
+        "splits": spec.splits,
+        "vmem_transposes": 1 if spec.kind == "four_step" else 0,
         "direction": direction,
         "stages": stages,
         "lane_strides": strides,

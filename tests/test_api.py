@@ -331,23 +331,13 @@ class TestStageEntries:
         assert repro.from_limbs(pl, limbs) == [x % pl.q for x in a]
 
 
-class TestLegacyShims:
-    """The pre-api class front doors still import and delegate."""
+class TestApiSurface:
+    """The plan/execute API is the only front door: the class shims are
+    gone, and the exported surface matches the committed snapshot."""
 
-    def test_parentt_multiplier_delegates(self):
-        p = params_mod.make_params(n=64, t=3, v=30)
-        with pytest.warns(DeprecationWarning, match="repro.api.plan"):
-            m = pm.ParenttMultiplier(p, backend="pallas_fused")
-        assert m.backend == "pallas_fused"
-        a, b = _rand_ints(m._plan, seed=29)
-        assert m.multiply_ints(a, b) == pm.oracle_multiply(a, b, p)
-
-    def test_wide_multiplier_delegates(self):
-        p = params_mod.make_params(n=32, t=4, v=45)
-        with pytest.warns(DeprecationWarning, match="repro.api.plan"):
-            m = wide_mod.WideParenttMultiplier(p)
-        a, b = _rand_ints(m._plan, seed=31)
-        assert m.multiply_ints(a, b) == pm.oracle_multiply(a, b, p)
+    def test_class_shims_are_gone(self):
+        assert not hasattr(pm, "ParenttMultiplier")
+        assert not hasattr(wide_mod, "WideParenttMultiplier")
 
     def test_api_surface_matches_committed_snapshot(self):
         snap = Path(__file__).resolve().parent.parent / "API_SURFACE.txt"
@@ -365,5 +355,6 @@ class TestLegacyShims:
         )
         pl = api.plan_from_params(p)
         assert pl.config.backend == "pallas_fused"
-        assert pl.config.schedule == "four_step"
+        assert pl.config.schedule.kind == "four_step"
+        assert pl.config.schedule.row_blk == 2
         assert pl.config.row_blk == 2

@@ -13,6 +13,7 @@ import pytest
 
 import jax.numpy as jnp
 
+import repro
 from repro.core import params as params_mod
 from repro.core import polymul as pm
 from repro.kernels import ops
@@ -34,7 +35,8 @@ class TestFusedBitExact:
     def test_pallas_fused_vs_oracles(self, t, v, n):
         p = params_mod.make_params(n=n, t=t, v=v)
         a, b = _rand_ints(p, seed=n)
-        got = pm.ParenttMultiplier(p, backend="pallas_fused").multiply_ints(a, b)
+        pl = repro.plan(n=n, t=t, v=v, backend="pallas_fused")
+        got = repro.polymul_ints(pl, a, b)
         assert got == pm.oracle_multiply(a, b, p)
         assert got == pm.schoolbook_negacyclic(a, b, p.q)
 
@@ -44,7 +46,8 @@ class TestFusedBitExact:
         (residues never touch HBM) must be bit-exact too."""
         p = params_mod.make_params(n=n, t=t, v=v)
         a, b = _rand_ints(p, seed=13 * n)
-        got = pm.ParenttMultiplier(p, backend="pallas_fused_e2e").multiply_ints(a, b)
+        pl = repro.plan(n=n, t=t, v=v, backend="pallas_fused_e2e")
+        got = repro.polymul_ints(pl, a, b)
         assert got == pm.oracle_multiply(a, b, p)
         assert got == pm.schoolbook_negacyclic(a, b, p.q)
 
@@ -53,7 +56,7 @@ class TestFusedBitExact:
         p = params_mod.make_params(n=n, t=t, v=v)
         a, b = _rand_ints(p, seed=7 * n)
         outs = {
-            bk: pm.ParenttMultiplier(p, backend=bk).multiply_ints(a, b)
+            bk: repro.polymul_ints(repro.plan(n=n, t=t, v=v, backend=bk), a, b)
             for bk in ops.BACKENDS
         }
         for bk, got in outs.items():
@@ -64,25 +67,33 @@ class TestDispatch:
     def test_params_carry_backend(self):
         p = params_mod.make_params(n=64, t=3, v=30, backend="pallas_fused")
         assert p.backend == "pallas_fused"
-        assert pm.ParenttMultiplier(p).backend == "pallas_fused"
+        from repro import api
+
+        assert api.plan_from_params(p).config.backend == "pallas_fused"
         # backend variants share one table/plan object (single H2D upload)
         pj = params_mod.make_params(n=64, t=3, v=30)
         assert p.tables is pj.tables and p.plan is pj.plan
 
     def test_unknown_backend_rejected(self):
-        p = params_mod.make_params(n=64, t=3, v=30)
         with pytest.raises(ValueError, match="unknown backend"):
-            pm.ParenttMultiplier(p, backend="cuda")
+            repro.plan(n=64, t=3, v=30, backend="cuda")
         with pytest.raises(ValueError, match="unknown backend"):
             params_mod.make_params(n=64, t=3, v=30, backend="nope")
+        err = pytest.raises(
+            repro.UnknownKnobError, repro.plan, n=64, t=3, v=30, backend="cuda"
+        ).value
+        assert err.knob == "backend" and err.value == "cuda"
+        assert "jnp" in err.alternatives
 
-    def test_v45_error_names_params_and_oracle(self):
-        p45 = params_mod.make_params(n=64, t=4, v=45)
-        with pytest.raises(ValueError) as ei:
-            pm.ParenttMultiplier(p45)
-        msg = str(ei.value)
-        assert "v=45" in msg and "t=4" in msg and "n=64" in msg
-        assert "oracle_multiply" in msg and "WideParenttMultiplier" in msg
+    def test_v45_pallas_backend_unservable(self):
+        # The wide width has no Pallas datapath: the plan-time error
+        # carries the knob and the servable alternatives.
+        err = pytest.raises(
+            repro.UnservableConfigError,
+            repro.plan, n=64, t=4, v=45, backend="pallas_fused",
+        ).value
+        assert err.knob == "backend" and err.value == "pallas_fused"
+        assert err.alternatives == ("auto", "jnp")
 
     def test_residue_shape_mismatch_fails_loudly(self):
         p = params_mod.make_params(n=64, t=3, v=30)

@@ -11,6 +11,7 @@ try:
 except ImportError:  # degrade property tests to per-test skips, not errors
     from _hypothesis_fallback import given, settings, st
 
+import repro
 from repro.core import bigint, ntt as ntt_mod, params as params_mod
 from repro.core import polymul as pm, primes as primes_mod, rns as rns_mod
 from repro.core import schedule as sched
@@ -262,8 +263,8 @@ class TestRns:
 
 
 @functools.lru_cache(maxsize=None)
-def _cached_multiplier():
-    return pm.ParenttMultiplier(params_mod.make_params(n=64, t=3, v=30))
+def _cached_plan():
+    return repro.plan(n=64, t=3, v=30)
 
 
 class TestPolymul:
@@ -273,17 +274,17 @@ class TestPolymul:
         rng = random.Random(42)
         a = [rng.randrange(p.q) for _ in range(n)]
         b = [rng.randrange(p.q) for _ in range(n)]
-        m = pm.ParenttMultiplier(p)
-        assert m.multiply_ints(a, b) == pm.schoolbook_negacyclic(a, b, p.q)
+        pl = repro.plan(n=n, t=t, v=v)
+        assert repro.polymul_ints(pl, a, b) == pm.schoolbook_negacyclic(a, b, p.q)
 
     def test_sau_and_generic_paths_agree(self):
         p = params_mod.make_params(n=64, t=3, v=30)
         rng = random.Random(7)
         a = [rng.randrange(p.q) for _ in range(64)]
         b = [rng.randrange(p.q) for _ in range(64)]
-        m1 = pm.ParenttMultiplier(p, use_sau=True)
-        m2 = pm.ParenttMultiplier(p, use_sau=False)
-        assert m1.multiply_ints(a, b) == m2.multiply_ints(a, b)
+        pl1 = repro.plan(n=64, t=3, v=30, use_sau=True)
+        pl2 = repro.plan(n=64, t=3, v=30, use_sau=False)
+        assert repro.polymul_ints(pl1, a, b) == repro.polymul_ints(pl2, a, b)
 
     def test_oracle_v45(self):
         """The paper's t=4, v=45, 180-bit configuration (oracle path)."""
@@ -296,7 +297,7 @@ class TestPolymul:
 
     def test_batched(self):
         p = params_mod.make_params(n=64, t=3, v=30)
-        m = pm.ParenttMultiplier(p)
+        pl = repro.plan(n=64, t=3, v=30)
         rng = np.random.default_rng(11)
         ints = lambda: [
             [int(x) for x in rng.integers(0, 2**60, size=64)] for _ in range(2)
@@ -304,7 +305,7 @@ class TestPolymul:
         A, B = ints(), ints()
         za = jnp.asarray(np.stack([pm.ints_to_segments(r, p.plan) for r in A]))
         zb = jnp.asarray(np.stack([pm.ints_to_segments(r, p.plan) for r in B]))
-        out = np.asarray(m(za, zb))
+        out = np.asarray(repro.execute(pl, za, zb))
         for r in range(2):
             got = pm.limbs_out_to_ints(out[r], p.plan)
             assert got == pm.schoolbook_negacyclic(A[r], B[r], p.q)
@@ -317,10 +318,10 @@ class TestPolymul:
         rng = random.Random(seed)
         a = [rng.randrange(p.q) for _ in range(64)]
         b = [rng.randrange(p.q) for _ in range(64)]
-        m = _cached_multiplier()
+        pl = _cached_plan()
         ca = [(scale * x) % p.q for x in a]
-        lhs = m.multiply_ints(ca, b)
-        ab = m.multiply_ints(a, b)
+        lhs = repro.polymul_ints(pl, ca, b)
+        ab = repro.polymul_ints(pl, a, b)
         rhs = [(scale * x) % p.q for x in ab]
         assert lhs == rhs
 

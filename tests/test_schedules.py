@@ -15,6 +15,7 @@ try:
 except ImportError:
     from _hypothesis_fallback import given, settings, st
 
+import repro
 from repro.core import modmath
 from repro.core import ntt as ntt_mod
 from repro.core import params as params_mod
@@ -95,21 +96,23 @@ class TestScheduleBitExact:
     @pytest.mark.parametrize("t,v,n", PRESETS)
     @pytest.mark.parametrize("schedule", ["radix2", "four_step", "auto"])
     def test_e2e_vs_bigint_oracle(self, t, v, n, schedule):
-        p = params_mod.make_params(
+        pl = repro.plan(
             n=n, t=t, v=v, backend="pallas_fused_e2e", schedule=schedule
         )
         rng = random.Random(17 * n)
-        a = [rng.randrange(p.q) for _ in range(n)]
-        b = [rng.randrange(p.q) for _ in range(n)]
-        got = pm.ParenttMultiplier(p).multiply_ints(a, b)
-        assert got == pm.oracle_multiply(a, b, p)
+        a = [rng.randrange(pl.q) for _ in range(n)]
+        b = [rng.randrange(pl.q) for _ in range(n)]
+        got = repro.polymul_ints(pl, a, b)
+        assert got == pm.oracle_multiply(a, b, pl.params)
 
     def test_auto_resolution(self):
-        assert ops.resolve_schedule(params_mod.make_params(n=64, t=3, v=30)) == "radix2"
-        assert ops.resolve_schedule(params_mod.make_params(n=256, t=6, v=30)) == "four_step"
+        spec = ops.resolve_schedule(params_mod.make_params(n=64, t=3, v=30))
+        assert spec.kind == "radix2" and spec.splits == ()
+        spec = ops.resolve_schedule(params_mod.make_params(n=256, t=6, v=30))
+        assert spec.kind == "four_step" and spec.splits == ((2, 128),)
         p = params_mod.make_params(n=64, t=3, v=30, schedule="four_step")
-        assert ops.resolve_schedule(p) == "four_step"
-        assert ops.resolve_schedule(p, "radix2") == "radix2"
+        assert ops.resolve_schedule(p).kind == "four_step"
+        assert ops.resolve_schedule(p, "radix2").kind == "radix2"
         with pytest.raises(ValueError, match="unknown schedule"):
             params_mod.make_params(n=64, t=3, v=30, schedule="fft")
 

@@ -11,6 +11,7 @@ try:
 except ImportError:  # degrade property tests to per-test skips, not errors
     from _hypothesis_fallback import given, settings, st
 
+import repro
 from repro.core import params as params_mod
 from repro.core import polymul as pm
 from repro.core import primes as primes_mod
@@ -95,21 +96,21 @@ class TestWideMultiplier:
     @pytest.mark.slow  # wide digit-split pipeline at n=64, heavy host oracle
     def test_t4_v45_full_pipeline(self):
         """The paper's t=4, v=45, 180-bit configuration — in-JAX jit path."""
-        p = params_mod.make_params(n=64, t=4, v=45)
+        pl = repro.plan(n=64, t=4, v=45)
+        p = pl.params
         assert p.q.bit_length() == 180
-        m = wide.WideParenttMultiplier(p)
         rng = random.Random(4)
         a = [rng.randrange(p.q) for _ in range(64)]
         b = [rng.randrange(p.q) for _ in range(64)]
-        got = m.multiply_ints(a, b)
+        got = repro.polymul_ints(pl, a, b)
         want = pm.schoolbook_negacyclic(a, b, p.q)
         assert got == want
 
     @pytest.mark.slow
     def test_matches_oracle(self):
-        p = params_mod.make_params(n=32, t=4, v=45)
-        m = wide.WideParenttMultiplier(p)
+        pl = repro.plan(n=32, t=4, v=45)
+        p = pl.params
         rng = random.Random(5)
         a = [rng.randrange(p.q) for _ in range(32)]
         b = [rng.randrange(p.q) for _ in range(32)]
-        assert m.multiply_ints(a, b) == pm.oracle_multiply(a, b, p)
+        assert repro.polymul_ints(pl, a, b) == pm.oracle_multiply(a, b, p)
