@@ -8,6 +8,10 @@ jitted single-request ``repro.polymul`` calls and (b) the
 shape-bucketed batching engine at a fixed slot count.  Reported:
 requests/s for both, the batched/loop speedup, and the engine's
 p50/p99 submit-to-result latency plus padding/dispatch accounting.
+``--deadline-ms`` and ``--fault-rate`` turn the same driver into a
+degraded-mode benchmark: goodput (requests resolved with a value —
+deadline met, retries survived) is reported alongside raw req/s, with
+the shed/retry/failure counters that explain the gap.
 
 ``--ci-smoke`` is the ``serve-smoke`` CI gate: it runs the small
 preset at batch 8, verifies the engine's mixed-preset stream bit-exact
@@ -60,47 +64,83 @@ def _time_loop(pl, reqs, repeats: int) -> float:
     return best
 
 
-def _time_engine(pl, reqs, batch: int, repeats: int):
-    """(best wall seconds, latency ms array, stats) for the batching
-    engine serving the same request list."""
-    eng = PolymulEngine(batch_slots=batch)
+def _time_engine(pl, reqs, batch: int, repeats: int, *,
+                 deadline_s=None, fault_rate: float = 0.0, seed: int = 7):
+    """(best wall seconds, latency ms array over successful futures,
+    stats, traces, goodput count) for the batching engine serving the
+    same request list — optionally under per-request deadlines and a
+    Bernoulli dispatch-fault rate (the engine's retry/shed machinery
+    then shows up in the stats and the goodput gap)."""
+    eng = PolymulEngine(batch_slots=batch, backoff_base_s=1e-4)
     shape = (pl.n, pl.config.seg_count)
     eng.submit(pl, np.zeros(shape, np.int64), np.zeros(shape, np.int64))
     eng.run_until_idle()  # compile the padded-batch executable
-    best, lat = float("inf"), None
+    if fault_rate > 0.0:
+        from repro.serve.faults import FaultInjector, FaultRule
+
+        FaultInjector(
+            [FaultRule("raise", rate=fault_rate)], seed=seed
+        ).install(eng)
+    best, lat, stats, good = float("inf"), None, {}, 0
     for _ in range(repeats):
-        for k in eng.stats:
-            eng.stats[k] = 0
+        eng.reset_stats()
         t0 = time.perf_counter()
-        futs = [eng.submit(pl, za, zb) for za, zb in reqs]
+        futs = [
+            eng.submit(pl, za, zb, deadline=deadline_s)
+            for za, zb in reqs
+        ]
         eng.run_until_idle()
         wall = time.perf_counter() - t0
+        ok = [f for f in futs if f.exception() is None]
         if wall < best:
             best = wall
-            lat = np.array([f.latency_s for f in futs]) * 1e3
-    return best, lat, dict(eng.stats), eng.trace_count
+            lat = np.array([f.latency_s for f in ok]) * 1e3
+            stats = dict(eng.stats)
+            good = len(ok)
+    return best, lat, stats, eng.trace_count, good
 
 
 def bench(n: int, t: int, v: int, *, batch: int, requests: int,
-          repeats: int, seed: int = 7) -> dict:
+          repeats: int, seed: int = 7, deadline_ms: float = 0.0,
+          fault_rate: float = 0.0) -> dict:
     rng = np.random.default_rng(seed)
     pl = repro.plan(n=n, t=t, v=v)
     reqs = _requests(pl, requests, rng)
     loop_s = _time_loop(pl, reqs, repeats)
-    eng_s, lat, stats, traces = _time_engine(pl, reqs, batch, repeats)
-    return {
+    eng_s, lat, stats, traces, good = _time_engine(
+        pl, reqs, batch, repeats, seed=seed,
+        deadline_s=deadline_ms / 1e3 if deadline_ms > 0 else None,
+        fault_rate=fault_rate,
+    )
+    rec = {
         "preset": {"n": n, "t": t, "v": v},
         "batch_slots": batch,
         "requests": requests,
         "loop_rps": requests / loop_s,
         "batched_rps": requests / eng_s,
         "batched_vs_loop_speedup": loop_s / eng_s,
-        "latency_p50_ms": float(np.percentile(lat, 50)),
-        "latency_p99_ms": float(np.percentile(lat, 99)),
+        # goodput: requests that resolved with a value (deadline met,
+        # retries survived) per second — equals batched_rps when no
+        # deadline/fault knobs are set
+        "goodput_rps": good / eng_s,
+        "latency_p50_ms": (
+            float(np.percentile(lat, 50)) if lat.size else float("nan")
+        ),
+        "latency_p99_ms": (
+            float(np.percentile(lat, 99)) if lat.size else float("nan")
+        ),
         "dispatches": stats["dispatches"],
         "padded_slots": stats["padded_slots"],
         "jit_traces": traces,
     }
+    if deadline_ms > 0 or fault_rate > 0:
+        rec["deadline_ms"] = deadline_ms
+        rec["fault_rate"] = fault_rate
+        rec["shed"] = stats["shed"]
+        rec["failed"] = stats["failed"]
+        rec["retried"] = stats["retried"]
+        rec["dispatch_failures"] = stats["dispatch_failures"]
+    return rec
 
 
 def mixed_stream_check(requests: int = 12, seed: int = 3) -> dict:
@@ -179,6 +219,12 @@ def main(argv=None) -> int:
     ap.add_argument("--n", type=int, default=256)
     ap.add_argument("--t", type=int, default=6)
     ap.add_argument("--v", type=int, default=30)
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request deadline; goodput counts only "
+                         "deadline-met requests (0 = no deadline)")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="Bernoulli transient-raise rate per dispatch "
+                         "via the fault injector (0 = no faults)")
     args = ap.parse_args(argv)
     if args.ci_smoke:
         rec = run_ci_smoke(args.out, batch=args.batch,
@@ -187,7 +233,8 @@ def main(argv=None) -> int:
             print(f"[FAIL] {msg}", file=sys.stderr)
         return 1 if rec["failures"] else 0
     rec = bench(args.n, args.t, args.v, batch=args.batch,
-                requests=args.requests, repeats=args.repeats)
+                requests=args.requests, repeats=args.repeats,
+                deadline_ms=args.deadline_ms, fault_rate=args.fault_rate)
     print(json.dumps(rec, indent=1))
     return 0
 

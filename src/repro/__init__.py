@@ -26,7 +26,11 @@ _config.update("jax_enable_x64", True)
 __version__ = "0.2.0"
 
 from repro.errors import (  # noqa: E402
+    BackendFailedError,
+    DeadlineExceededError,
+    EngineError,
     PlanError,
+    QueueFullError,
     UnknownKnobError,
     UnservableConfigError,
 )
@@ -64,6 +68,10 @@ def verify_plan(pl, **kwargs):
 
 __all__ = [
     "BACKENDS",
+    "BackendFailedError",
+    "DeadlineExceededError",
+    "EngineError",
+    "QueueFullError",
     "SCHEDULES",
     "WIDTHS",
     "Plan",

@@ -1,4 +1,5 @@
-"""Structured plan-time error taxonomy (PR 7).
+"""Structured error taxonomy: plan-time rejections (PR 7) and
+serving-time failures (PR 8).
 
 Every rejection in :func:`repro.plan` raises one of these instead of a
 bare ``ValueError`` so callers (and serving front ends) can react to the
@@ -16,6 +17,22 @@ bare ``ValueError`` so callers (and serving front ends) can react to the
 All three carry the offending ``knob`` name, the rejected ``value`` and
 a tuple of nearest valid ``alternatives`` (may be empty when nothing is
 close).
+
+The serving layer (:mod:`repro.serve.crypto_engine`) has its own branch:
+a request that cannot be served is *resolved* with one of these — its
+future carries the error, it is never silently dropped:
+
+* :class:`EngineError` — base class; subclasses ``RuntimeError`` (these
+  are execution-time conditions, not configuration mistakes).
+* :class:`QueueFullError` — bounded-submission-queue backpressure: the
+  blocking ``submit(timeout=)`` expired while the queue stayed full.
+  The only taxonomy member *raised at* the caller rather than stored on
+  a future (the request was never admitted, so no future exists).
+* :class:`DeadlineExceededError` — admission control shed the request:
+  its deadline passed, or could not be met, before dispatch.
+* :class:`BackendFailedError` — every dispatch attempt (bounded retry +
+  backend degradation) failed; the last underlying exception rides in
+  ``__cause__`` and the attribute fields say where it died.
 """
 from __future__ import annotations
 
@@ -57,3 +74,91 @@ class UnknownKnobError(PlanError):
 
 class UnservableConfigError(PlanError):
     """Individually-valid knobs combine into a config no datapath serves."""
+
+
+class EngineError(RuntimeError):
+    """A request failed at serving time (see module docstring).
+
+    Attributes
+    ----------
+    request_seq:
+        The engine-assigned submission sequence number of the affected
+        request, or ``None`` when the failure is not per-request
+        (``QueueFullError`` — the request was never admitted).
+    """
+
+    def __init__(self, message: str, *, request_seq: int | None = None) -> None:
+        super().__init__(message)
+        self.request_seq = request_seq
+
+
+class QueueFullError(EngineError):
+    """The bounded submission queue stayed full past the submit timeout.
+
+    Attributes
+    ----------
+    queue_depth:
+        Queued requests at the moment the timeout expired.
+    max_pending:
+        The engine's configured bound.
+    """
+
+    def __init__(
+        self, message: str, *, queue_depth: int = 0, max_pending: int = 0
+    ) -> None:
+        super().__init__(message)
+        self.queue_depth = queue_depth
+        self.max_pending = max_pending
+
+
+class DeadlineExceededError(EngineError):
+    """Admission control shed the request: its deadline passed (or the
+    estimated service time could not meet it) before dispatch.
+
+    Attributes
+    ----------
+    deadline_s:
+        The absolute deadline (engine clock) the request carried.
+    late_s:
+        How far past (or, for a cannot-be-met shed, short of) the
+        deadline the shed decision fell, in seconds (>= 0).
+    """
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        request_seq: int | None = None,
+        deadline_s: float = 0.0,
+        late_s: float = 0.0,
+    ) -> None:
+        super().__init__(message, request_seq=request_seq)
+        self.deadline_s = deadline_s
+        self.late_s = late_s
+
+
+class BackendFailedError(EngineError):
+    """Every dispatch attempt for the request failed — bounded retries
+    (and any backend degradation the bucket's circuit breaker performed)
+    included.  The final underlying exception is chained as
+    ``__cause__``.
+
+    Attributes
+    ----------
+    backend:
+        The backend string of the last attempted dispatch.
+    attempts:
+        Dispatch attempts this request rode before being failed.
+    """
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        request_seq: int | None = None,
+        backend: str = "",
+        attempts: int = 0,
+    ) -> None:
+        super().__init__(message, request_seq=request_seq)
+        self.backend = backend
+        self.attempts = attempts

@@ -13,6 +13,12 @@ and the bucket/trace accounting.
 Mesh mode: ``--mesh 2x2`` shards dispatches over a (data, model) host
 mesh — run under ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
 (or on real multi-device hardware).  int64-width presets only.
+
+Robustness knobs (PR 8): ``--deadline-ms`` sheds late requests with a
+typed error, ``--max-pending`` bounds the queue (backpressure), and
+``--async-dispatch`` serves from the engine's background dispatcher
+thread; the summary reports goodput and the shed/retry/breaker
+counters next to throughput.
 """
 from __future__ import annotations
 
@@ -71,9 +77,11 @@ def make_traffic(plans, requests: int, rate: float, rng) -> list:
     return out
 
 
-def drive(eng: PolymulEngine, traffic) -> list:
+def drive(eng: PolymulEngine, traffic, *, deadline_s=None) -> list:
     """Open-loop event pump: submit each request at its arrival time,
-    stepping the engine whenever work is pending.  Returns futures."""
+    stepping the engine whenever work is pending (with the background
+    dispatcher running, submission is all this loop does).  Returns
+    futures."""
     futs = []
     i = 0
     t0 = time.perf_counter()
@@ -81,12 +89,16 @@ def drive(eng: PolymulEngine, traffic) -> list:
         now = time.perf_counter() - t0
         while i < len(traffic) and traffic[i][0] <= now:
             _, pl, za, zb = traffic[i]
-            futs.append(eng.submit(pl, za, zb))
+            futs.append(eng.submit(pl, za, zb, deadline=deadline_s))
             i += 1
-        if eng.pending():
+        if eng.running:
+            time.sleep(1e-3)
+        elif eng.pending():
             eng.step()
         elif i < len(traffic):
             time.sleep(min(traffic[i][0] - now, 1e-3))
+    if eng.running:
+        eng.run_until_idle()
     return futs
 
 
@@ -104,11 +116,21 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--donate", action="store_true",
                     help="donate operand buffers to XLA per dispatch")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request deadline; late requests are shed "
+                         "with DeadlineExceededError (0 = none)")
+    ap.add_argument("--max-pending", type=int, default=0,
+                    help="bound the submission queue (0 = unbounded); "
+                         "submit then blocks for space")
+    ap.add_argument("--async-dispatch", action="store_true",
+                    help="serve from the background dispatcher thread "
+                         "instead of stepping inline")
     args = ap.parse_args(argv)
 
     mesh = build_mesh(args.mesh) if args.mesh else None
     eng = PolymulEngine(batch_slots=args.slots, mesh=mesh,
-                        donate=args.donate)
+                        donate=args.donate,
+                        max_pending=args.max_pending or None)
     plans = [eng.plan(**parse_preset(s)) for s in args.presets.split(",")]
     rng = np.random.default_rng(args.seed)
 
@@ -118,24 +140,37 @@ def main(argv=None) -> int:
         shape = (pl.n, pl.config.seg_count)
         eng.submit(pl, np.zeros(shape, np.int64), np.zeros(shape, np.int64))
     eng.run_until_idle()
-    for k in eng.stats:
-        eng.stats[k] = 0
+    eng.reset_stats()
 
+    if args.async_dispatch:
+        eng.start()
     traffic = make_traffic(plans, args.requests, args.rate, rng)
+    deadline_s = args.deadline_ms / 1e3 if args.deadline_ms > 0 else None
     t0 = time.perf_counter()
-    futs = drive(eng, traffic)
+    futs = drive(eng, traffic, deadline_s=deadline_s)
     wall = time.perf_counter() - t0
+    if args.async_dispatch:
+        eng.stop()
 
-    lat = np.array([f.latency_s for f in futs]) * 1e3
-    served = eng.stats["served"]
-    print(f"served {served} requests in {wall:.3f}s "
-          f"({served / wall:.1f} req/s)")
-    print(f"latency p50={np.percentile(lat, 50):.2f}ms "
-          f"p99={np.percentile(lat, 99):.2f}ms")
-    print(f"dispatches={eng.stats['dispatches']} "
-          f"padded_slots={eng.stats['padded_slots']} "
+    snap = eng.snapshot()
+    ok = [f for f in futs if f.exception() is None]
+    served = snap["served"]
+    print(f"served {served}/{len(futs)} requests in {wall:.3f}s "
+          f"({served / wall:.1f} req/s, goodput {len(ok) / wall:.1f} "
+          f"req/s)")
+    if ok:
+        lat = np.array([f.latency_s for f in ok]) * 1e3
+        print(f"latency p50={np.percentile(lat, 50):.2f}ms "
+              f"p99={np.percentile(lat, 99):.2f}ms")
+    print(f"dispatches={snap['dispatches']} "
+          f"padded_slots={snap['padded_slots']} "
           f"jit_traces={eng.trace_count} "
           f"buckets={len({api.plan_key(p) for p in plans})}")
+    print(f"shed={snap['shed']} retried={snap['retried']} "
+          f"failed={snap['failed']} rejected={snap['rejected']} "
+          f"dispatch_failures={snap['dispatch_failures']} "
+          f"breaker_opened={snap['breaker_opened']} "
+          f"breaker_recovered={snap['breaker_recovered']}")
     if mesh is not None:
         print(f"mesh axes={dict(mesh.shape)}")
     return 0

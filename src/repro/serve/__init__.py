@@ -1,18 +1,26 @@
 """Serving engines: the LM slot-batching decode engine and the crypto
 polymul batching engine (shape-bucketed continuous batching over the
-plan/execute API, DESIGN §8)."""
+plan/execute API, DESIGN §8), plus the deterministic fault-injection
+harness that soaks the engine's failure semantics."""
 from repro.serve.crypto_engine import (
+    FALLBACK_NEXT,
     PolymulEngine,
     PolymulFuture,
     negacyclic_mul_sharded,
     polymul_sharded,
 )
 from repro.serve.engine import Engine
+from repro.serve.faults import FaultInjector, FaultRule, InjectedFault, spot_check
 
 __all__ = [
     "Engine",
+    "FALLBACK_NEXT",
+    "FaultInjector",
+    "FaultRule",
+    "InjectedFault",
     "PolymulEngine",
     "PolymulFuture",
     "negacyclic_mul_sharded",
     "polymul_sharded",
+    "spot_check",
 ]

@@ -1,12 +1,16 @@
-"""Batched HE-polymul serving engine: shape-bucketed continuous batching
-and mesh-sharded execution over the plan/execute API.
+"""Batched HE-polymul serving engine: shape-bucketed continuous batching,
+mesh-sharded execution, and fault-tolerant async serving over the
+plan/execute API.
 
 The paper's pitch is *low latency and high sample rate* — the
 feed-forward PaReNTT datapath "can be pipelined at arbitrary levels" —
 and the GPU-HE literature (Shivdikar et al., accelerating polynomial
 multiplication on GPUs) locates the real throughput in batching many
-residue-polynomial products into one device dispatch.  This module is
-that serving layer for the reproduction:
+residue-polynomial products into one device dispatch.  The FIFO-pipelined
+and hazard-free dataflow NTT architectures (arXiv 2501.11867,
+2410.04805) get their *sustained* rates from bounded in-flight occupancy
+and stall-free hazard handling; this module is the software analogue of
+both halves:
 
 * **Shape buckets.**  Requests arrive with heterogeneous plans; the
   frozen, hashable :class:`repro.api.PlanConfig` (``api.plan_key``) is
@@ -16,38 +20,64 @@ that serving layer for the reproduction:
   (asserted by the trace-count probe in ``tests/test_serve_crypto.py``).
 * **Fixed batch slots.**  Each dispatch pads its bucket's pending
   requests to ``batch_slots`` rows with zero polynomials, so the
-  compiled executable sees ONE static shape per config (continuous-
-  batching admission, same slot discipline as the LM
-  :class:`repro.serve.engine.Engine`).  Zero rows are dead weight, not
-  a correctness hazard: results are sliced back per request.
+  compiled executable sees ONE static shape per config.  Zero rows are
+  dead weight, not a correctness hazard: results are sliced back per
+  request.
+* **Deadlines, priorities, EDF.**  ``submit(..., deadline=, priority=)``
+  attaches scheduling metadata; dispatch picks the bucket whose head
+  request is earliest-deadline-first (deadline-less requests order FIFO
+  behind any deadline, priority breaks ties).  Admission control sheds
+  requests whose deadline has passed or cannot be met — each shed
+  future resolves with :class:`repro.errors.DeadlineExceededError`,
+  never silently dropped.
+* **Backpressure.**  ``max_pending=`` bounds the submission queue;
+  ``submit(timeout=)`` blocks for space (raising
+  :class:`repro.errors.QueueFullError` on expiry) and ``try_submit``
+  returns ``None`` instead of waiting.
+* **Failure semantics.**  A dispatch that raises fails or requeues
+  exactly the popped requests: bounded per-request retries with
+  exponential per-bucket backoff, then
+  :class:`repro.errors.BackendFailedError` (underlying exception
+  chained as ``__cause__``).  Every admitted request resolves exactly
+  once — a value or a typed :class:`repro.errors.EngineError`.
+* **Circuit breaker / degradation.**  ``breaker_threshold`` consecutive
+  dispatch failures re-plan the bucket one step down the backend
+  fallback chain (``pallas_fused_e2e -> pallas -> jnp``) via
+  :func:`repro.api.plan` with the same ``n/t/v``, so degraded results
+  stay bit-exact; after ``breaker_cooldown_s`` the next dispatch probes
+  the original backend and restores it on success.
+* **Async front end.**  ``start()`` launches a background dispatcher
+  thread driving :meth:`PolymulEngine.step`; submission then overlaps
+  host batching with device execution and futures support
+  ``result(timeout=)`` blocking waits.  The synchronous
+  ``step()``/``run_until_idle()`` closed loop keeps working unchanged.
 * **Mesh mode.**  With ``mesh=``, dispatches run
-  :func:`polymul_sharded`: decompose/compose ride GSPMD on the
-  data-parallel batch edges while the heavy residue cascade runs under
-  an explicit ``shard_map`` — the RNS channel axis of
-  ``repro.negacyclic_mul`` over ``model`` (the paper's t parallel
-  datapaths mapped to t parallel shards) and the batch axis over
-  ``data``.  The plan's table leaves are sliced per shard by the same
-  ``shard_map`` (``partition.plan_leaf_specs``), which is exactly what
-  the leaf-threaded ops layer (DESIGN §7) exists for: each shard's
-  kernels bind the NTT/Shoup/CRT tables of its own channels, not jit
-  constants.
+  :func:`polymul_sharded`: the RNS channel axis of the residue cascade
+  shard_maps over ``model`` and the batch axis over ``data``, with the
+  plan's table leaves sliced per shard (``partition.plan_leaf_specs``)
+  — the leaf-threaded ops layer (DESIGN §7) at work.
 
 Usage::
 
-    eng = PolymulEngine(batch_slots=8)
-    pl = eng.plan(n=4096, t=6, v=30)
-    fut = eng.submit(pl, za, zb)      # za, zb: (n, S) segment arrays
-    eng.run_until_idle()
-    limbs = fut.result()              # (n, L)
+    eng = PolymulEngine(batch_slots=8, max_pending=64)
+    with eng:                               # background dispatcher
+        pl = eng.plan(n=4096, t=6, v=30)
+        fut = eng.submit(pl, za, zb, deadline=0.5)   # za, zb: (n, S)
+        limbs = fut.result(timeout=5.0)     # (n, L), or raises EngineError
 
-Driver entry points: ``launch/serve_crypto.py`` (synthetic mixed-preset
-traffic, Poisson arrivals) and ``benchmarks/serve_throughput.py`` (the
-``serve-smoke`` CI gate: batched throughput >= the unbatched loop).
+Fault injection for soak testing wraps ``engine.executor``
+(:mod:`repro.serve.faults`); the soak driver is
+``launch/serve_soak.py`` and the throughput benchmark
+``benchmarks/serve_throughput.py`` (the ``serve-smoke`` /
+``serve-soak`` CI gates).
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
+import math
+import threading
 import time
 from collections import deque
 
@@ -57,10 +87,16 @@ import numpy as np
 
 from repro import api
 from repro.compat import shard_map
+from repro.errors import (
+    BackendFailedError,
+    DeadlineExceededError,
+    QueueFullError,
+)
 from repro.sharding import ctx as ctx_mod
 from repro.sharding import partition
 
 __all__ = [
+    "FALLBACK_NEXT",
     "PolymulEngine",
     "PolymulFuture",
     "negacyclic_mul_sharded",
@@ -173,33 +209,97 @@ def polymul_sharded(pl: api.Plan, za, zb, *, mesh):
 
 
 class PolymulFuture:
-    """Handle for one submitted product.  Resolved when the engine
-    dispatches the request's micro-batch; ``latency_s`` then holds the
-    submit-to-result wall time (what the throughput benchmark's
-    p50/p99 columns aggregate)."""
+    """Handle for one submitted product, with a three-state lifecycle:
 
-    __slots__ = ("_value", "_done", "latency_s")
+    ``PENDING`` (queued or in flight) -> ``DONE`` (``result()`` returns
+    the ``(n, L)`` limb array; ``latency_s`` holds submit-to-resolve
+    wall time) or ``FAILED`` (``result()`` re-raises the stored
+    :class:`repro.errors.EngineError`; ``exception()`` returns it).
+
+    ``result(timeout=)``/``exception(timeout=)`` block up to ``timeout``
+    seconds for resolution (raising ``TimeoutError`` on expiry).  With
+    no timeout, a future submitted while the engine's background
+    dispatcher is running blocks until resolved; otherwise an unserved
+    future raises immediately — drive the engine (``step()`` /
+    ``run_until_idle()``).  A future resolves exactly once; a second
+    resolution attempt is an engine bug and raises.
+    """
+
+    PENDING = "PENDING"
+    DONE = "DONE"
+    FAILED = "FAILED"
+
+    __slots__ = (
+        "_value", "_exc", "_state", "_event", "_async",
+        "latency_s", "dispatch_index",
+    )
 
     def __init__(self):
         self._value = None
-        self._done = False
+        self._exc = None
+        self._state = PolymulFuture.PENDING
+        self._event = threading.Event()
+        self._async = False
         self.latency_s = None
+        self.dispatch_index = None  # executor call index that resolved it
+
+    @property
+    def state(self) -> str:
+        return self._state
 
     def done(self) -> bool:
-        return self._done
+        return self._state != PolymulFuture.PENDING
 
-    def result(self):
-        if not self._done:
+    def exception(self, timeout: float | None = None):
+        """The stored EngineError of a FAILED future, None when DONE."""
+        self._wait(timeout)
+        return self._exc
+
+    def result(self, timeout: float | None = None):
+        self._wait(timeout)
+        if self._state == PolymulFuture.DONE:
+            return self._value
+        if self._state == PolymulFuture.FAILED:
+            raise self._exc
+        raise RuntimeError(
+            "request not served yet — drive the engine "
+            "(step() / run_until_idle()), or pass result(timeout=)"
+        )
+
+    def _wait(self, timeout: float | None) -> None:
+        if self._state != PolymulFuture.PENDING:
+            return
+        if timeout is not None:
+            if not self._event.wait(timeout):
+                raise TimeoutError(
+                    f"request still PENDING after {timeout}s"
+                )
+        elif self._async:
+            self._event.wait()
+
+    # -- engine side ---------------------------------------------------
+    def _check_unresolved(self) -> None:
+        if self._state != PolymulFuture.PENDING:
             raise RuntimeError(
-                "request not served yet — drive the engine "
-                "(step() / run_until_idle())"
+                f"future resolved twice (state={self._state}) — "
+                f"engine invariant violation"
             )
-        return self._value
 
-    def _set(self, value, latency_s: float):
+    def _resolve(self, value, latency_s: float, dispatch_index=None):
+        self._check_unresolved()
         self._value = value
         self.latency_s = latency_s
-        self._done = True
+        self.dispatch_index = dispatch_index
+        self._state = PolymulFuture.DONE
+        self._event.set()
+
+    def _fail(self, exc: Exception, latency_s=None, dispatch_index=None):
+        self._check_unresolved()
+        self._exc = exc
+        self.latency_s = latency_s
+        self.dispatch_index = dispatch_index
+        self._state = PolymulFuture.FAILED
+        self._event.set()
 
 
 @dataclasses.dataclass
@@ -209,12 +309,57 @@ class _Request:
     future: PolymulFuture
     seq: int
     t_submit: float
+    deadline: float | None = None  # absolute engine-clock deadline
+    priority: int = 0  # higher dispatches sooner among equal deadlines
+    attempts: int = 0  # failed dispatch attempts ridden so far
+
+
+def _order_key(req: _Request) -> tuple:
+    """Heap key: earliest deadline first (deadline-less requests sort
+    behind every deadline), then priority (higher first), then FIFO."""
+    dl = req.deadline if req.deadline is not None else math.inf
+    return (dl, -req.priority, req.seq)
 
 
 @dataclasses.dataclass
 class _Bucket:
-    plan: api.Plan
-    queue: deque = dataclasses.field(default_factory=deque)
+    """One PlanConfig's queue + breaker state.  ``chain[0]`` is the
+    original plan; ``chain[level]`` is the currently-active (possibly
+    degraded) plan.  ``failures`` counts consecutive dispatch failures
+    at the current level; ``not_before`` is the backoff gate."""
+
+    key: api.PlanConfig
+    chain: list  # [Plan, ...] original + lazily-built fallbacks
+    heap: list = dataclasses.field(default_factory=list)
+    level: int = 0
+    failures: int = 0
+    not_before: float = 0.0
+    opened_at: float = 0.0  # when the breaker last opened / probe failed
+    ewma_service_s: float = 0.0
+
+    def push(self, req: _Request) -> None:
+        heapq.heappush(self.heap, (*_order_key(req), req))
+
+    def pop(self) -> _Request:
+        return heapq.heappop(self.heap)[3]
+
+    @property
+    def plan(self) -> api.Plan:  # the original, pre-degradation plan
+        return self.chain[0]
+
+    @property
+    def active_plan(self) -> api.Plan:
+        return self.chain[self.level]
+
+
+# Backend degradation chain (circuit breaker): each entry's fallback is
+# strictly simpler/more portable; all entries are bit-exact vs each
+# other (tests/test_backends.py), so degrading never changes results.
+FALLBACK_NEXT = {
+    "pallas_fused_e2e": "pallas",
+    "pallas_fused": "pallas",
+    "pallas": "jnp",
+}
 
 
 # --------------------------------------------------------------------------
@@ -223,27 +368,51 @@ class _Bucket:
 
 
 class PolymulEngine:
-    """Shape-bucketed continuous-batching engine over the Plan API.
+    """Shape-bucketed continuous-batching engine over the Plan API, with
+    deadline/priority scheduling, bounded-queue backpressure, bounded
+    retry, per-bucket circuit breaking onto fallback backends, and an
+    optional background dispatcher thread (see module docstring).
 
     Parameters
     ----------
     batch_slots:
         Fixed rows per dispatch.  Every micro-batch is padded to this
         many polynomials, so each distinct ``PlanConfig`` compiles ONE
-        executable (shape stability is what makes the trace count ==
-        the config count).
+        executable.
     mesh:
         Optional ``jax.sharding.Mesh`` with ``model``/data axes; when
         set, dispatches run :func:`polymul_sharded`.  ``batch_slots``
         must divide the data axes so the padded batch always shards.
     donate:
         Donate the padded operand buffers to XLA (they are rebuilt per
-        dispatch, so nothing reads them back); the serving hot-loop
-        counterpart of ``api.execute(donate=True)``.
+        dispatch, so nothing reads them back).
+    max_pending:
+        Bound on queued (not yet dispatched) requests; ``None`` (the
+        default) leaves the queue unbounded.  With a bound set,
+        ``submit`` blocks for space and ``try_submit`` returns ``None``
+        when full.
+    max_retries:
+        How many times one request may be re-queued after a failed
+        dispatch before its future fails with ``BackendFailedError``
+        (probe dispatches of the original backend don't count).
+    breaker_threshold:
+        Consecutive dispatch failures at the bucket's current backend
+        before the circuit breaker degrades it one step down
+        ``FALLBACK_NEXT``.
+    breaker_cooldown_s:
+        How long a degraded bucket serves its fallback before the next
+        dispatch probes the original backend again.
+    backoff_base_s:
+        Base of the per-bucket exponential dispatch backoff
+        (``base * 2^(failures-1)``, capped at 1 s).
     """
 
     def __init__(self, *, batch_slots: int = 8, mesh=None,
-                 donate: bool = False):
+                 donate: bool = False, max_pending: int | None = None,
+                 max_retries: int = 3, breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 1.0,
+                 backoff_base_s: float = 0.01,
+                 latency_window: int = 4096):
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
         if mesh is not None:
@@ -253,17 +422,45 @@ class PolymulEngine:
                     f"batch_slots={batch_slots} must divide the mesh's "
                     f"data axes ({bsize}-way) so padded batches shard"
                 )
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        if breaker_threshold < 1:
+            raise ValueError(
+                f"breaker_threshold must be >= 1, got {breaker_threshold}"
+            )
         self.batch_slots = batch_slots
         self.mesh = mesh
+        self.max_pending = max_pending
+        self.max_retries = max_retries
+        self.breaker_threshold = breaker_threshold
+        self.breaker_cooldown_s = breaker_cooldown_s
+        self.backoff_base_s = backoff_base_s
         self._plans: dict[api.PlanConfig, api.Plan] = {}
         self._buckets: dict[api.PlanConfig, _Bucket] = {}
         self._seq = itertools.count()
         self._trace_log: list[api.PlanConfig] = []
+        self._cond = threading.Condition()
+        self._thread: threading.Thread | None = None
+        self._stop_evt = threading.Event()
+        self._loop_error: BaseException | None = None
+        self._inflight = 0
+        self._dispatch_seq = 0  # executor call counter (success + failure)
+        self._latencies: deque = deque(maxlen=latency_window)
         self.stats = {
             "submitted": 0,
             "served": 0,
             "dispatches": 0,
             "padded_slots": 0,
+            "rejected": 0,  # backpressure: never admitted (no future)
+            "shed": 0,  # resolved with DeadlineExceededError
+            "retried": 0,  # request requeues after failed dispatches
+            "failed": 0,  # resolved with BackendFailedError
+            "dispatch_failures": 0,
+            "breaker_opened": 0,
+            "breaker_recovered": 0,
+            "probes": 0,
         }
 
         def _run(pl, za, zb):
@@ -277,6 +474,11 @@ class PolymulEngine:
         self._exec = jax.jit(
             _run, donate_argnums=(1, 2) if donate else ()
         )
+        # The raw batch executor; fault injectors and tests wrap THIS
+        # attribute (repro.serve.faults.FaultInjector.install).  Every
+        # dispatch goes through it, so a wrapper sees one call per
+        # engine dispatch attempt in dispatch-index order.
+        self.executor = self._execute_batch
 
     # -- plan cache ----------------------------------------------------
     def plan(self, n: int = 4096, t: int = 6, v: int = 30, **kw) -> api.Plan:
@@ -287,10 +489,7 @@ class PolymulEngine:
         return self._plans.setdefault(api.plan_key(pl), pl)
 
     # -- request intake ------------------------------------------------
-    def submit(self, pl: api.Plan, za, zb) -> PolymulFuture:
-        """Enqueue one product ``a * b`` under plan ``pl``.  ``za``,
-        ``zb``: ``(n, S)`` base-2^v segment arrays.  Returns a
-        :class:`PolymulFuture`; drive the engine to resolve it."""
+    def _validate_submit(self, pl, za, zb):
         cfg = api.plan_key(pl)
         za = np.asarray(za)
         zb = np.asarray(zb)
@@ -304,7 +503,7 @@ class PolymulEngine:
         if self.mesh is not None:
             # Mirror the sharded-dispatch preconditions HERE: step()
             # pops requests before dispatching, so a config that can
-            # only fail at trace time would lose its popped requests.
+            # only fail at trace time would burn retries for nothing.
             if cfg.width != "int64":
                 raise ValueError(
                     f"mesh mode serves int64-width plans only "
@@ -317,68 +516,384 @@ class PolymulEngine:
                     f"the model axis ({msize}-way); pick t a multiple "
                     f"of it or shrink the axis"
                 )
+        return cfg, za, zb
+
+    def _enqueue_locked(self, cfg, pl, za, zb, deadline, priority,
+                        now: float) -> PolymulFuture:
         bucket = self._buckets.get(cfg)
         if bucket is None:
             bucket = self._buckets[cfg] = _Bucket(
-                plan=self._plans.setdefault(cfg, pl)
+                key=cfg, chain=[self._plans.setdefault(cfg, pl)]
             )
         fut = PolymulFuture()
-        bucket.queue.append(
-            _Request(za, zb, fut, next(self._seq), time.perf_counter())
+        fut._async = self._thread is not None
+        req = _Request(
+            za=za, zb=zb, future=fut, seq=next(self._seq), t_submit=now,
+            deadline=(now + deadline) if deadline is not None else None,
+            priority=priority,
         )
         self.stats["submitted"] += 1
+        if req.deadline is not None and req.deadline <= now:
+            # dead on arrival: admission control resolves it, queue
+            # untouched (typed error, never a silent drop)
+            self.stats["shed"] += 1
+            fut._fail(
+                DeadlineExceededError(
+                    f"deadline expired {now - req.deadline:.6f}s before "
+                    f"admission (seq {req.seq})",
+                    request_seq=req.seq, deadline_s=req.deadline,
+                    late_s=now - req.deadline,
+                ),
+                latency_s=0.0,
+            )
+            return fut
+        bucket.push(req)
+        self._cond.notify_all()
         return fut
 
+    def submit(self, pl: api.Plan, za, zb, *, deadline: float | None = None,
+               priority: int = 0,
+               timeout: float | None = None) -> PolymulFuture:
+        """Enqueue one product ``a * b`` under plan ``pl``.  ``za``,
+        ``zb``: ``(n, S)`` base-2^v segment arrays.  ``deadline`` is
+        seconds from now; a request that cannot dispatch in time is shed
+        (future fails with ``DeadlineExceededError``).  ``priority``
+        orders equal-deadline requests (higher first).  When the queue
+        is bounded and full, blocks up to ``timeout`` seconds for space
+        (forever if ``timeout`` is None — pass a timeout or use
+        :meth:`try_submit` when nothing else drives the engine), then
+        raises :class:`repro.errors.QueueFullError`.  Returns a
+        :class:`PolymulFuture`; drive the engine (or run the background
+        dispatcher) to resolve it."""
+        cfg, za, zb = self._validate_submit(pl, za, zb)
+        t_end = None if timeout is None else time.perf_counter() + timeout
+        with self._cond:
+            while (self.max_pending is not None
+                   and self._pending_locked() >= self.max_pending):
+                remaining = (
+                    None if t_end is None else t_end - time.perf_counter()
+                )
+                if remaining is not None and remaining <= 0:
+                    self.stats["rejected"] += 1
+                    raise QueueFullError(
+                        f"submission queue full "
+                        f"({self._pending_locked()} >= "
+                        f"max_pending={self.max_pending}) after "
+                        f"{timeout}s",
+                        queue_depth=self._pending_locked(),
+                        max_pending=self.max_pending,
+                    )
+                # bounded wait so a missed notify cannot wedge a waiter
+                self._cond.wait(0.05 if remaining is None
+                                else min(remaining, 0.05))
+            return self._enqueue_locked(
+                cfg, pl, za, zb, deadline, priority, time.perf_counter()
+            )
+
+    def try_submit(self, pl: api.Plan, za, zb, *,
+                   deadline: float | None = None,
+                   priority: int = 0) -> PolymulFuture | None:
+        """Non-blocking :meth:`submit`: returns ``None`` (and counts a
+        rejection) instead of waiting when the bounded queue is full."""
+        cfg, za, zb = self._validate_submit(pl, za, zb)
+        with self._cond:
+            if (self.max_pending is not None
+                    and self._pending_locked() >= self.max_pending):
+                self.stats["rejected"] += 1
+                return None
+            return self._enqueue_locked(
+                cfg, pl, za, zb, deadline, priority, time.perf_counter()
+            )
+
+    def _pending_locked(self) -> int:
+        return sum(len(b.heap) for b in self._buckets.values())
+
     def pending(self) -> int:
-        return sum(len(b.queue) for b in self._buckets.values())
+        with self._cond:
+            return self._pending_locked()
+
+    def _has_work_locked(self) -> bool:
+        return self._inflight > 0 or any(
+            b.heap for b in self._buckets.values()
+        )
+
+    # -- execution -----------------------------------------------------
+    def _execute_batch(self, pl: api.Plan, za, zb):
+        """The raw dispatch executor: one padded micro-batch through the
+        plan's datapath.  ``self.executor`` points here unless a fault
+        injector (or test double) wrapped it."""
+        if api.plan_key(pl).width == "oracle":
+            # Host-only width: no tracing — runs the exact bigint path.
+            return np.asarray(api.polymul(pl, za, zb))
+        return np.asarray(self._exec(pl, jnp.asarray(za), jnp.asarray(zb)))
+
+    def _fallback_plan(self, pl: api.Plan) -> api.Plan | None:
+        """The next plan down the degradation chain for ``pl`` — same
+        n/t/v (bit-exact results), one backend simpler — or ``None``
+        when the chain is exhausted / the width has no chain."""
+        cfg = api.plan_key(pl)
+        if cfg.width != "int64":
+            return None
+        nb = FALLBACK_NEXT.get(cfg.backend)
+        if nb is None:
+            return None
+        # Prefer carrying the frozen spec (identical tiling); if that
+        # combination is unservable on the fallback backend, let plan()
+        # re-resolve from the schedule kind.
+        for sched in (cfg.schedule, cfg.schedule.kind):
+            try:
+                return api.plan(
+                    n=cfg.n, t=cfg.t, v=cfg.v, backend=nb, schedule=sched,
+                    row_blk=cfg.row_blk, use_sau=cfg.use_sau,
+                )
+            except ValueError:
+                continue
+        return None
+
+    # -- scheduling ----------------------------------------------------
+    def _collect_expired(self) -> list[tuple[_Request, float]]:
+        """Pop every queued request whose deadline has already passed.
+        The heap orders by deadline first, so expired entries are always
+        at the head."""
+        out = []
+        now = time.perf_counter()
+        with self._cond:
+            for b in self._buckets.values():
+                while b.heap and b.heap[0][0] < now:
+                    out.append((b.pop(), now))
+            if out:
+                self.stats["shed"] += len(out)
+                self._cond.notify_all()  # queue space freed
+        return out
+
+    def _resolve_shed(self, items: list[tuple[_Request, float]]) -> int:
+        for req, now in items:
+            req.future._fail(
+                DeadlineExceededError(
+                    f"deadline missed before dispatch (seq {req.seq}, "
+                    f"{max(now - req.deadline, 0.0):.6f}s late)",
+                    request_seq=req.seq, deadline_s=req.deadline,
+                    late_s=max(now - req.deadline, 0.0),
+                ),
+                latency_s=now - req.t_submit,
+            )
+        return len(items)
+
+    def _select_locked(self, now: float):
+        """EDF bucket choice: among buckets whose backoff gate is open,
+        pick the one whose head request sorts first by
+        (deadline, -priority, seq).  Returns ``None`` (idle),
+        ``("defer", wake_at)`` (all live buckets backing off) or
+        ``("go", bucket, plan_to_use, probing)``."""
+        live = [b for b in self._buckets.values() if b.heap]
+        if not live:
+            return None
+        ready = [b for b in live if b.not_before <= now]
+        if not ready:
+            return ("defer", min(b.not_before for b in live))
+        bucket = min(ready, key=lambda b: b.heap[0][:3])
+        probing = (
+            bucket.level > 0
+            and now - bucket.opened_at >= self.breaker_cooldown_s
+        )
+        if probing:
+            self.stats["probes"] += 1
+            use_plan = bucket.chain[0]
+        else:
+            use_plan = bucket.active_plan
+        return ("go", bucket, use_plan, probing)
+
+    def _admit_locked(self, bucket: _Bucket):
+        """Pop up to ``batch_slots`` requests, shedding any whose
+        deadline cannot be met given the bucket's EWMA service time."""
+        now = time.perf_counter()
+        est = bucket.ewma_service_s
+        reqs, shed = [], []
+        while bucket.heap and len(reqs) < self.batch_slots:
+            req = bucket.pop()
+            if req.deadline is not None and now + est > req.deadline:
+                shed.append((req, now))
+            else:
+                reqs.append(req)
+        if shed:
+            self.stats["shed"] += len(shed)
+        if reqs or shed:
+            self._cond.notify_all()  # queue space freed
+        return reqs, shed
 
     # -- dispatch ------------------------------------------------------
     def step(self) -> int:
-        """Dispatch ONE micro-batch from the bucket whose head request
-        has waited longest (FIFO across buckets — latency fairness over
-        pure bucket packing).  Returns the number of requests served,
-        0 when idle."""
-        live = [b for b in self._buckets.values() if b.queue]
-        if not live:
-            return 0
-        bucket = min(live, key=lambda b: b.queue[0].seq)
-        k = min(len(bucket.queue), self.batch_slots)
-        reqs = [bucket.queue.popleft() for _ in range(k)]
-        cfg = api.plan_key(bucket.plan)
-        if cfg.width == "oracle":
-            # Host-only width: no tracing, no padding — zero rows would
-            # be pure wasted bigint work on the CPU.
-            za = np.stack([r.za for r in reqs])
-            zb = np.stack([r.zb for r in reqs])
-            out = np.asarray(api.polymul(bucket.plan, za, zb))
-            pad = 0
-        else:
-            B = self.batch_slots
-            za = np.zeros((B, cfg.n, cfg.seg_count), np.int64)
-            zb = np.zeros_like(za)
-            for i, r in enumerate(reqs):
-                za[i] = r.za
-                zb[i] = r.zb
-            out = np.asarray(
-                self._exec(bucket.plan, jnp.asarray(za), jnp.asarray(zb))
+        """Dispatch ONE micro-batch from the EDF-chosen bucket.  Returns
+        the number of requests *resolved* during the call — served,
+        shed, or failed; 0 when idle.  A dispatch that raises never
+        loses requests: the popped requests are requeued (bounded
+        retries, per-bucket backoff + circuit breaking) or their futures
+        fail with a typed error."""
+        resolved = self._resolve_shed(self._collect_expired())
+        while True:
+            with self._cond:
+                pick = self._select_locked(time.perf_counter())
+            if pick is None:
+                return resolved
+            if pick[0] == "defer":
+                if self._stop_evt.is_set():
+                    return resolved
+                time.sleep(
+                    min(max(pick[1] - time.perf_counter(), 0.0), 0.05)
+                )
+                resolved += self._resolve_shed(self._collect_expired())
+                continue
+            _, bucket, use_plan, probing = pick
+            with self._cond:
+                reqs, shed = self._admit_locked(bucket)
+                if reqs:
+                    self._inflight += len(reqs)
+            resolved += self._resolve_shed(shed)
+            if not reqs:
+                continue  # everything admitted this round was shed
+            with self._cond:
+                dispatch_idx = self._dispatch_seq
+                self._dispatch_seq += 1
+            cfg = api.plan_key(use_plan)
+            traces_before = len(self._trace_log)
+            t0 = time.perf_counter()
+            try:
+                if cfg.width == "oracle":
+                    za = np.stack([r.za for r in reqs])
+                    zb = np.stack([r.zb for r in reqs])
+                    out = np.asarray(self.executor(use_plan, za, zb))
+                    pad = 0
+                else:
+                    B = self.batch_slots
+                    za = np.zeros((B, cfg.n, cfg.seg_count), np.int64)
+                    zb = np.zeros_like(za)
+                    for i, r in enumerate(reqs):
+                        za[i] = r.za
+                        zb[i] = r.zb
+                    out = np.asarray(self.executor(use_plan, za, zb))
+                    pad = B - len(reqs)
+            except Exception as e:  # noqa: BLE001 — any dispatch failure
+                resolved += self._on_dispatch_failure(
+                    bucket, use_plan, probing, reqs, e
+                )
+                return resolved
+            # A dispatch that triggered a jit trace spent its wall time
+            # compiling; folding that into the EWMA would make the
+            # deadline admission shed everything behind it.
+            exec_s = (
+                time.perf_counter() - t0
+                if len(self._trace_log) == traces_before else None
             )
-            pad = B - k
+            resolved += self._on_dispatch_success(
+                bucket, probing, reqs, out, pad, dispatch_idx, exec_s
+            )
+            return resolved
+
+    def _on_dispatch_success(self, bucket, probing, reqs, out, pad,
+                             dispatch_idx, exec_s) -> int:
         now = time.perf_counter()
         for i, r in enumerate(reqs):
-            r.future._set(out[i], now - r.t_submit)
-        self.stats["dispatches"] += 1
-        self.stats["served"] += k
-        self.stats["padded_slots"] += pad
-        return k
+            r.future._resolve(out[i], now - r.t_submit,
+                              dispatch_index=dispatch_idx)
+        with self._cond:
+            self._inflight -= len(reqs)
+            bucket.failures = 0
+            bucket.not_before = 0.0
+            if probing and bucket.level > 0:
+                bucket.level = 0  # probe succeeded: breaker closes
+                self.stats["breaker_recovered"] += 1
+            if exec_s is not None:  # None: compile dispatch, not service
+                bucket.ewma_service_s = (
+                    exec_s if bucket.ewma_service_s == 0.0
+                    else 0.75 * bucket.ewma_service_s + 0.25 * exec_s
+                )
+            self.stats["dispatches"] += 1
+            self.stats["served"] += len(reqs)
+            self.stats["padded_slots"] += pad
+            for r in reqs:
+                self._latencies.append(now - r.t_submit)
+            self._cond.notify_all()
+        return len(reqs)
+
+    def _on_dispatch_failure(self, bucket, use_plan, probing, reqs,
+                             exc) -> int:
+        """Fail or requeue exactly the popped requests — never lose
+        them.  Non-probe failures advance the bucket's backoff and (at
+        the threshold) its circuit breaker; probe failures just restart
+        the cool-down without burning request retry budget."""
+        now = time.perf_counter()
+        failed: list[_Request] = []
+        with self._cond:
+            self._inflight -= len(reqs)
+            self.stats["dispatch_failures"] += 1
+            for r in reqs:
+                if not probing:
+                    r.attempts += 1
+                if r.attempts > self.max_retries:
+                    failed.append(r)
+                else:
+                    bucket.push(r)
+                    self.stats["retried"] += 1
+            self.stats["failed"] += len(failed)
+            if probing:
+                bucket.opened_at = now  # stay degraded, restart cooldown
+            else:
+                bucket.failures += 1
+                if (bucket.failures >= self.breaker_threshold
+                        and self._degrade_locked(bucket, now)):
+                    pass  # breaker opened: retry immediately on fallback
+                else:
+                    bucket.not_before = now + min(
+                        self.backoff_base_s * 2 ** (bucket.failures - 1),
+                        1.0,
+                    )
+            self._cond.notify_all()
+        backend = api.plan_key(use_plan).backend
+        for r in failed:
+            err = BackendFailedError(
+                f"request seq {r.seq} failed after {r.attempts} dispatch "
+                f"attempts (last backend {backend!r}): {exc}",
+                request_seq=r.seq, backend=backend, attempts=r.attempts,
+            )
+            err.__cause__ = exc
+            r.future._fail(err, latency_s=now - r.t_submit)
+        return len(failed)
+
+    def _degrade_locked(self, bucket: _Bucket, now: float) -> bool:
+        """Open the bucket's breaker: activate (building if needed) the
+        next plan down the fallback chain.  False when exhausted."""
+        if bucket.level + 1 >= len(bucket.chain):
+            nxt = self._fallback_plan(bucket.chain[bucket.level])
+            if nxt is None:
+                return False
+            bucket.chain.append(nxt)
+        bucket.level += 1
+        bucket.failures = 0
+        bucket.opened_at = now
+        bucket.not_before = 0.0
+        self.stats["breaker_opened"] += 1
+        return True
 
     def run_until_idle(self) -> int:
-        """Drain every bucket; returns total requests served."""
+        """Drain every bucket.  Synchronous mode: drives :meth:`step`
+        and returns the number of requests resolved.  With the
+        background dispatcher running: blocks until the queue and
+        in-flight work drain (returns 0; see ``stats``)."""
+        if self._thread is not None:
+            with self._cond:
+                while self._has_work_locked():
+                    if self._loop_error is not None:
+                        raise RuntimeError(
+                            "engine dispatcher thread died"
+                        ) from self._loop_error
+                    self._cond.wait(0.01)
+            return 0
         total = 0
         while True:
-            n = self.step()
-            if n == 0:
-                return total
-            total += n
+            total += self.step()
+            with self._cond:
+                if not self._has_work_locked():
+                    return total
 
     def serve(self, requests) -> list[np.ndarray]:
         """Convenience closed loop: submit ``(plan, za, zb)`` triples,
@@ -387,11 +902,105 @@ class PolymulEngine:
         self.run_until_idle()
         return [f.result() for f in futs]
 
+    # -- async front end -----------------------------------------------
+    def start(self) -> "PolymulEngine":
+        """Launch the background dispatcher thread (idempotent).  While
+        running, submissions are served without the caller driving
+        ``step()``, and new futures block in ``result()``."""
+        if self._thread is not None:
+            return self
+        self._stop_evt.clear()
+        self._loop_error = None
+        self._thread = threading.Thread(
+            target=self._dispatch_loop, name="polymul-engine-dispatch",
+            daemon=True,
+        )
+        self._thread.start()
+        return self
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None
+
+    def _dispatch_loop(self) -> None:
+        try:
+            while not self._stop_evt.is_set():
+                n = self.step()
+                if n == 0:
+                    with self._cond:
+                        if (not self._stop_evt.is_set()
+                                and not self._has_work_locked()):
+                            self._cond.wait(0.02)
+        except BaseException as e:  # surfaced by run_until_idle/stop
+            self._loop_error = e
+            with self._cond:
+                self._cond.notify_all()
+            raise
+
+    def stop(self, *, drain: bool = True,
+             timeout: float | None = None) -> None:
+        """Stop the dispatcher thread; with ``drain`` (default) first
+        wait until every queued request has resolved."""
+        if self._thread is None:
+            return
+        if drain:
+            self.run_until_idle()
+        self._stop_evt.set()
+        with self._cond:
+            self._cond.notify_all()
+        self._thread.join(timeout)
+        self._thread = None
+        if self._loop_error is not None:
+            err, self._loop_error = self._loop_error, None
+            raise RuntimeError("engine dispatcher thread died") from err
+
+    def __enter__(self) -> "PolymulEngine":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.stop(drain=exc_type is None)
+        return False
+
     # -- probes --------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Point-in-time stats: the counter dict plus queue depth,
+        in-flight count, p50/p99 submit-to-result latency (ms, over the
+        last ``latency_window`` served requests) and per-bucket active
+        backends — what the soak driver and CLIs gate on/report."""
+        with self._cond:
+            snap = dict(self.stats)
+            snap["queue_depth"] = self._pending_locked()
+            snap["inflight"] = self._inflight
+            if self._latencies:
+                lat = np.asarray(self._latencies) * 1e3
+                snap["latency_p50_ms"] = float(np.percentile(lat, 50))
+                snap["latency_p99_ms"] = float(np.percentile(lat, 99))
+            else:
+                snap["latency_p50_ms"] = None
+                snap["latency_p99_ms"] = None
+            snap["degraded_buckets"] = sum(
+                1 for b in self._buckets.values() if b.level > 0
+            )
+            snap["bucket_backends"] = {
+                f"n{c.n}_t{c.t}_v{c.v}_{c.backend}":
+                    api.plan_key(b.active_plan).backend
+                for c, b in self._buckets.items()
+            }
+        return snap
+
+    def reset_stats(self) -> None:
+        """Zero every counter and drop the latency window (benchmark
+        warm-up hygiene)."""
+        with self._cond:
+            for k in self.stats:
+                self.stats[k] = 0
+            self._latencies.clear()
+
     @property
     def trace_count(self) -> int:
         """Compilations of the engine executor so far; equals the
-        number of distinct PlanConfigs served (the bucket contract)."""
+        number of distinct PlanConfigs dispatched (the bucket contract —
+        breaker degradation adds one per newly-activated fallback)."""
         return len(self._trace_log)
 
     @property

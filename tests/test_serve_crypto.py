@@ -299,3 +299,219 @@ class TestMeshShardedCascade:
             eng.submit(pl, z, z)
         assert eng.pending() == 0
         assert eng.stats["submitted"] == 0
+
+
+class TestFailureSemantics:
+    """PR 8: the engine's robustness contract — no request is ever lost,
+    every future resolves exactly once with a value or a typed error."""
+
+    def _mk(self, pl, rng):
+        shape = (pl.n, pl.config.seg_count)
+        return (
+            rng.integers(0, 1 << pl.v, size=shape),
+            rng.integers(0, 1 << pl.v, size=shape),
+        )
+
+    def test_dispatch_failure_requeues_not_loses(self):
+        """THE regression for the request-loss bug: a dispatch that
+        raises must leave its popped requests requeued (futures still
+        pending and eventually served), not dropped with unresolvable
+        futures."""
+        rng = np.random.default_rng(0)
+        eng = PolymulEngine(batch_slots=4, backoff_base_s=1e-4)
+        pl = eng.plan(n=64, t=3, v=30)
+        raw = eng.executor
+        boom = {"left": 1}
+
+        def flaky(p, za, zb):
+            if boom["left"] > 0:
+                boom["left"] -= 1
+                raise RuntimeError("transient device fault")
+            return raw(p, za, zb)
+
+        eng.executor = flaky
+        reqs = [self._mk(pl, rng) for _ in range(3)]
+        futs = [eng.submit(pl, za, zb) for za, zb in reqs]
+        assert eng.step() == 0  # failed dispatch resolves nothing...
+        assert eng.pending() == 3  # ...and loses nothing
+        assert all(not f.done() for f in futs)
+        eng.run_until_idle()
+        for f, (za, zb) in zip(futs, reqs):
+            assert f.exception() is None
+            want = np.asarray(api.polymul(pl, za[None], zb[None]))[0]
+            assert np.array_equal(f.result(), want)
+        assert eng.stats["retried"] == 3
+        assert eng.stats["dispatch_failures"] == 1
+        assert eng.stats["served"] == 3
+
+    def test_retries_exhausted_fails_typed(self):
+        from repro.errors import BackendFailedError, EngineError
+
+        rng = np.random.default_rng(1)
+        eng = PolymulEngine(
+            batch_slots=2, max_retries=2, breaker_threshold=100,
+            backoff_base_s=1e-4,
+        )
+        pl = eng.plan(n=64, t=3, v=30)
+
+        def dead(p, za, zb):
+            raise RuntimeError("hard fault")
+
+        eng.executor = dead
+        fut = eng.submit(pl, *self._mk(pl, rng))
+        eng.run_until_idle()
+        exc = fut.exception()
+        assert isinstance(exc, BackendFailedError)
+        assert isinstance(exc, EngineError)
+        assert exc.attempts == 3  # first attempt + max_retries
+        assert isinstance(exc.__cause__, RuntimeError)
+        with pytest.raises(BackendFailedError):
+            fut.result()
+        assert fut.state == "FAILED"
+        assert eng.stats["failed"] == 1
+        assert eng.stats["served"] == 0
+
+    def test_breaker_degrades_bit_exact_and_recovers(self):
+        """Consecutive e2e failures open the bucket's breaker onto the
+        pallas fallback (same n/t/v -> bit-exact), and the post-cooldown
+        probe restores the original backend."""
+        import time as _time
+
+        rng = np.random.default_rng(2)
+        eng = PolymulEngine(
+            batch_slots=2, max_retries=6, breaker_threshold=2,
+            breaker_cooldown_s=0.05, backoff_base_s=1e-4,
+        )
+        pl = eng.plan(n=64, t=3, v=30, backend="pallas_fused_e2e")
+        raw = eng.executor
+
+        def e2e_down(p, za, zb):
+            if api.plan_key(p).backend == "pallas_fused_e2e":
+                raise RuntimeError("fused-e2e kernel fault")
+            return raw(p, za, zb)
+
+        eng.executor = e2e_down
+        za, zb = self._mk(pl, rng)
+        fut = eng.submit(pl, za, zb)
+        eng.run_until_idle()
+        snap = eng.snapshot()
+        assert snap["breaker_opened"] == 1
+        assert snap["degraded_buckets"] == 1
+        assert list(snap["bucket_backends"].values()) == ["pallas"]
+        want = np.asarray(api.polymul(pl, za[None], zb[None]))[0]
+        assert np.array_equal(fut.result(), want)  # degraded, bit-exact
+
+        eng.executor = raw  # backend "repaired"
+        _time.sleep(0.06)  # past the cool-down
+        fut2 = eng.submit(pl, *self._mk(pl, rng))
+        eng.run_until_idle()
+        snap = eng.snapshot()
+        assert snap["probes"] >= 1
+        assert snap["breaker_recovered"] == 1
+        assert snap["degraded_buckets"] == 0
+        assert list(snap["bucket_backends"].values()) == [
+            "pallas_fused_e2e"
+        ]
+        assert fut2.exception() is None
+
+    def test_deadline_shed_typed_never_dropped(self):
+        from repro.errors import DeadlineExceededError
+
+        rng = np.random.default_rng(3)
+        eng = PolymulEngine(batch_slots=2)
+        pl = eng.plan(n=64, t=3, v=30)
+        # dead on arrival: shed at submit
+        doa = eng.submit(pl, *self._mk(pl, rng), deadline=0.0)
+        assert doa.done()
+        assert isinstance(doa.exception(), DeadlineExceededError)
+        assert doa.exception().request_seq is not None
+        # expires while queued: shed at the next step
+        import time as _time
+
+        late = eng.submit(pl, *self._mk(pl, rng), deadline=0.005)
+        _time.sleep(0.01)
+        eng.step()
+        assert isinstance(late.exception(), DeadlineExceededError)
+        assert late.exception().late_s > 0
+        assert eng.stats["shed"] == 2
+        assert eng.stats["served"] == 0
+
+    def test_backpressure_blocks_and_rejects(self):
+        from repro.errors import QueueFullError
+
+        rng = np.random.default_rng(4)
+        eng = PolymulEngine(batch_slots=2, max_pending=2)
+        pl = eng.plan(n=64, t=3, v=30)
+        f1 = eng.submit(pl, *self._mk(pl, rng))
+        f2 = eng.submit(pl, *self._mk(pl, rng))
+        assert eng.try_submit(pl, *self._mk(pl, rng)) is None
+        with pytest.raises(QueueFullError) as ei:
+            eng.submit(pl, *self._mk(pl, rng), timeout=0.02)
+        assert ei.value.queue_depth == 2
+        assert ei.value.max_pending == 2
+        assert eng.stats["rejected"] == 2
+        eng.run_until_idle()
+        assert eng.try_submit(pl, *self._mk(pl, rng)) is not None
+        eng.run_until_idle()
+        assert f1.done() and f2.done()
+
+    def test_edf_orders_across_buckets_and_priority_ties(self):
+        """EDF: the tighter-deadline bucket dispatches first even when
+        the other bucket's request arrived earlier; among equal
+        deadlines, higher priority wins."""
+        rng = np.random.default_rng(5)
+        eng = PolymulEngine(batch_slots=1)
+        pl_a = eng.plan(n=64, t=3, v=30)
+        pl_b = eng.plan(n=32, t=4, v=45)
+        slow = eng.submit(pl_a, *self._mk(pl_a, rng), deadline=60.0)
+        fast = eng.submit(pl_b, *self._mk(pl_b, rng), deadline=5.0)
+        eng.step()
+        assert fast.done() and not slow.done()
+        eng.run_until_idle()
+        # priority ties within one bucket at equal (absent) deadlines
+        lo = eng.submit(pl_a, *self._mk(pl_a, rng), priority=0)
+        hi = eng.submit(pl_a, *self._mk(pl_a, rng), priority=5)
+        eng.step()
+        assert hi.done() and not lo.done()
+        eng.run_until_idle()
+
+    def test_future_lifecycle_and_latency_stats(self):
+        rng = np.random.default_rng(6)
+        eng = PolymulEngine(batch_slots=2)
+        pl = eng.plan(n=64, t=3, v=30)
+        fut = eng.submit(pl, *self._mk(pl, rng))
+        assert fut.state == "PENDING" and not fut.done()
+        with pytest.raises(RuntimeError, match="not served"):
+            fut.result()
+        with pytest.raises(TimeoutError):
+            fut.result(timeout=0.01)
+        eng.run_until_idle()
+        assert fut.state == "DONE" and fut.done()
+        assert fut.exception() is None
+        assert fut.latency_s >= 0
+        assert fut.dispatch_index == 0
+        snap = eng.snapshot()
+        assert snap["latency_p50_ms"] is not None
+        assert snap["latency_p99_ms"] >= snap["latency_p50_ms"]
+        assert snap["queue_depth"] == 0 and snap["inflight"] == 0
+        # exactly-once: a second resolution attempt is an engine bug
+        with pytest.raises(RuntimeError, match="resolved twice"):
+            fut._resolve(None, 0.0)
+
+    def test_async_dispatcher_end_to_end(self):
+        rng = np.random.default_rng(7)
+        eng = PolymulEngine(batch_slots=4, max_pending=8)
+        pl = eng.plan(n=64, t=3, v=30)
+        reqs = [self._mk(pl, rng) for _ in range(10)]
+        with eng:
+            assert eng.running
+            futs = [
+                eng.submit(pl, za, zb, timeout=5.0) for za, zb in reqs
+            ]
+            outs = [f.result(timeout=30.0) for f in futs]
+        assert not eng.running
+        for (za, zb), out in zip(reqs, outs):
+            want = np.asarray(api.polymul(pl, za[None], zb[None]))[0]
+            assert np.array_equal(out, want)
+        assert eng.stats["served"] == 10
+        assert eng.pending() == 0
