@@ -26,6 +26,9 @@ exits non-zero if any fusion/lane/lazy invariant regressed.  With
 ``--baseline BENCH_seed.json`` it additionally diffs op counts and
 modeled HBM bytes against the committed baseline, so the perf
 trajectory is tracked in-repo instead of only as a build artifact.
+``--compiled`` adds an AOT compiled wall-clock column
+(``compiled_us_per_poly``, via ``repro.tune.sweep.measure_plan``)
+beside the interpret numbers in the same record.
 """
 import argparse
 import json
@@ -310,7 +313,8 @@ def diff_against_baseline(rec: dict, baseline: dict) -> list[str]:
 
 
 def run_ci_smoke(out_path: str, n: int = 64, t: int = 3, v: int = 30,
-                 batch: int = 2, baseline_path: str | None = None) -> dict:
+                 batch: int = 2, baseline_path: str | None = None,
+                 compiled: bool = False) -> dict:
     """Benchmark the small preset across all four backends and BOTH
     stage schedules, write the result JSON, and enforce:
 
@@ -325,6 +329,12 @@ def run_ci_smoke(out_path: str, n: int = 64, t: int = 3, v: int = 30,
       below the strict butterfly count whenever the lazy window is on;
     * optionally, no op-count/HBM-byte regression vs a committed
       baseline JSON (``BENCH_seed.json``).
+
+    With ``compiled=True`` every (backend, schedule) row additionally
+    records ``compiled_us_per_poly`` + ``compile_s`` from the AOT chain
+    (``jax.jit(...).lower(...).compile()`` — a real XLA:CPU compile
+    today; see ``repro.tune.sweep.measure_plan``) beside the interpret
+    ``us_per_poly``.  Wall-clock columns stay un-gated either way.
     """
     p = params_mod.make_params(n=n, t=t, v=v)
     rng = random.Random(7)
@@ -341,8 +351,11 @@ def run_ci_smoke(out_path: str, n: int = 64, t: int = 3, v: int = 30,
     rec = {
         "preset": {"n": n, "t": t, "v": v, "batch": batch},
         "mode": "compiled" if jax.default_backend() == "tpu" else "interpret",
+        "compiled_mode": compiled,
         "backends": {},
     }
+    if compiled:
+        from repro.tune import sweep as sweep_mod
     for bk in ops_mod.BACKENDS:
         model = ops_mod.hbm_traffic_model(p, rows=batch, backend=bk)
         r = {
@@ -360,10 +373,17 @@ def run_ci_smoke(out_path: str, n: int = 64, t: int = 3, v: int = 30,
             pl = _plan(p, backend=bk, schedule=schedule)
             us = _time_plan(pl, za, zb, iters=1)
             exact = repro.polymul_ints(pl, a, b) == oracle
-            r["schedules"][schedule] = {
+            rs = {
                 "us_per_poly": us,
                 "bit_exact_vs_oracle": exact,
             }
+            if compiled:
+                m = sweep_mod.measure_plan(pl, za, zb, iters=3, warmup=1)
+                rs["compiled_us_per_poly"] = (
+                    m["us_per_poly"] if m["mode"] == "compiled" else None
+                )
+                rs["compile_s"] = m["compile_s"]
+            r["schedules"][schedule] = rs
         rec["backends"][bk] = r
     rec["cost_model"] = _cost_model_record(p)
     # the lane-alignment claim is about the operating point (n >= 256
@@ -483,12 +503,18 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", default=None,
                     help="committed baseline JSON (BENCH_seed.json) to "
                          "diff op counts / HBM bytes against")
+    ap.add_argument("--compiled", action="store_true",
+                    help="with --ci-smoke: also record AOT compiled "
+                         "wall-clock (compiled_us_per_poly) per "
+                         "backend/schedule beside the interpret numbers")
     ap.add_argument("--row-blk", type=int, default=None,
                     help="kernel tile rows per grid step "
                          "(None = per-kernel default)")
     args = ap.parse_args(argv)
     if args.ci_smoke:
-        rec = run_ci_smoke(args.out, baseline_path=args.baseline)
+        rec = run_ci_smoke(
+            args.out, baseline_path=args.baseline, compiled=args.compiled
+        )
         for msg in rec["failures"]:
             print(f"[FAIL] {msg}", file=sys.stderr)
         return 1 if rec["failures"] else 0

@@ -156,6 +156,7 @@ class PlanConfig:
     backend: str  # BACKENDS entry, or "oracle" for the oracle width
     schedule: ScheduleSpec  # concrete spec (kind + splits + row_blk)
     row_blk: int | None
+    channel_grid: bool | None  # fused-e2e RNS-channel grid axis (None = kernel default)
     use_sau: bool
     # derived I/O format (duplicated from the RnsPlan for self-description)
     seg_count: int  # S: base-2^v segments per input coefficient
@@ -351,12 +352,43 @@ def _wide_consts(params: ParenttParams) -> dict[str, Any]:
             )
         ),
         "wide_q_limbs": jnp.asarray(bigint.int_to_limbs(rp.q, W, L14)),
+        # per-channel special-prime constants as (t,)-leading leaves, so a
+        # shard_map channel slice carries its own q_i = 2^v - beta_i and
+        # shard-local ChannelSpecs can be rebuilt (see _wide_exec_specs)
+        "wide_qs": rp.qs_d,
+        "wide_betas": jnp.asarray(
+            [p.beta for p in params.primes], dtype=jnp.int64
+        ),
     }
 
 
 @functools.lru_cache(maxsize=None)
 def _wide_specs(params: ParenttParams) -> tuple[Any, ...]:
     return tuple(wide_mod.from_special(p) for p in params.primes)
+
+
+def _wide_exec_specs(pl: Plan) -> tuple[Any, ...]:
+    """The per-channel specs THIS call should execute.
+
+    Full-width plans (the common case, including jit traces of unsharded
+    plans) return the cached host :class:`repro.core.wide.WideSpec`
+    tuple, keyed by global channel index.  Under ``shard_map`` the
+    plan's leaves arrive as a channel slice, so the host tuple would be
+    mis-keyed; the ``wide_qs``/``wide_betas`` leaves travel with the
+    slice, and rebuilding :class:`repro.core.wide.ChannelSpec` views
+    from them IS the channel-offset view — shard-local index i reads the
+    globally-correct q_i/beta_i.
+    """
+    qs = pl.consts.get("wide_qs")
+    t_local = None if qs is None else int(qs.shape[0])
+    if t_local is None or t_local == pl.params.t:
+        return _wide_specs(pl.params)
+    betas = pl.consts["wide_betas"]
+    v = pl.config.v
+    return tuple(
+        wide_mod.ChannelSpec(q=qs[i], v=v, beta=betas[i])
+        for i in range(t_local)
+    )
 
 
 def _consts_for(params: ParenttParams, width: str) -> dict[str, Any]:
@@ -450,6 +482,39 @@ def _resolve_spec(
     )
 
 
+def _tuning_winner(tuning: Any, n: int, t: int, v: int) -> dict[str, Any] | None:
+    """Resolve the ``tuning=`` knob into the table's winner-knob dict for
+    this workload (or ``None`` for no tuning / no matching entry).
+
+    ``"off"``/``None`` disables lookup; ``"auto"`` consults the committed
+    :data:`repro.tune.table.DEFAULT_TABLE_PATH` and degrades silently to
+    the static defaults when the file or entry is missing; an explicit
+    path (or a :class:`repro.tune.table.TuningTable`) must exist and
+    validate.  Entries are keyed by device kind + ``(n, t, v, batch)``;
+    the lookup returns the smallest-batch entry for ``(n, t, v)``.
+    """
+    if tuning is None or tuning == "off":
+        return None
+    from repro.tune import table as table_mod  # deferred: keep plan() light
+
+    if isinstance(tuning, table_mod.TuningTable):
+        tab: Any = tuning
+    elif tuning == "auto":
+        tab = table_mod.load_default()
+        if tab is None:
+            return None
+    elif isinstance(tuning, str):
+        tab = table_mod.load_cached(tuning)
+    else:
+        raise UnknownKnobError(
+            f"tuning must be 'auto', 'off', a table path or a TuningTable, "
+            f"got {tuning!r}",
+            knob="tuning", value=tuning, alternatives=("auto", "off"),
+        )
+    winner = tab.lookup(n=n, t=t, v=v)
+    return dict(winner) if winner is not None else None
+
+
 def plan(
     n: int = 4096,
     t: int = 6,
@@ -459,7 +524,9 @@ def plan(
     schedule="auto",
     tiling=None,
     row_blk: int | None = None,
+    channel_grid: bool | None = None,
     use_sau: bool = True,
+    tuning: Any = "off",
 ) -> Plan:
     """Build an executable plan: search/validate primes, precompute and
     upload every table, and resolve all execution knobs into a frozen
@@ -475,12 +542,26 @@ def plan(
     fully-resolved spec — tile chain, row block and VMEM accounting
     included.  ``tiling`` is an optional hint: an int is a row-block
     request, a tuple of per-level ``(columns, rows)`` pairs asserts the
-    expected tile chain.  Invalid knobs raise
-    :class:`repro.errors.UnknownKnobError` and structurally valid but
-    unservable combinations (four_step on a tiny n, a Pallas backend on
-    the wide width, a row block that overflows VMEM, ...) raise
-    :class:`repro.errors.UnservableConfigError` — both ``ValueError``
-    subclasses, both at plan time, never mid-execution.
+    expected tile chain.  ``channel_grid`` pins the fused-e2e kernel's
+    RNS-channel grid axis (True = grid over channels, False = unrolled,
+    None = kernel default); it is a knob of ``backend="pallas_fused_e2e"``
+    only.
+
+    ``tuning`` consults the profile-driven tuning table
+    (:mod:`repro.tune`): ``"off"`` (default) keeps the static defaults,
+    ``"auto"`` uses the committed ``TUNING_default.json``, and a path (or
+    a ``TuningTable``) uses that table.  Resolution order is **explicit
+    knob > tuning table > static default** — the table only fills knobs
+    still at their defaults (``backend="auto"``, ``schedule="auto"``,
+    ``row_blk=None``, ``channel_grid=None``), and the winner lands in the
+    frozen :class:`PlanConfig` like any hand-set knob, so jit keys,
+    :func:`plan_key` buckets and the verifier see it first-class.
+
+    Invalid knobs raise :class:`repro.errors.UnknownKnobError` and
+    structurally valid but unservable combinations (four_step on a tiny
+    n, a Pallas backend on the wide width, a row block that overflows
+    VMEM, ...) raise :class:`repro.errors.UnservableConfigError` — both
+    ``ValueError`` subclasses, both at plan time, never mid-execution.
     """
     if not isinstance(n, int) or n < 4 or n & (n - 1):
         raise UnknownKnobError(
@@ -498,14 +579,42 @@ def plan(
             f"(the paper's configs are v=30 and v=45)",
             knob="v", value=v, alternatives=(),
         )
-    if row_blk is not None and row_blk < 1:
+    tuned = _tuning_winner(tuning, n, t, v)
+    if tuned is not None:
+        # explicit knob > tuning table > static default: the table fills
+        # only knobs the caller left at their defaults.
+        if backend == "auto" and tuned.get("backend"):
+            backend = tuned["backend"]
+        if (
+            isinstance(schedule, str)
+            and schedule == "auto"
+            and tuned.get("schedule")
+        ):
+            schedule = tuned["schedule"]
+        if row_blk is None and tiling is None and tuned.get("row_blk") is not None:
+            row_blk = tuned["row_blk"]
+        if channel_grid is None and tuned.get("channel_grid") is not None:
+            channel_grid = tuned["channel_grid"]
+    if row_blk is not None and (not isinstance(row_blk, int) or row_blk < 1):
         raise UnknownKnobError(
             f"row_blk must be >= 1, got {row_blk}",
             knob="row_blk", value=row_blk, alternatives=(1, 2, 4, 8),
         )
+    if channel_grid is not None and not isinstance(channel_grid, bool):
+        raise UnknownKnobError(
+            f"channel_grid must be True, False or None, got {channel_grid!r}",
+            knob="channel_grid", value=channel_grid, alternatives=(True, False, None),
+        )
     width = width_for(v)
     # resolve the cheap knobs BEFORE the prime search so bad combos fail fast
     backend = _resolve_backend(width, backend)
+    if channel_grid is not None and backend != "pallas_fused_e2e":
+        raise UnservableConfigError(
+            f"channel_grid= schedules the fused-e2e kernel's RNS-channel "
+            f"grid axis; backend={backend!r} has no such grid "
+            f"(use backend='pallas_fused_e2e' or leave channel_grid=None)",
+            knob="channel_grid", value=channel_grid, alternatives=(None,),
+        )
     _resolve_spec(width, n, schedule, tiling=tiling)
     _check_wide_envelope(width, t, v)
     params = make_params(n=n, t=t, v=v, row_blk=row_blk)
@@ -514,7 +623,7 @@ def plan(
     )
     cfg = PlanConfig(
         n=n, t=t, v=v, width=width, backend=backend, schedule=spec,
-        row_blk=row_blk, use_sau=use_sau,
+        row_blk=row_blk, channel_grid=channel_grid, use_sau=use_sau,
         seg_count=params.plan.seg_count, w=params.plan.w, L=params.plan.L,
     )
     return Plan(config=cfg, params=params, consts=_consts_for(params, width))
@@ -541,7 +650,8 @@ def plan_from_params(
     _check_wide_envelope(width, params.t, params.v)
     cfg = PlanConfig(
         n=params.n, t=params.t, v=params.v, width=width, backend=backend,
-        schedule=spec, row_blk=params.row_blk, use_sau=use_sau,
+        schedule=spec, row_blk=params.row_blk, channel_grid=None,
+        use_sau=use_sau,
         seg_count=params.plan.seg_count, w=params.plan.w, L=params.plan.L,
     )
     return Plan(config=cfg, params=params, consts=_consts_for(params, width))
@@ -561,10 +671,13 @@ def _require_plan(pl: Plan, fn: str) -> PlanConfig:
     return pl.config
 
 
-def _check_residues(x: Any, cfg: PlanConfig, fn: str) -> None:
-    if x.ndim < 2 or x.shape[0] != cfg.t or x.shape[-1] != cfg.n:
+def _check_residues(
+    x: Any, cfg: PlanConfig, fn: str, t: int | None = None
+) -> None:
+    t_want = cfg.t if t is None else t  # shard-local channel count under mesh
+    if x.ndim < 2 or x.shape[0] != t_want or x.shape[-1] != cfg.n:
         raise ValueError(
-            f"{fn}: expected residues (t={cfg.t}, ..., n={cfg.n}), "
+            f"{fn}: expected residues (t={t_want}, ..., n={cfg.n}), "
             f"got shape {tuple(x.shape)}"
         )
 
@@ -606,6 +719,7 @@ def polymul(pl: Plan, za: Any, zb: Any) -> jax.Array:
         return ops_mod.fused_polymul_e2e(
             za, zb, _bound_params(pl), backend=cfg.backend,
             use_sau=cfg.use_sau, schedule=cfg.schedule,
+            channel_grid=cfg.channel_grid,
         )
     _check_poly_segments(za, cfg, "polymul", "za")
     _check_poly_segments(zb, cfg, "polymul", "zb")
@@ -617,7 +731,7 @@ def polymul(pl: Plan, za: Any, zb: Any) -> jax.Array:
     if cfg.width == "wide":
         ra = _wide_decompose(pl, za)
         rb = _wide_decompose(pl, zb)
-        specs = _wide_specs(pl.params)
+        specs = _wide_exec_specs(pl)
         rp = wide_mod.negacyclic_mul_channels(
             ra, rb, pl.consts["wide_fwd"], pl.consts["wide_inv"], specs
         )
@@ -634,10 +748,9 @@ def ntt(pl: Plan, a: Any) -> jax.Array:
             a, _bound_params(pl), backend=cfg.backend, schedule=cfg.schedule
         )
     if cfg.width == "wide":
-        _check_residues(a, cfg, "ntt")
-        return wide_mod.ntt_channels(
-            a, pl.consts["wide_fwd"], _wide_specs(pl.params)
-        )
+        specs = _wide_exec_specs(pl)
+        _check_residues(a, cfg, "ntt", t=len(specs))
+        return wide_mod.ntt_channels(a, pl.consts["wide_fwd"], specs)
     raise ValueError(
         "ntt: the oracle width has no device transform; v > 46 plans "
         "serve polymul/decompose/compose on the host only"
@@ -652,10 +765,9 @@ def intt(pl: Plan, a: Any) -> jax.Array:
             a, _bound_params(pl), backend=cfg.backend, schedule=cfg.schedule
         )
     if cfg.width == "wide":
-        _check_residues(a, cfg, "intt")
-        return wide_mod.intt_channels(
-            a, pl.consts["wide_inv"], _wide_specs(pl.params)
-        )
+        specs = _wide_exec_specs(pl)
+        _check_residues(a, cfg, "intt", t=len(specs))
+        return wide_mod.intt_channels(a, pl.consts["wide_inv"], specs)
     raise ValueError(
         "intt: the oracle width has no device transform; v > 46 plans "
         "serve polymul/decompose/compose on the host only"
@@ -671,16 +783,16 @@ def negacyclic_mul(pl: Plan, a: Any, b: Any) -> jax.Array:
             a, b, _bound_params(pl), backend=cfg.backend, schedule=cfg.schedule
         )
     if cfg.width == "wide":
-        _check_residues(a, cfg, "negacyclic_mul")
-        _check_residues(b, cfg, "negacyclic_mul")
+        specs = _wide_exec_specs(pl)
+        _check_residues(a, cfg, "negacyclic_mul", t=len(specs))
+        _check_residues(b, cfg, "negacyclic_mul", t=len(specs))
         if a.shape != b.shape:
             raise ValueError(
                 f"negacyclic_mul: operand shapes differ: {tuple(a.shape)} "
                 f"vs {tuple(b.shape)}"
             )
         return wide_mod.negacyclic_mul_channels(
-            a, b, pl.consts["wide_fwd"], pl.consts["wide_inv"],
-            _wide_specs(pl.params),
+            a, b, pl.consts["wide_fwd"], pl.consts["wide_inv"], specs
         )
     raise ValueError(
         "negacyclic_mul: the oracle width has no device transform; "
@@ -702,7 +814,7 @@ def decompose(pl: Plan, z: Any) -> jax.Array:
         )
     if cfg.width == "wide":
         return wide_mod.decompose_channels(
-            z, _wide_specs(pl.params), pl.consts["wide_beta_pows"]
+            z, _wide_exec_specs(pl), pl.consts["wide_beta_pows"]
         )
     _no_tracers(cfg, "decompose", z)
     rp = pl.params.plan
@@ -724,9 +836,10 @@ def compose(pl: Plan, residues: Any) -> jax.Array:
         return ops_mod.rns_compose(
             residues, _bound_params(pl), backend=cfg.backend
         )
-    if residues.ndim < 1 or residues.shape[0] != cfg.t:
+    t_want = len(_wide_exec_specs(pl)) if cfg.width == "wide" else cfg.t
+    if residues.ndim < 1 or residues.shape[0] != t_want:
         raise ValueError(
-            f"compose: expected residues (t={cfg.t}, ...), got shape "
+            f"compose: expected residues (t={t_want}, ...), got shape "
             f"{tuple(residues.shape)}"
         )
     if cfg.width == "wide":
@@ -753,7 +866,7 @@ def compose(pl: Plan, residues: Any) -> jax.Array:
 
 def _wide_decompose(pl: Plan, z: Any) -> jax.Array:
     return wide_mod.decompose_channels(
-        z, _wide_specs(pl.params), pl.consts["wide_beta_pows"]
+        z, _wide_exec_specs(pl), pl.consts["wide_beta_pows"]
     )
 
 
@@ -761,7 +874,7 @@ def _wide_compose(pl: Plan, residues: Any) -> jax.Array:
     cfg = pl.config
     limbs14 = wide_mod.compose_channels(
         residues,
-        _wide_specs(pl.params),
+        _wide_exec_specs(pl),
         pl.consts["wide_qi_tilde"],
         pl.consts["wide_qi_star_limbs"],
         pl.consts["wide_q_limbs"],

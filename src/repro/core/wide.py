@@ -52,6 +52,25 @@ def from_special(prime) -> WideSpec:
     return WideSpec(q=prime.q, v=prime.v, beta=prime.beta)
 
 
+@dataclasses.dataclass(frozen=True)
+class ChannelSpec:
+    """Assert-free :class:`WideSpec` twin for shard-local execution.
+
+    The ``*_channels`` host spec tuple is keyed by GLOBAL channel index;
+    under ``shard_map`` each shard sees a channel slice of the Plan's
+    leaves, so its specs must be rebuilt from the sliced ``wide_qs``/
+    ``wide_betas`` leaves (the channel-offset view).  Those are device
+    scalars (tracers under jit), which cannot satisfy WideSpec's host-int
+    ``__post_init__`` invariants — they were already validated at plan
+    time on the global specs.  ``v`` stays a static python int because it
+    parameterizes shift amounts; ``q``/``beta`` broadcast through the
+    scalar mod-arithmetic like any jnp operand."""
+
+    q: object  # jnp scalar (possibly traced)
+    v: int
+    beta: object  # jnp scalar (possibly traced)
+
+
 def add_mod(a, b, q):
     s = a + b
     return jnp.where(s >= q, s - q, s)

@@ -400,7 +400,8 @@ def rns_compose(residues: Any, params: ParenttParams, *,
 def fused_polymul_e2e(za: Any, zb: Any, params: ParenttParams, *,
                       backend: str | None = None,
                       use_pallas: bool | None = None, use_sau: bool = True,
-                      schedule: str | None = None) -> Any:
+                      schedule: str | None = None,
+                      channel_grid: bool | None = None) -> Any:
     """za, zb: (..., n, S) segment arrays -> (..., n, L) product limbs:
     decompose -> per-channel NTT cascade -> compose.
 
@@ -411,7 +412,10 @@ def fused_polymul_e2e(za: Any, zb: Any, params: ParenttParams, *,
     backend this composes the three stage dispatchers, so callers can
     hold one entry point and switch datapaths with one string.
     ``use_sau`` selects Alg 2 vs generic decompose on the jnp path (the
-    kernel paths always run the SAU circuits).
+    kernel paths always run the SAU circuits).  ``channel_grid`` pins
+    the fused-e2e kernel's RNS-channel grid axis (None = the kernel's
+    own default, ``t >= 2``); other backends have no such grid and
+    ignore it (the api layer rejects the combination at plan time).
     """
     backend = resolve_backend(params, backend, use_pallas)
     schedule = resolve_schedule(params, schedule)
@@ -445,6 +449,7 @@ def fused_polymul_e2e(za: Any, zb: Any, params: ParenttParams, *,
         z3a, z3b, fwd, inv, plan.qi_star_limbs_d, plan.q_limbs_d,
         fsh, ish, frow, irow, frsh, irsh,
         plan=unbind(plan), schedule=schedule, lazy=lazy,
+        channel_grid=channel_grid,
         row_blk=params.row_blk, interpret=not _is_tpu(),
     )
     return out.reshape(lead + (params.n, plan.L))

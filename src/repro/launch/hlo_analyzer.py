@@ -283,7 +283,6 @@ class HloAnalysis:
     # -------------------------------------------------- collective bytes
     def collectives(self, comp_name: str = "__entry__", _depth: int = 0) -> dict:
         comp = self.comps.get(comp_name)
-        out = {k: 0.0 for k in set(_COLLECTIVE_CANON.values()) | set(_COLLECTIVES)}
         out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
                "all-to-all": 0.0, "collective-permute": 0.0, "count": 0}
         if comp is None or _depth > 32:
@@ -319,6 +318,65 @@ class HloAnalysis:
         out["total"] = sum(v for k, v in out.items() if k not in ("count", "total"))
         return out
 
+    # ---------------------------------------------------- custom-call bytes
+    def custom_calls(self, comp_name: str = "__entry__", _depth: int = 0) -> dict:
+        """Per-call-target operand/result byte attribution for ``custom-call``
+        ops, loop-scaled like :meth:`hbm_bytes`.
+
+        Pallas kernels lower to ``custom-call`` on real accelerators
+        (``tpu_custom_call`` under Mosaic, ``__gpu$xla.gpu.triton`` under
+        Triton); on CPU interpret mode inlines the kernel body into plain
+        HLO, so targets is empty there.  Operand + result bytes are the
+        kernel's HBM contract: XLA cannot fuse across the call boundary, so
+        everything crossing it is physical traffic."""
+        out: dict = {"targets": {}, "count": 0, "operand_bytes": 0.0, "result_bytes": 0.0}
+        comp = self.comps.get(comp_name)
+        if comp is None or _depth > 32:
+            return out
+
+        def merge(d: dict, mult: float = 1.0) -> None:
+            out["count"] += d["count"]
+            out["operand_bytes"] += d["operand_bytes"] * mult
+            out["result_bytes"] += d["result_bytes"] * mult
+            for tgt, rec in d["targets"].items():
+                cur = out["targets"].setdefault(
+                    tgt, {"count": 0, "operand_bytes": 0.0, "result_bytes": 0.0}
+                )
+                cur["count"] += rec["count"]
+                cur["operand_bytes"] += rec["operand_bytes"] * mult
+                cur["result_bytes"] += rec["result_bytes"] * mult
+
+        for ins in comp.instrs:
+            if ins.op == "while":
+                body = _called(ins.line, "body")
+                cond = _called(ins.line, "condition")
+                if body:
+                    merge(
+                        self.custom_calls(body, _depth + 1),
+                        trip_count(self.comps, ins.line, cond or ""),
+                    )
+            elif ins.op in ("call", "conditional", "fusion"):
+                callee = _called(ins.line, "calls") or _called(ins.line, "to_apply")
+                if callee:
+                    merge(self.custom_calls(callee, _depth + 1))
+            elif ins.op == "custom-call":
+                mt = re.search(r'custom_call_target="([^"]+)"', ins.line)
+                tgt = mt.group(1) if mt else "<unknown>"
+                op_bytes = 0
+                for op in _operands(ins):
+                    op_bytes += _shape_bytes(comp.types.get(op, ""))
+                res_bytes = _shape_bytes(ins.result_type)
+                rec = out["targets"].setdefault(
+                    tgt, {"count": 0, "operand_bytes": 0.0, "result_bytes": 0.0}
+                )
+                rec["count"] += 1
+                rec["operand_bytes"] += op_bytes
+                rec["result_bytes"] += res_bytes
+                out["count"] += 1
+                out["operand_bytes"] += op_bytes
+                out["result_bytes"] += res_bytes
+        return out
+
 
 def analyze(text: str) -> dict:
     h = HloAnalysis(text)
@@ -327,4 +385,5 @@ def analyze(text: str) -> dict:
         "flops": h.flops(),
         "hbm_bytes": h.hbm_bytes(),
         "collectives": coll,
+        "custom_calls": h.custom_calls(),
     }

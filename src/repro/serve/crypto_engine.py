@@ -128,16 +128,19 @@ def negacyclic_mul_sharded(pl: api.Plan, a, b, *, mesh):
     Bit-exact vs. the single-device :func:`repro.api.negacyclic_mul`:
     the per-channel cascades are independent (the RNS parallelism the
     paper's t datapaths exploit), so sharding channels is a pure
-    layout decision.  int64-width plans only — the wide datapath keys
-    per-channel host constants by global channel index and cannot be
-    sliced by leaves alone.
+    layout decision.  Device widths only: the int64 width rebinds its
+    kernel tables from the sliced leaves (``api._bound_params``), and
+    the wide width rebuilds shard-local channel specs from its
+    ``wide_qs``/``wide_betas`` leaves (``api._wide_exec_specs`` — the
+    channel-offset view); the oracle width is host-only and cannot be
+    traced, let alone sharded.
     """
     cfg = api.plan_key(pl)
-    if cfg.width != "int64":
+    if cfg.width not in ("int64", "wide"):
         raise ValueError(
-            f"negacyclic_mul_sharded serves int64-width plans only "
-            f"(got width={cfg.width!r}); the wide/oracle datapaths bake "
-            f"per-channel host constants that shard_map cannot slice"
+            f"negacyclic_mul_sharded serves int64/wide-width plans only "
+            f"(got width={cfg.width!r}); the oracle datapath is host-only "
+            f"and cannot be traced"
         )
     msize, bsize = _mesh_sizes(mesh)
     if cfg.t % msize:
@@ -189,9 +192,9 @@ def polymul_sharded(pl: api.Plan, za, zb, *, mesh):
     :func:`negacyclic_mul_sharded`.  Compose's channel reduction is the
     one cross-``model`` collective, and GSPMD inserts exactly that."""
     cfg = api.plan_key(pl)
-    if cfg.width != "int64":
+    if cfg.width not in ("int64", "wide"):
         raise ValueError(
-            f"polymul_sharded serves int64-width plans only "
+            f"polymul_sharded serves int64/wide-width plans only "
             f"(got width={cfg.width!r})"
         )
     pol = ctx_mod.make_crypto_policy(mesh, pl)
@@ -504,9 +507,9 @@ class PolymulEngine:
             # Mirror the sharded-dispatch preconditions HERE: step()
             # pops requests before dispatching, so a config that can
             # only fail at trace time would burn retries for nothing.
-            if cfg.width != "int64":
+            if cfg.width not in ("int64", "wide"):
                 raise ValueError(
-                    f"mesh mode serves int64-width plans only "
+                    f"mesh mode serves int64/wide-width plans only "
                     f"(got width={cfg.width!r})"
                 )
             msize, _ = _mesh_sizes(self.mesh)

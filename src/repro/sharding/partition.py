@@ -128,11 +128,11 @@ def batch_shard_spec(mesh: Mesh, shape) -> P:
 # crypto workload rules (the PaReNTT serving layer, DESIGN §8)
 # --------------------------------------------------------------------------
 
-# Plan leaves that carry NO RNS-channel axis (everything else in an int64
-# plan's leaf dict is (t, ...)-leading and shards its channel dim over
-# `model`).  Keyed by leaf NAME, not shape, so a coincidental t == L can
-# never shard the composed-modulus limb vector.
-_CRYPTO_REPLICATED_LEAVES = frozenset({"rns_q_limbs"})
+# Plan leaves that carry NO RNS-channel axis (everything else in an
+# int64/wide plan's leaf dict is (t, ...)-leading and shards its channel
+# dim over `model`).  Keyed by leaf NAME, not shape, so a coincidental
+# t == L can never shard the composed-modulus limb vector.
+_CRYPTO_REPLICATED_LEAVES = frozenset({"rns_q_limbs", "wide_q_limbs"})
 
 
 def polymul_specs(mesh: Mesh, plan) -> dict[str, P]:

@@ -1,0 +1,132 @@
+"""HLO cost-model cross-check: does the static analyzer order candidates
+the way the stopwatch does?
+
+For every candidate that compiled, the sweep keeps the optimized HLO
+dump; :func:`predicted_cost` runs :mod:`repro.launch.hlo_analyzer` over
+it and folds flops / hbm_bytes / pallas ``custom-call`` boundary bytes
+into one roofline-style scalar.  :func:`cross_check` then reports the
+Spearman rank correlation between the model's ordering and the measured
+ordering per workload key, and flags candidates whose normalized rank
+disagrees badly — the "model says fast, stopwatch says slow" cases worth
+a human look (on CPU today the usual flag is an interpret-mode Pallas
+candidate whose inlined kernel body the byte model undercounts).
+
+The nominal throughput numbers are deliberately round: only the ORDERING
+feeds the cross-check, so absolute calibration cancels out.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.launch import hlo_analyzer
+
+# Nominal device throughputs (bytes/s, flop/s) per device kind — ordering
+# fodder only (see module docstring), not measured claims.
+NOMINAL = {
+    "cpu": {"bytes_per_s": 2.0e10, "flops_per_s": 5.0e10},
+    "gpu": {"bytes_per_s": 1.5e12, "flops_per_s": 5.0e13},
+    "tpu": {"bytes_per_s": 1.2e12, "flops_per_s": 2.0e14},
+}
+
+# Normalized-rank disagreement beyond this flags the candidate.
+FLAG_RANK_GAP = 0.5
+
+
+def predicted_cost(hlo_text: str, kind: str = "cpu") -> dict[str, Any]:
+    """Roofline-style model time (us) for one optimized HLO dump.
+
+    ``max(bytes / BW, flops / FLOPS)``; pallas custom-call operand +
+    result bytes (kernel-boundary traffic the fusion-level byte walk
+    attributes to one opaque op) ride in ``hbm_bytes`` via the
+    analyzer's per-instruction accounting and are also reported
+    separately for the sweep report.
+    """
+    a = hlo_analyzer.analyze(hlo_text)
+    nominal = NOMINAL.get(kind, NOMINAL["cpu"])
+    bytes_s = a["hbm_bytes"] / nominal["bytes_per_s"]
+    flops_s = a["flops"] / nominal["flops_per_s"]
+    return {
+        "flops": a["flops"],
+        "hbm_bytes": a["hbm_bytes"],
+        "custom_call_bytes": (
+            a["custom_calls"]["operand_bytes"] + a["custom_calls"]["result_bytes"]
+        ),
+        "custom_call_count": a["custom_calls"]["count"],
+        "model_us": max(bytes_s, flops_s) * 1e6,
+    }
+
+
+def _ranks(xs: list[float]) -> list[float]:
+    """Average ranks (1-based, ties averaged — standard Spearman)."""
+    order = sorted(range(len(xs)), key=lambda i: xs[i])
+    ranks = [0.0] * len(xs)
+    i = 0
+    while i < len(order):
+        j = i
+        while j + 1 < len(order) and xs[order[j + 1]] == xs[order[i]]:
+            j += 1
+        avg = (i + j) / 2.0 + 1.0
+        for k in range(i, j + 1):
+            ranks[order[k]] = avg
+        i = j + 1
+    return ranks
+
+
+def spearman(xs: list[float], ys: list[float]) -> float | None:
+    """Spearman rank correlation (Pearson over average ranks); ``None``
+    when fewer than two points or either side is constant."""
+    if len(xs) != len(ys):
+        raise ValueError(f"length mismatch: {len(xs)} vs {len(ys)}")
+    n = len(xs)
+    if n < 2:
+        return None
+    rx, ry = _ranks(xs), _ranks(ys)
+    mx, my = sum(rx) / n, sum(ry) / n
+    sxx = sum((a - mx) ** 2 for a in rx)
+    syy = sum((b - my) ** 2 for b in ry)
+    if sxx == 0.0 or syy == 0.0:
+        return None
+    sxy = sum((a - mx) * (b - my) for a, b in zip(rx, ry))
+    return sxy / (sxx * syy) ** 0.5
+
+
+def cross_check(candidates: list[dict[str, Any]]) -> dict[str, Any]:
+    """Rank-correlate model vs stopwatch over one workload's measured
+    candidates.
+
+    Each input dict needs ``name``, ``measured_us`` and ``model_us``
+    (candidates without a model prediction — eager fallbacks with no HLO
+    — are skipped and counted).  Returns ``rank_correlation`` (Spearman,
+    ``None`` when undefined), and ``flagged``: candidates whose
+    normalized rank under the model vs the stopwatch differs by more
+    than :data:`FLAG_RANK_GAP`.
+    """
+    scored = [
+        c for c in candidates
+        if c.get("model_us") is not None and c.get("measured_us") is not None
+    ]
+    out: dict[str, Any] = {
+        "rank_correlation": None,
+        "flagged": [],
+        "modeled": len(scored),
+        "unmodeled": len(candidates) - len(scored),
+    }
+    if len(scored) < 2:
+        return out
+    measured = [float(c["measured_us"]) for c in scored]
+    modeled = [float(c["model_us"]) for c in scored]
+    out["rank_correlation"] = spearman(modeled, measured)
+    rm, rp = _ranks(measured), _ranks(modeled)
+    span = float(len(scored) - 1)
+    for c, a, b in zip(scored, rm, rp):
+        gap = abs(a - b) / span
+        if gap > FLAG_RANK_GAP:
+            out["flagged"].append(
+                {
+                    "name": c.get("name"),
+                    "measured_us": float(c["measured_us"]),
+                    "model_us": float(c["model_us"]),
+                    "rank_gap": gap,
+                }
+            )
+    return out

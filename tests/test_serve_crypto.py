@@ -250,10 +250,12 @@ class TestMeshShardedCascade:
         a = _rand_residues(pl, rng, batch=2)
         with pytest.raises(ValueError, match="do not divide the model"):
             negacyclic_mul_sharded(pl, a, a, mesh=host_mesh_4)
-        wide = repro.plan(n=32, t=4, v=45)
+        # wide plans now shard (see TestWideMeshSharding in
+        # test_sharding.py); only the host-bigint oracle width is refused
+        orc = repro.plan(n=32, t=2, v=50)
         res = jnp.zeros((4, 2, 32), jnp.int64)
-        with pytest.raises(ValueError, match="int64-width plans only"):
-            negacyclic_mul_sharded(wide, res, res, mesh=host_mesh_4)
+        with pytest.raises(ValueError, match="int64/wide-width plans only"):
+            negacyclic_mul_sharded(orc, res, res, mesh=host_mesh_4)
         pl6 = repro.plan(n=64, t=6, v=30)
         odd = _rand_residues(pl6, rng, batch=3)  # 3 % data-size 2 != 0
         with pytest.raises(ValueError, match="does not divide the data"):
@@ -281,10 +283,10 @@ class TestMeshShardedCascade:
         with pytest.raises(ValueError, match="batch_slots"):
             PolymulEngine(batch_slots=3, mesh=host_mesh_4)
         eng = PolymulEngine(batch_slots=4, mesh=host_mesh_4)
-        wide = repro.plan(n=32, t=4, v=45)
-        z = np.zeros((32, wide.config.seg_count), np.int64)
-        with pytest.raises(ValueError, match="int64-width plans only"):
-            eng.submit(wide, z, z)
+        orc = repro.plan(n=32, t=2, v=50)
+        z = np.zeros((32, orc.config.seg_count), np.int64)
+        with pytest.raises(ValueError, match="int64/wide-width plans only"):
+            eng.submit(orc, z, z)
 
     def test_engine_mesh_mode_rejects_indivisible_t_at_submit(
         self, host_mesh_4

@@ -1,6 +1,7 @@
 """Partition-rule unit tests: param specs, divisibility enforcement,
 batch/cache specs, activation policy behavior on a 1-device named mesh."""
 import numpy as np
+import pytest
 
 import jax
 import jax.numpy as jnp
@@ -131,3 +132,74 @@ class TestActivationPolicy:
         with ctx.activation_policy(ctx.make_mesh_policy(mesh)):
             got = ctx.moe_gather(eout, slot)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+class TestWideMeshSharding:
+    """PR 5 follow-up: the digit-split wide datapath under the
+    (data=2, model=2) mesh.  Shard-local kernels rebuild their channel
+    specs from the sharded ``wide_qs``/``wide_betas`` leaves (a
+    channel-offset view, ``api._wide_exec_specs``), so each model shard
+    indexes ITS channels — not channels [0, t/2)."""
+
+    def test_polymul_sharded_wide_bit_exact(self, host_mesh_4):
+        import repro
+        from repro.serve.crypto_engine import polymul_sharded
+
+        rng = np.random.default_rng(12)
+        pl = repro.plan(n=32, t=4, v=45)  # wide width; 4 channels % 2 == 0
+        shape = (2, pl.n, pl.config.seg_count)
+        za = jnp.asarray(rng.integers(0, 1 << pl.v, size=shape))
+        zb = jnp.asarray(rng.integers(0, 1 << pl.v, size=shape))
+        want = np.asarray(repro.polymul(pl, za, zb))
+        got = polymul_sharded(pl, za, zb, mesh=host_mesh_4)
+        assert np.array_equal(np.asarray(got), want)
+
+    @pytest.mark.slow  # 4-device wide shard_map recompile (~80 s)
+    def test_negacyclic_mul_sharded_wide_bit_exact(self, host_mesh_4):
+        import repro
+        from repro.serve.crypto_engine import negacyclic_mul_sharded
+
+        rng = np.random.default_rng(13)
+        pl = repro.plan(n=32, t=4, v=45)
+        res = jnp.asarray(
+            np.stack(
+                [
+                    rng.integers(0, int(q), size=(2, pl.n))
+                    for q in pl.params.plan.qs
+                ]
+            )
+        )
+        want = np.asarray(repro.negacyclic_mul(pl, res, res))
+        got = negacyclic_mul_sharded(pl, res, res, mesh=host_mesh_4)
+        assert np.array_equal(np.asarray(got), want)
+
+    @pytest.mark.slow  # two 4-device wide compiles (~2 min)
+    def test_wide_sharded_reads_leaves_not_constants(self, host_mesh_4):
+        """The channel-offset view must come from the LEAVES: perturbing
+        the sharded ``wide_qs`` leaf changes the sharded result (if the
+        shard-local kernels re-derived specs from the static params,
+        this would be a no-op)."""
+        import repro
+        from repro import api
+        from repro.serve.crypto_engine import negacyclic_mul_sharded
+
+        rng = np.random.default_rng(14)
+        pl = repro.plan(n=32, t=4, v=45)
+        res = jnp.asarray(
+            np.stack(
+                [
+                    rng.integers(1, int(q), size=(2, pl.n))
+                    for q in pl.params.plan.qs
+                ]
+            )
+        )
+        want = np.asarray(negacyclic_mul_sharded(pl, res, res, mesh=host_mesh_4))
+        broken_consts = dict(pl.consts)
+        broken_consts["wide_qs"] = broken_consts["wide_qs"] + 2
+        broken = api.Plan(
+            config=pl.config, params=pl.params, consts=broken_consts
+        )
+        got = np.asarray(
+            negacyclic_mul_sharded(broken, res, res, mesh=host_mesh_4)
+        )
+        assert not np.array_equal(got, want)
