@@ -65,13 +65,17 @@ def _time_loop(pl, reqs, repeats: int) -> float:
 
 
 def _time_engine(pl, reqs, batch: int, repeats: int, *,
-                 deadline_s=None, fault_rate: float = 0.0, seed: int = 7):
+                 deadline_s=None, fault_rate: float = 0.0, seed: int = 7,
+                 span_log=None):
     """(best wall seconds, latency ms array over successful futures,
     stats, traces, goodput count) for the batching engine serving the
     same request list — optionally under per-request deadlines and a
     Bernoulli dispatch-fault rate (the engine's retry/shed machinery
-    then shows up in the stats and the goodput gap)."""
-    eng = PolymulEngine(batch_slots=batch, backoff_base_s=1e-4)
+    then shows up in the stats and the goodput gap).  ``span_log``
+    turns on request tracing (the overhead under test in
+    :func:`tracing_overhead`)."""
+    eng = PolymulEngine(batch_slots=batch, backoff_base_s=1e-4,
+                        span_log=span_log)
     shape = (pl.n, pl.config.seg_count)
     eng.submit(pl, np.zeros(shape, np.int64), np.zeros(shape, np.int64))
     eng.run_until_idle()  # compile the padded-batch executable
@@ -116,6 +120,7 @@ def bench(n: int, t: int, v: int, *, batch: int, requests: int,
         "preset": {"n": n, "t": t, "v": v},
         "batch_slots": batch,
         "requests": requests,
+        "seed": seed,
         "loop_rps": requests / loop_s,
         "batched_rps": requests / eng_s,
         "batched_vs_loop_speedup": loop_s / eng_s,
@@ -173,6 +178,55 @@ def mixed_stream_check(requests: int = 12, seed: int = 3) -> dict:
     }
 
 
+def tracing_overhead(n: int, t: int, v: int, *, batch: int,
+                     requests: int, repeats: int, seed: int = 7,
+                     span_log_path: str | None = None,
+                     max_overhead: float = 0.05) -> dict:
+    """Closed-loop throughput with request tracing ON vs OFF through the
+    same engine configuration — the ``obs-smoke`` CI gate that keeps the
+    span log an always-on-able tool rather than a debug mode.
+
+    Both sides are best-of-``repeats`` so scheduler noise has to be
+    reproducibly in the tracing path to fail the gate.  ``overhead`` is
+    ``1 - traced_rps / plain_rps`` (negative means tracing measured
+    faster, i.e. pure noise); the gate fails when it exceeds
+    ``max_overhead``.
+    """
+    from repro import obs
+
+    rng = np.random.default_rng(seed)
+    pl = repro.plan(n=n, t=t, v=v)
+    reqs = _requests(pl, requests, rng)
+    plain_s, _, _, _, _ = _time_engine(pl, reqs, batch, repeats, seed=seed)
+    span_log = obs.SpanLog(span_log_path)
+    traced_s, _, _, _, _ = _time_engine(pl, reqs, batch, repeats,
+                                        seed=seed, span_log=span_log)
+    span_log.flush()
+    cons = obs.conservation(span_log.records)
+    overhead = 1.0 - (plain_s / traced_s)
+    failures = list(cons["violations"])
+    if overhead > max_overhead:
+        failures.append(
+            f"tracing overhead {overhead:.1%} exceeds the "
+            f"{max_overhead:.0%} budget: {requests / traced_s:.1f} "
+            f"traced vs {requests / plain_s:.1f} plain req/s"
+        )
+    return {
+        "preset": {"n": n, "t": t, "v": v},
+        "batch_slots": batch,
+        "requests": requests,
+        "repeats": repeats,
+        "seed": seed,
+        "plain_rps": requests / plain_s,
+        "traced_rps": requests / traced_s,
+        "overhead": overhead,
+        "max_overhead": max_overhead,
+        "spans": cons["spans"],
+        "span_violations": cons["violations"],
+        "failures": failures,
+    }
+
+
 def run_ci_smoke(out_path: str, *, batch: int = 8, requests: int = 64,
                  repeats: int = 3) -> dict:
     rec = bench(64, 3, 30, batch=batch, requests=requests, repeats=repeats)
@@ -225,7 +279,37 @@ def main(argv=None) -> int:
     ap.add_argument("--fault-rate", type=float, default=0.0,
                     help="Bernoulli transient-raise rate per dispatch "
                          "via the fault injector (0 = no faults)")
+    ap.add_argument("--seed", type=int, default=7,
+                    help="seeds request payloads and the fault schedule; "
+                         "stamped into output records")
+    ap.add_argument("--tracing-overhead", action="store_true",
+                    help="measure tracing-on vs tracing-off throughput "
+                         "and gate the overhead (the obs-smoke CI step); "
+                         "merges a 'tracing_overhead' record into --out")
+    ap.add_argument("--span-log", default=None, metavar="FILE",
+                    help="JSONL span log path for --tracing-overhead")
+    ap.add_argument("--max-overhead", type=float, default=0.05,
+                    help="tracing overhead budget as a fraction "
+                         "(--tracing-overhead)")
     args = ap.parse_args(argv)
+    if args.tracing_overhead:
+        rec = tracing_overhead(
+            args.n, args.t, args.v, batch=args.batch,
+            requests=args.requests, repeats=args.repeats, seed=args.seed,
+            span_log_path=args.span_log, max_overhead=args.max_overhead,
+        )
+        print(json.dumps(rec, indent=1))
+        doc = {}
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                doc = json.load(f)
+        doc["tracing_overhead"] = rec
+        doc["failures"] = doc.get("failures", []) + rec["failures"]
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=1)
+        for msg in rec["failures"]:
+            print(f"[FAIL] {msg}", file=sys.stderr)
+        return 1 if rec["failures"] else 0
     if args.ci_smoke:
         rec = run_ci_smoke(args.out, batch=args.batch,
                            requests=args.requests, repeats=args.repeats)
@@ -233,7 +317,7 @@ def main(argv=None) -> int:
             print(f"[FAIL] {msg}", file=sys.stderr)
         return 1 if rec["failures"] else 0
     rec = bench(args.n, args.t, args.v, batch=args.batch,
-                requests=args.requests, repeats=args.repeats,
+                requests=args.requests, repeats=args.repeats, seed=args.seed,
                 deadline_ms=args.deadline_ms, fault_rate=args.fault_rate)
     print(json.dumps(rec, indent=1))
     return 0

@@ -716,11 +716,15 @@ def polymul(pl: Plan, za: Any, zb: Any) -> jax.Array:
     """
     cfg = _require_plan(pl, "polymul")
     if cfg.width == "int64":
-        return ops_mod.fused_polymul_e2e(
-            za, zb, _bound_params(pl), backend=cfg.backend,
-            use_sau=cfg.use_sau, schedule=cfg.schedule,
-            channel_grid=cfg.channel_grid,
-        )
+        # The profiler stage scopes nest under this root:
+        # parentt.polymul/parentt.{decompose,cascade,compose,fused_e2e}
+        # (obs stage profiling, DESIGN.md §12).
+        with jax.named_scope("parentt.polymul"):
+            return ops_mod.fused_polymul_e2e(
+                za, zb, _bound_params(pl), backend=cfg.backend,
+                use_sau=cfg.use_sau, schedule=cfg.schedule,
+                channel_grid=cfg.channel_grid,
+            )
     _check_poly_segments(za, cfg, "polymul", "za")
     _check_poly_segments(zb, cfg, "polymul", "zb")
     if za.shape != zb.shape:

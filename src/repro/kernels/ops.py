@@ -269,16 +269,17 @@ def ntt_forward(a: Any, params: ParenttParams, *, backend: str | None = None,
     schedule = resolve_schedule(params, schedule)
     ct = _require_tables(params, "ntt_forward")
     _check_residues(a, params, "ntt_forward")
-    if backend == "jnp":
-        return ntt_mod.ntt_channels(a, ct, schedule)
-    a3, lead = _fold_rows(a)
-    lazy = _lazy_of(ct)
-    fwd, sh, row, rsh = _sched_tables(ct, schedule, lazy, "fwd")
-    out = ntt_kernels.ntt_channels_pallas(
-        a3, ct.qs_d, fwd, ct.mul_eps_d, sh, row, rsh,
-        **_kernel_kw(params, schedule, lazy),
-    )
-    return out.reshape(a.shape[:1] + lead + a.shape[-1:])
+    with jax.named_scope("parentt.ntt_fwd"):
+        if backend == "jnp":
+            return ntt_mod.ntt_channels(a, ct, schedule)
+        a3, lead = _fold_rows(a)
+        lazy = _lazy_of(ct)
+        fwd, sh, row, rsh = _sched_tables(ct, schedule, lazy, "fwd")
+        out = ntt_kernels.ntt_channels_pallas(
+            a3, ct.qs_d, fwd, ct.mul_eps_d, sh, row, rsh,
+            **_kernel_kw(params, schedule, lazy),
+        )
+        return out.reshape(a.shape[:1] + lead + a.shape[-1:])
 
 
 def ntt_inverse(a: Any, params: ParenttParams, *, backend: str | None = None,
@@ -288,16 +289,17 @@ def ntt_inverse(a: Any, params: ParenttParams, *, backend: str | None = None,
     schedule = resolve_schedule(params, schedule)
     ct = _require_tables(params, "ntt_inverse")
     _check_residues(a, params, "ntt_inverse")
-    if backend == "jnp":
-        return ntt_mod.intt_channels(a, ct, schedule)
-    a3, lead = _fold_rows(a)
-    lazy = _lazy_of(ct)
-    inv, sh, row, rsh = _sched_tables(ct, schedule, lazy, "inv")
-    out = ntt_kernels.intt_channels_pallas(
-        a3, ct.qs_d, ct.half_d, inv, ct.mul_eps_d, sh, row, rsh,
-        **_kernel_kw(params, schedule, lazy),
-    )
-    return out.reshape(a.shape[:1] + lead + a.shape[-1:])
+    with jax.named_scope("parentt.ntt_inv"):
+        if backend == "jnp":
+            return ntt_mod.intt_channels(a, ct, schedule)
+        a3, lead = _fold_rows(a)
+        lazy = _lazy_of(ct)
+        inv, sh, row, rsh = _sched_tables(ct, schedule, lazy, "inv")
+        out = ntt_kernels.intt_channels_pallas(
+            a3, ct.qs_d, ct.half_d, inv, ct.mul_eps_d, sh, row, rsh,
+            **_kernel_kw(params, schedule, lazy),
+        )
+        return out.reshape(a.shape[:1] + lead + a.shape[-1:])
 
 
 def negacyclic_mul(a: Any, b: Any, params: ParenttParams, *,
@@ -318,33 +320,41 @@ def negacyclic_mul(a: Any, b: Any, params: ParenttParams, *,
             f"negacyclic_mul: operand shapes differ: {tuple(a.shape)} vs "
             f"{tuple(b.shape)}"
         )
-    if backend == "jnp":
-        return ntt_mod.negacyclic_mul_channels(a, b, ct, schedule)
-    a3, lead = _fold_rows(a)
-    b3, _ = _fold_rows(b)
-    lazy = _lazy_of(ct)
-    kw = _kernel_kw(params, schedule, lazy)
-    fwd, fsh, frow, frsh = _sched_tables(ct, schedule, lazy, "fwd")
-    inv, ish, irow, irsh = _sched_tables(ct, schedule, lazy, "inv")
-    if backend == "pallas_fused":
-        out = ntt_kernels.fused_polymul_pallas(
-            a3, b3, ct.qs_d, ct.half_d, fwd, inv, ct.mul_eps_d,
-            fsh, ish, frow, irow, frsh, irsh, **kw,
-        )
-    else:  # "pallas": per-stage kernels, product round-trips HBM
-        fa = ntt_kernels.ntt_channels_pallas(
-            a3, ct.qs_d, fwd, ct.mul_eps_d, fsh, frow, frsh, **kw
-        )
-        fb = ntt_kernels.ntt_channels_pallas(
-            b3, ct.qs_d, fwd, ct.mul_eps_d, fsh, frow, frsh, **kw
-        )
-        q_b = ct.qs_d[:, None, None]
-        eps_b = None if ct.mul_eps is None else ct.mul_eps_d[:, None, None]
-        prod = modmath.mul_mod(fa, fb, q_b, eps_b, ct.mul_shifts)
-        out = ntt_kernels.intt_channels_pallas(
-            prod, ct.qs_d, ct.half_d, inv, ct.mul_eps_d, ish, irow, irsh, **kw
-        )
-    return out.reshape(a.shape[:1] + lead + a.shape[-1:])
+    with jax.named_scope("parentt.cascade"):
+        if backend == "jnp":
+            return ntt_mod.negacyclic_mul_channels(a, b, ct, schedule)
+        a3, lead = _fold_rows(a)
+        b3, _ = _fold_rows(b)
+        lazy = _lazy_of(ct)
+        kw = _kernel_kw(params, schedule, lazy)
+        fwd, fsh, frow, frsh = _sched_tables(ct, schedule, lazy, "fwd")
+        inv, ish, irow, irsh = _sched_tables(ct, schedule, lazy, "inv")
+        if backend == "pallas_fused":
+            out = ntt_kernels.fused_polymul_pallas(
+                a3, b3, ct.qs_d, ct.half_d, fwd, inv, ct.mul_eps_d,
+                fsh, ish, frow, irow, frsh, irsh, **kw,
+            )
+        else:  # "pallas": per-stage kernels, product round-trips HBM
+            with jax.named_scope("parentt.ntt_fwd"):
+                fa = ntt_kernels.ntt_channels_pallas(
+                    a3, ct.qs_d, fwd, ct.mul_eps_d, fsh, frow, frsh, **kw
+                )
+                fb = ntt_kernels.ntt_channels_pallas(
+                    b3, ct.qs_d, fwd, ct.mul_eps_d, fsh, frow, frsh, **kw
+                )
+            with jax.named_scope("parentt.pointwise"):
+                q_b = ct.qs_d[:, None, None]
+                eps_b = (
+                    None if ct.mul_eps is None
+                    else ct.mul_eps_d[:, None, None]
+                )
+                prod = modmath.mul_mod(fa, fb, q_b, eps_b, ct.mul_shifts)
+            with jax.named_scope("parentt.ntt_inv"):
+                out = ntt_kernels.intt_channels_pallas(
+                    prod, ct.qs_d, ct.half_d, inv, ct.mul_eps_d,
+                    ish, irow, irsh, **kw
+                )
+        return out.reshape(a.shape[:1] + lead + a.shape[-1:])
 
 
 # --------------------------------------------------------------------------
@@ -357,15 +367,16 @@ def rns_decompose(z: Any, params: ParenttParams, *, backend: str | None = None,
     """z: (..., S) base-2^v segments -> residues (t, ...)."""
     backend = _stage_backend(resolve_backend(params, backend, use_pallas))
     _check_segments(z, params, "rns_decompose")
-    if backend == "jnp":
-        fn = rns_mod.decompose_sau if use_sau else rns_mod.decompose
-        return fn(z, params.plan)
-    lead = z.shape[:-1]
-    z2 = z.reshape(-1, z.shape[-1])
-    out = crt_kernels.decompose_pallas(
-        z2, plan=unbind(params.plan), interpret=not _is_tpu()
-    )  # (t, rows)
-    return out.reshape((params.t,) + lead)
+    with jax.named_scope("parentt.decompose"):
+        if backend == "jnp":
+            fn = rns_mod.decompose_sau if use_sau else rns_mod.decompose
+            return fn(z, params.plan)
+        lead = z.shape[:-1]
+        z2 = z.reshape(-1, z.shape[-1])
+        out = crt_kernels.decompose_pallas(
+            z2, plan=unbind(params.plan), interpret=not _is_tpu()
+        )  # (t, rows)
+        return out.reshape((params.t,) + lead)
 
 
 def rns_compose(residues: Any, params: ParenttParams, *,
@@ -378,18 +389,19 @@ def rns_compose(residues: Any, params: ParenttParams, *,
             f"rns_compose: expected residues (t={params.t}, ...), got shape "
             f"{tuple(residues.shape)}"
         )
-    if backend == "jnp":
-        return rns_mod.compose(residues, params.plan)
-    lead = residues.shape[1:]
-    r2 = residues.reshape(params.t, -1)
-    rp = params.plan  # possibly a leaf-bound view: its *_d arrays are
-    # plan leaves, passed as TRACED kernel operands below
-    out = crt_kernels.compose_pallas(
-        r2, plan=unbind(rp), qs=rp.qs_d, qi_tilde=rp.qi_tilde_d,
-        star=rp.qi_star_limbs_d, q_limbs=rp.q_limbs_d,
-        interpret=not _is_tpu(),
-    )  # (rows, L)
-    return out.reshape(lead + (params.plan.L,))
+    with jax.named_scope("parentt.compose"):
+        if backend == "jnp":
+            return rns_mod.compose(residues, params.plan)
+        lead = residues.shape[1:]
+        r2 = residues.reshape(params.t, -1)
+        rp = params.plan  # possibly a leaf-bound view: its *_d arrays
+        # are plan leaves, passed as TRACED kernel operands below
+        out = crt_kernels.compose_pallas(
+            r2, plan=unbind(rp), qs=rp.qs_d, qi_tilde=rp.qi_tilde_d,
+            star=rp.qi_star_limbs_d, q_limbs=rp.q_limbs_d,
+            interpret=not _is_tpu(),
+        )  # (rows, L)
+        return out.reshape(lead + (params.plan.L,))
 
 
 # --------------------------------------------------------------------------
@@ -445,13 +457,14 @@ def fused_polymul_e2e(za: Any, zb: Any, params: ParenttParams, *,
     lazy = _lazy_of(ct)
     fwd, fsh, frow, frsh = _sched_tables(ct, schedule, lazy, "fwd")
     inv, ish, irow, irsh = _sched_tables(ct, schedule, lazy, "inv")
-    out = ntt_kernels.fused_e2e_polymul_pallas(
-        z3a, z3b, fwd, inv, plan.qi_star_limbs_d, plan.q_limbs_d,
-        fsh, ish, frow, irow, frsh, irsh,
-        plan=unbind(plan), schedule=schedule, lazy=lazy,
-        channel_grid=channel_grid,
-        row_blk=params.row_blk, interpret=not _is_tpu(),
-    )
+    with jax.named_scope("parentt.fused_e2e"):
+        out = ntt_kernels.fused_e2e_polymul_pallas(
+            z3a, z3b, fwd, inv, plan.qi_star_limbs_d, plan.q_limbs_d,
+            fsh, ish, frow, irow, frsh, irsh,
+            plan=unbind(plan), schedule=schedule, lazy=lazy,
+            channel_grid=channel_grid,
+            row_blk=params.row_blk, interpret=not _is_tpu(),
+        )
     return out.reshape(lead + (params.n, plan.L))
 
 

@@ -7,13 +7,17 @@ A stdlib-``ast`` import-graph walk (no imports are executed): roots are
 ``python -m``).  Edges are ``import x`` / ``from x import y`` statements,
 including relative imports and the lazy ``_LAZY``-table indirection used
 by ``repro.analysis`` (string module paths in the module body are picked
-up conservatively).  Modules never reached are reported — non-blocking:
-CI uploads the JSON as an artifact so drift is visible in review rather
-than failing the build.
+up conservatively).  Modules never reached are reported.
+
+``--check`` makes the report BLOCKING: any dead module not named in the
+explicit :data:`ALLOWED_DEAD` allowlist fails the run (the CI
+``dead-modules`` gate).  Allowlisting is a reviewed code change — add
+the module name with a justification comment, not a wildcard.
 
 Usage::
 
     python -m repro.launch.dead_modules --out DEAD_modules.json
+    python -m repro.launch.dead_modules --check   # CI gate
 """
 from __future__ import annotations
 
@@ -23,6 +27,12 @@ import json
 import sys
 from pathlib import Path
 from typing import Dict, Iterable, List, Optional, Set
+
+
+# Modules allowed to be unreachable under --check.  Every entry needs a
+# justification comment; an empty tuple means the whole tree must stay
+# reachable from the public surface, the tests, or a CLI entry point.
+ALLOWED_DEAD: tuple = ()
 
 
 def _module_name(path: Path, src_root: Path) -> str:
@@ -126,6 +136,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument(
         "--root", default=None, help="repo root (default: auto from this file)"
     )
+    ap.add_argument(
+        "--check", action="store_true",
+        help="exit non-zero on dead modules outside the ALLOWED_DEAD "
+             "allowlist (the CI dead-modules gate)",
+    )
     args = ap.parse_args(argv)
     repo_root = Path(args.root) if args.root else Path(__file__).resolve().parents[3]
     report = build_report(repo_root)
@@ -134,11 +149,29 @@ def main(argv: Optional[List[str]] = None) -> int:
         f"modules reachable; {len(report['dead_modules'])} dead"
     )
     for m in report["dead_modules"]:
-        print(f"    {m}")
+        flag = " (allowlisted)" if m in ALLOWED_DEAD else ""
+        print(f"    {m}{flag}")
     if args.out:
         Path(args.out).write_text(json.dumps(report, indent=1))
         print(f"[dead-modules] report -> {args.out}")
-    return 0  # non-blocking by design
+    if args.check:
+        unexpected = [m for m in report["dead_modules"] if m not in ALLOWED_DEAD]
+        stale = [m for m in ALLOWED_DEAD if m not in report["dead_modules"]]
+        for m in unexpected:
+            print(
+                f"[dead-modules] FAIL: {m} is unreachable and not "
+                f"allowlisted — wire it in or add it to ALLOWED_DEAD "
+                f"with a justification",
+                file=sys.stderr,
+            )
+        for m in stale:
+            print(
+                f"[dead-modules] FAIL: allowlist entry {m} is reachable "
+                f"(or gone) — remove the stale entry",
+                file=sys.stderr,
+            )
+        return 1 if (unexpected or stale) else 0
+    return 0
 
 
 if __name__ == "__main__":

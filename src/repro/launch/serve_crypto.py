@@ -19,17 +19,23 @@ typed error, ``--max-pending`` bounds the queue (backpressure), and
 ``--async-dispatch`` serves from the engine's background dispatcher
 thread; the summary reports goodput and the shed/retry/breaker
 counters next to throughput.
+
+Observability (PR 10): ``--span-log FILE`` traces every request into a
+JSONL span log (inspect with ``repro.launch.obs_report``), ``--json``
+emits the summary as a machine-readable record with the ``--seed``
+stamped in, so a run is reproducible from its own output.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
 
 import jax
 
-from repro import api
+from repro import api, obs
 from repro.serve.crypto_engine import PolymulEngine
 
 
@@ -125,12 +131,20 @@ def main(argv=None) -> int:
     ap.add_argument("--async-dispatch", action="store_true",
                     help="serve from the background dispatcher thread "
                          "instead of stepping inline")
+    ap.add_argument("--span-log", default=None, metavar="FILE",
+                    help="trace every request into this JSONL span log "
+                         "(inspect with repro.launch.obs_report)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the summary as a JSON record (seed "
+                         "stamped in) instead of text")
     args = ap.parse_args(argv)
 
     mesh = build_mesh(args.mesh) if args.mesh else None
+    span_log = obs.SpanLog(args.span_log) if args.span_log else None
     eng = PolymulEngine(batch_slots=args.slots, mesh=mesh,
                         donate=args.donate,
-                        max_pending=args.max_pending or None)
+                        max_pending=args.max_pending or None,
+                        span_log=span_log)
     plans = [eng.plan(**parse_preset(s)) for s in args.presets.split(",")]
     rng = np.random.default_rng(args.seed)
 
@@ -155,9 +169,33 @@ def main(argv=None) -> int:
     snap = eng.snapshot()
     ok = [f for f in futs if f.exception() is None]
     served = snap["served"]
+    if span_log is not None:
+        span_log.flush()
+    if args.json:
+        lat = np.array([f.latency_s for f in ok]) * 1e3
+        record = {
+            "seed": args.seed,
+            "requests": len(futs),
+            "rate_rps": args.rate,
+            "presets": args.presets,
+            "wall_s": wall,
+            "served_rps": served / wall,
+            "goodput_rps": len(ok) / wall,
+            "latency_p50_ms": (
+                float(np.percentile(lat, 50)) if lat.size else None
+            ),
+            "latency_p99_ms": (
+                float(np.percentile(lat, 99)) if lat.size else None
+            ),
+            "jit_traces": eng.trace_count,
+            "span_log": args.span_log,
+            "snapshot": snap,
+        }
+        print(json.dumps(record, indent=1))
+        return 0
     print(f"served {served}/{len(futs)} requests in {wall:.3f}s "
           f"({served / wall:.1f} req/s, goodput {len(ok) / wall:.1f} "
-          f"req/s)")
+          f"req/s) [seed={args.seed}]")
     if ok:
         lat = np.array([f.latency_s for f in ok]) * 1e3
         print(f"latency p50={np.percentile(lat, 50):.2f}ms "
@@ -173,6 +211,8 @@ def main(argv=None) -> int:
           f"breaker_recovered={snap['breaker_recovered']}")
     if mesh is not None:
         print(f"mesh axes={dict(mesh.shape)}")
+    if args.span_log:
+        print(f"span log: {args.span_log}")
     return 0
 
 

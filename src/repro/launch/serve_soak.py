@@ -29,9 +29,17 @@ gates rather than vibes:
 * **Post-fault bit-exactness.**  Clean results are compared against
   ``api.polymul`` on the request's original plan — degraded dispatches
   included, since the fallback chain re-plans with the same n/t/v.
+* **Span conservation** (with ``--span-log``): every admitted request
+  leaves exactly ONE terminal span (resolved/shed/failed) in the JSONL
+  log, and the span statuses agree with the engine counters — the
+  ``obs-smoke`` CI gate re-audits the written log through
+  ``launch/obs_report.py --check``.
 
-A ``"serve_soak"`` record (shed rate, retries, breaker counts, p99)
-merges into the BENCH_ci.json artifact next to the ``"serve"`` record.
+A ``"serve_soak"`` record (shed rate, retries, breaker counts, p99,
+seed) merges into the BENCH_ci.json artifact next to the ``"serve"``
+record, along with an ``"obs"`` record (the metrics-registry dump);
+``--prom-out`` additionally writes the registry in Prometheus text
+format for the exporter-validity gate.
 """
 from __future__ import annotations
 
@@ -43,7 +51,7 @@ import time
 
 import numpy as np
 
-from repro import api
+from repro import api, obs
 from repro.errors import EngineError
 from repro.serve.crypto_engine import PolymulEngine, PolymulFuture
 from repro.serve.faults import FaultInjector, FaultRule, spot_check
@@ -81,14 +89,21 @@ def run_soak(*, requests: int = 520, seed: int = 0, batch_slots: int = 8,
              max_pending: int = 64, breaker_threshold: int = 2,
              breaker_cooldown_s: float = 0.25,
              oracle_samples: int = 3, clean_samples: int = 32,
-             rules: list[FaultRule] | None = None) -> dict:
+             rules: list[FaultRule] | None = None,
+             span_log_path: str | None = None) -> dict:
     """Run the fault-injected soak; returns the gate record (its
-    ``failures`` list is empty on success)."""
+    ``failures`` list is empty on success).  With ``span_log_path``,
+    every request is traced and the full lifecycle log is written as
+    JSONL there, with span conservation audited as an extra gate."""
     rng = np.random.default_rng(seed)
+    span_log = (
+        obs.SpanLog(span_log_path) if span_log_path is not None else None
+    )
     eng = PolymulEngine(
         batch_slots=batch_slots, max_pending=max_pending,
         max_retries=6, breaker_threshold=breaker_threshold,
         breaker_cooldown_s=breaker_cooldown_s, backoff_base_s=0.002,
+        span_log=span_log,
     )
     plans = [eng.plan(**c) for c in CONFIGS]
 
@@ -217,8 +232,37 @@ def run_soak(*, requests: int = 520, seed: int = 0, batch_slots: int = 8,
             )
             break
 
+    # -- span conservation (tracing enabled) --------------------------
+    span_summary = None
+    if span_log is not None:
+        cons = obs.conservation(span_log.records)
+        span_summary = {
+            "spans": cons["spans"],
+            "admitted": cons["admitted"],
+            "by_status": cons["by_status"],
+            "violations": cons["violations"],
+        }
+        failures.extend(cons["violations"])
+        # span statuses must agree with the engine's own counters —
+        # a span leak would let the log and the registry drift apart
+        for status, key in (("resolved", "served"), ("shed", "shed"),
+                            ("failed", "failed")):
+            got = cons["by_status"].get(status, 0)
+            if got != snap[key]:
+                failures.append(
+                    f"span log has {got} {status!r} spans but the engine "
+                    f"counted {key}={snap[key]}"
+                )
+        if cons["admitted"] != snap["submitted"]:
+            failures.append(
+                f"span log has {cons['admitted']} admitted spans but "
+                f"submitted={snap['submitted']}"
+            )
+        span_log.flush()
+
     record = {
         "requests": len(entries),
+        "seed": seed,
         "configs": len(CONFIGS),
         "wall_s": round(wall, 3),
         "goodput_rps": round(snap["served"] / wall, 1),
@@ -240,6 +284,7 @@ def run_soak(*, requests: int = 520, seed: int = 0, batch_slots: int = 8,
         },
         "latency_p50_ms": snap["latency_p50_ms"],
         "latency_p99_ms": snap["latency_p99_ms"],
+        "span_conservation": span_summary,
         "failures": failures,
     }
     return record
@@ -247,12 +292,15 @@ def run_soak(*, requests: int = 520, seed: int = 0, batch_slots: int = 8,
 
 def merge_record(out_path: str, record: dict) -> None:
     """Merge the ``serve_soak`` record into the bench-smoke artifact
-    (same discipline as benchmarks/serve_throughput.py's ``serve``)."""
+    (same discipline as benchmarks/serve_throughput.py's ``serve``),
+    plus an ``obs`` record: the metrics-registry dump, so the artifact
+    carries the same numbers an exporter would scrape."""
     doc = {}
     if os.path.exists(out_path):
         with open(out_path) as f:
             doc = json.load(f)
     doc["serve_soak"] = record
+    doc["obs"] = obs.to_json()
     doc["failures"] = doc.get("failures", []) + record["failures"]
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=1)
@@ -264,16 +312,27 @@ def main(argv=None) -> int:
                     help="CI gate: 520 requests, merge BENCH record, "
                          "exit non-zero on any contract violation")
     ap.add_argument("--requests", type=int, default=520)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seeds traffic, priorities, AND the fault "
+                         "schedule; stamped into the output record")
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--out", default="BENCH_ci.json",
                     help="JSON artifact to merge the 'serve_soak' record "
                          "into (--ci-smoke only)")
+    ap.add_argument("--span-log", default=None, metavar="FILE",
+                    help="trace every request into this JSONL span log "
+                         "and audit span conservation as a gate")
+    ap.add_argument("--prom-out", default=None, metavar="FILE",
+                    help="write the metrics registry in Prometheus text "
+                         "format after the run")
     args = ap.parse_args(argv)
 
     record = run_soak(requests=args.requests, seed=args.seed,
-                      batch_slots=args.slots)
+                      batch_slots=args.slots, span_log_path=args.span_log)
     print(json.dumps(record, indent=1))
+    if args.prom_out is not None:
+        with open(args.prom_out, "w") as f:
+            f.write(obs.to_prometheus())
     if args.ci_smoke:
         merge_record(args.out, record)
     for msg in record["failures"]:

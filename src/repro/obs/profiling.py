@@ -1,0 +1,240 @@
+"""Per-stage device profiling: a compiled-mode stage-timing harness
+that reports MEASURED stage shares beside the static model predictions
+(:func:`repro.kernels.ops.hbm_traffic_model`,
+:func:`repro.kernels.ops.transform_cost_model`), with model-vs-measured
+drift exposed as registry gauges.
+
+The pipeline has three stage boundaries the api layer can dispatch
+independently (``decompose -> cascade -> compose``, where *cascade* is
+the no-shuffle NTT -> ⊙ -> iNTT datapath).  Each stage is jitted with
+the plan as a pytree argument and timed with ``block_until_ready``
+medians, alongside the full fused :func:`repro.api.execute` — so the
+report also shows what fusion buys (``stage_sum_s`` vs ``e2e_s``).
+
+Predicted shares come from an explicit per-stage attribution of the
+same byte counts :func:`hbm_traffic_model` totals.  Boundary tensors
+are attributed to BOTH touching stages (the decompose output is a
+decompose write and a cascade read), which is exactly how the model's
+total is built, so :func:`predicted_stage_bytes` cross-checks that its
+stages sum to the model's ``hbm_bytes`` and raises if a model change
+breaks the attribution.
+
+HBM bytes predict time shares only to the extent the pipeline is
+memory-bound — true for the Pallas datapaths on TPU, loose for the
+interpret/jnp paths on CPU.  That looseness is the point: the drift
+gauges (``repro_stage_share_drift``) make "the model says X, the device
+says Y" a queryable number instead of a hunch, which is the measurement
+substrate the ROADMAP's overlap/TPU-validation items need.
+
+Registry series written per run (labels ``{stage, backend}``)::
+
+    repro_stage_seconds                 measured median stage latency
+    repro_stage_share_measured          stage / sum-of-stages
+    repro_stage_share_predicted         byte-attribution share
+    repro_stage_share_drift             |measured - predicted|
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro import api
+from repro.kernels import ops as ops_mod
+from repro.obs.metrics import MetricsRegistry, registry as default_registry
+
+__all__ = [
+    "STAGES",
+    "predicted_stage_bytes",
+    "stage_timings",
+]
+
+STAGES = ("decompose", "cascade", "compose")
+
+
+def predicted_stage_bytes(pl: api.Plan, rows: int) -> dict[str, int]:
+    """Per-stage HBM byte attribution for ``rows`` polynomials on the
+    plan's backend, consistent with ``hbm_traffic_model`` by
+    construction: boundary tensors count for both touching stages, and
+    the stage sum is asserted equal to the model's ``hbm_bytes``."""
+    cfg = api.plan_key(pl)
+    if cfg.width != "int64":
+        raise ValueError(
+            f"predicted_stage_bytes: HBM model covers the int64 kernel "
+            f"datapaths only, plan width is {cfg.width!r}"
+        )
+    params = pl.params
+    model = ops_mod.hbm_traffic_model(
+        params, rows, backend=cfg.backend, schedule=cfg.schedule
+    )
+    t = params.t
+    B = 8
+    seg = rows * params.n * params.plan.seg_count * B
+    res = t * rows * params.n * B
+    limb = rows * params.n * params.plan.L * B
+    if cfg.backend == "jnp":
+        # unfused stage kernels: NTT x2 (2res/2res), ⊙ (2res/res),
+        # iNTT (res/res) -> 9 residue-tensor crossings in the cascade
+        stages = {
+            "decompose": 2 * seg + 2 * res,
+            "cascade": 9 * res,
+            "compose": res + limb,
+        }
+    elif cfg.backend == "pallas":
+        stages = {
+            "decompose": 2 * t * seg + 2 * res,
+            "cascade": 9 * res,
+            "compose": res + limb,
+        }
+    else:
+        # pallas_fused / pallas_fused_e2e: the cascade is one kernel
+        # (2res in / res out).  For e2e even the decompose/compose
+        # boundaries vanish at dispatch time; the attribution below is
+        # the fused-stage view the stage timer can actually measure,
+        # so predictions and measurements describe the same dispatch
+        # (hence pallas_fused's model total, asserted against it).
+        stages = {
+            "decompose": 2 * t * seg + 2 * res,
+            "cascade": 3 * res,
+            "compose": res + limb,
+        }
+        if cfg.backend == "pallas_fused_e2e":
+            model = ops_mod.hbm_traffic_model(
+                params, rows, backend="pallas_fused", schedule=cfg.schedule
+            )
+    if sum(stages.values()) != model["hbm_bytes"]:
+        raise AssertionError(
+            f"stage byte attribution ({sum(stages.values())}) != "
+            f"hbm_traffic_model total ({model['hbm_bytes']}) for "
+            f"backend {cfg.backend!r} — attribution out of sync"
+        )
+    return stages
+
+
+def _time_compiled(fn: Callable[[], Any], iters: int, warmup: int) -> float:
+    """Median wall seconds of ``fn`` (must block on device completion)."""
+    for _ in range(warmup):
+        fn()
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        samples.append(time.perf_counter() - t0)
+    return statistics.median(samples)
+
+
+def stage_timings(
+    pl: api.Plan,
+    *,
+    batch: int = 4,
+    iters: int = 10,
+    warmup: int = 2,
+    seed: int = 0,
+    registry: MetricsRegistry | None = None,
+) -> dict[str, Any]:
+    """Measure compiled per-stage latency for a plan and report it
+    beside the static model predictions.
+
+    Returns one JSON-ready record (merged into ``BENCH_ci.json`` by the
+    obs harness) and writes the four ``repro_stage_*`` gauge families to
+    ``registry`` (default: the process registry)."""
+    reg = registry if registry is not None else default_registry()
+    cfg = api.plan_key(pl)
+    rng = np.random.default_rng(seed)
+    shape = (batch, pl.params.n, cfg.seg_count)
+    za = jax.numpy.asarray(
+        rng.integers(0, 1 << cfg.v, size=shape, dtype=np.int64)
+    )
+    zb = jax.numpy.asarray(
+        rng.integers(0, 1 << cfg.v, size=shape, dtype=np.int64)
+    )
+
+    dec = jax.jit(api.decompose)
+    cas = jax.jit(api.negacyclic_mul)
+    com = jax.jit(api.compose)
+    ra = dec(pl, za).block_until_ready()
+    rb = dec(pl, zb).block_until_ready()
+    rp = cas(pl, ra, rb).block_until_ready()
+
+    measured = {
+        "decompose": _time_compiled(
+            lambda: dec(pl, za).block_until_ready(), iters, warmup
+        ),
+        "cascade": _time_compiled(
+            lambda: cas(pl, ra, rb).block_until_ready(), iters, warmup
+        ),
+        "compose": _time_compiled(
+            lambda: com(pl, rp).block_until_ready(), iters, warmup
+        ),
+    }
+    e2e = _time_compiled(
+        lambda: api.execute(pl, za, zb).block_until_ready(), iters, warmup
+    )
+
+    stage_sum = sum(measured.values())
+    bytes_by_stage = predicted_stage_bytes(pl, batch)
+    byte_sum = sum(bytes_by_stage.values())
+
+    g_sec = reg.gauge(
+        "repro_stage_seconds",
+        "measured median per-stage latency (compiled, batch input)",
+        ("stage", "backend"),
+    )
+    g_meas = reg.gauge(
+        "repro_stage_share_measured",
+        "measured stage share of sum-of-stages time",
+        ("stage", "backend"),
+    )
+    g_pred = reg.gauge(
+        "repro_stage_share_predicted",
+        "hbm_traffic_model byte-attribution stage share",
+        ("stage", "backend"),
+    )
+    g_drift = reg.gauge(
+        "repro_stage_share_drift",
+        "abs(measured - predicted) stage share: model-vs-device drift",
+        ("stage", "backend"),
+    )
+
+    stages_out: dict[str, Any] = {}
+    for stage in STAGES:
+        m_share = measured[stage] / stage_sum if stage_sum else 0.0
+        p_share = bytes_by_stage[stage] / byte_sum if byte_sum else 0.0
+        drift = abs(m_share - p_share)
+        lbl = dict(stage=stage, backend=cfg.backend)
+        g_sec.labels(**lbl).set(measured[stage])
+        g_meas.labels(**lbl).set(m_share)
+        g_pred.labels(**lbl).set(p_share)
+        g_drift.labels(**lbl).set(drift)
+        stages_out[stage] = {
+            "seconds": measured[stage],
+            "share_measured": m_share,
+            "share_predicted": p_share,
+            "drift": drift,
+            "hbm_bytes_predicted": bytes_by_stage[stage],
+        }
+
+    tc = ops_mod.transform_cost_model(pl.params, schedule=cfg.schedule)
+    return {
+        "n": pl.params.n,
+        "t": pl.params.t,
+        "v": cfg.v,
+        "backend": cfg.backend,
+        "schedule": str(cfg.schedule),
+        "batch": batch,
+        "iters": iters,
+        "seed": seed,
+        "stages": stages_out,
+        "stage_sum_s": stage_sum,
+        "e2e_s": e2e,
+        "fusion_speedup": (stage_sum / e2e) if e2e > 0 else None,
+        "max_drift": max(s["drift"] for s in stages_out.values()),
+        "transform_cost_model": {
+            k: tc[k]
+            for k in ("sublane_stages", "reduction_ops", "vmem_transposes")
+            if k in tc
+        },
+    }

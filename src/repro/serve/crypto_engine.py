@@ -92,11 +92,15 @@ from repro.errors import (
     DeadlineExceededError,
     QueueFullError,
 )
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
 from repro.sharding import ctx as ctx_mod
 from repro.sharding import partition
 
 __all__ = [
     "FALLBACK_NEXT",
+    "SNAPSHOT_KEYS",
+    "SNAPSHOT_SCHEMA_VERSION",
     "PolymulEngine",
     "PolymulFuture",
     "negacyclic_mul_sharded",
@@ -234,7 +238,7 @@ class PolymulFuture:
 
     __slots__ = (
         "_value", "_exc", "_state", "_event", "_async",
-        "latency_s", "dispatch_index",
+        "latency_s", "dispatch_index", "trace_id",
     )
 
     def __init__(self):
@@ -245,6 +249,7 @@ class PolymulFuture:
         self._async = False
         self.latency_s = None
         self.dispatch_index = None  # executor call index that resolved it
+        self.trace_id = None  # obs span id (engines with a span_log)
 
     @property
     def state(self) -> str:
@@ -315,6 +320,7 @@ class _Request:
     deadline: float | None = None  # absolute engine-clock deadline
     priority: int = 0  # higher dispatches sooner among equal deadlines
     attempts: int = 0  # failed dispatch attempts ridden so far
+    span: obs_tracing.Span | None = None  # request trace (span_log engines)
 
 
 def _order_key(req: _Request) -> tuple:
@@ -366,6 +372,54 @@ FALLBACK_NEXT = {
 
 
 # --------------------------------------------------------------------------
+# observability vocabulary
+# --------------------------------------------------------------------------
+
+# The engine's counters, registered as `repro_engine_<key>_total` counter
+# families labeled {engine=<name>} in the process metrics registry
+# (repro.obs.metrics).  `PolymulEngine.stats` is a live dict view over
+# this engine's children; exporters read the same numbers.
+_STAT_KEYS = (
+    "submitted",  # admitted + DOA-shed requests (rejected NOT included)
+    "served",  # futures resolved with a result
+    "dispatches",  # successful executor calls
+    "padded_slots",  # zero rows padded across successful dispatches
+    "rejected",  # backpressure: never admitted (no future created)
+    "shed",  # futures resolved with DeadlineExceededError
+    "retried",  # request requeues after failed dispatches
+    "failed",  # futures resolved with BackendFailedError
+    "dispatch_failures",  # executor calls that raised
+    "breaker_opened",  # bucket degradations down FALLBACK_NEXT
+    "breaker_recovered",  # successful probes restoring the original
+    "probes",  # original-backend probe dispatches while degraded
+)
+
+# snapshot() wire contract, pinned by tests/test_obs.py: the exact key
+# set a snapshot dict carries at SNAPSHOT_SCHEMA_VERSION.  Changing the
+# schema means bumping the version AND this tuple in the same commit —
+# downstream dashboards key on it.
+SNAPSHOT_SCHEMA_VERSION = 1
+SNAPSHOT_KEYS = _STAT_KEYS + (
+    "schema_version",  # int, == SNAPSHOT_SCHEMA_VERSION
+    "engine",  # engine instance name (metrics label value)
+    "queue_depth",  # queued, not yet dispatched
+    "inflight",  # popped, dispatch outcome pending
+    "latency_p50_ms",  # submit->result p50 over latency_window (or None)
+    "latency_p99_ms",  # submit->result p99 over latency_window (or None)
+    "degraded_buckets",  # buckets currently serving a fallback backend
+    "bucket_backends",  # {bucket key str: active backend str}
+)
+
+_engine_names = itertools.count()
+
+
+def _bucket_key_str(cfg: api.PlanConfig) -> str:
+    """Human-stable bucket label used in snapshot()['bucket_backends']
+    and span attrs: enough of the PlanConfig to tell buckets apart."""
+    return f"n{cfg.n}_t{cfg.t}_v{cfg.v}_{cfg.backend}"
+
+
+# --------------------------------------------------------------------------
 # the engine
 # --------------------------------------------------------------------------
 
@@ -408,6 +462,19 @@ class PolymulEngine:
     backoff_base_s:
         Base of the per-bucket exponential dispatch backoff
         (``base * 2^(failures-1)``, capped at 1 s).
+    name:
+        Metrics label for this engine instance (``engine=<name>`` on
+        every ``repro_engine_*`` series); auto-minted when omitted.
+    registry:
+        The :class:`repro.obs.metrics.MetricsRegistry` to count into
+        (default: the process-wide registry).
+    span_log:
+        Optional :class:`repro.obs.tracing.SpanLog`.  When set, every
+        ``submit()`` mints a request span (trace id on the returned
+        future as ``fut.trace_id``) and the full lifecycle — admit,
+        dispatch, retry, breaker transitions, terminal resolve/shed/
+        fail — lands in the log.  ``None`` (default) keeps the hot
+        paths tracing-free.
     """
 
     def __init__(self, *, batch_slots: int = 8, mesh=None,
@@ -415,7 +482,10 @@ class PolymulEngine:
                  max_retries: int = 3, breaker_threshold: int = 3,
                  breaker_cooldown_s: float = 1.0,
                  backoff_base_s: float = 0.01,
-                 latency_window: int = 4096):
+                 latency_window: int = 4096,
+                 name: str | None = None,
+                 registry: obs_metrics.MetricsRegistry | None = None,
+                 span_log: obs_tracing.SpanLog | None = None):
         if batch_slots < 1:
             raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
         if mesh is not None:
@@ -451,20 +521,37 @@ class PolymulEngine:
         self._inflight = 0
         self._dispatch_seq = 0  # executor call counter (success + failure)
         self._latencies: deque = deque(maxlen=latency_window)
-        self.stats = {
-            "submitted": 0,
-            "served": 0,
-            "dispatches": 0,
-            "padded_slots": 0,
-            "rejected": 0,  # backpressure: never admitted (no future)
-            "shed": 0,  # resolved with DeadlineExceededError
-            "retried": 0,  # request requeues after failed dispatches
-            "failed": 0,  # resolved with BackendFailedError
-            "dispatch_failures": 0,
-            "breaker_opened": 0,
-            "breaker_recovered": 0,
-            "probes": 0,
+        self.name = name if name is not None else f"engine-{next(_engine_names)}"
+        self.span_log = span_log
+        self._registry = (
+            registry if registry is not None else obs_metrics.registry()
+        )
+        # One counter child per stat, labeled by engine instance; the
+        # `stats` property is a read view over exactly these children.
+        self._m = {
+            k: self._registry.counter(
+                f"repro_engine_{k}_total", labelnames=("engine",)
+            ).labels(engine=self.name)
+            for k in _STAT_KEYS
         }
+        self._h_latency = self._registry.histogram(
+            "repro_engine_latency_seconds",
+            "submit-to-result latency of served requests",
+            ("engine",),
+        ).labels(engine=self.name)
+        self._h_queue_wait = self._registry.histogram(
+            "repro_engine_queue_wait_seconds",
+            "submit-to-first-dispatch wait of dispatched requests",
+            ("engine",),
+        ).labels(engine=self.name)
+        self._g_queue_depth = self._registry.gauge(
+            "repro_engine_queue_depth", "queued, not yet dispatched",
+            ("engine",),
+        ).labels(engine=self.name)
+        self._g_inflight = self._registry.gauge(
+            "repro_engine_inflight", "popped, dispatch outcome pending",
+            ("engine",),
+        ).labels(engine=self.name)
 
         def _run(pl, za, zb):
             # Appended at TRACE time only: the probe that asserts one
@@ -535,11 +622,20 @@ class PolymulEngine:
             deadline=(now + deadline) if deadline is not None else None,
             priority=priority,
         )
-        self.stats["submitted"] += 1
+        if self.span_log is not None:
+            req.span = self.span_log.start_span(
+                "request", engine=self.name, seq=req.seq,
+                bucket=_bucket_key_str(cfg), deadline=req.deadline,
+                priority=priority,
+            )
+            fut.trace_id = req.span.trace_id
+        self._m["submitted"].inc()
         if req.deadline is not None and req.deadline <= now:
             # dead on arrival: admission control resolves it, queue
             # untouched (typed error, never a silent drop)
-            self.stats["shed"] += 1
+            self._m["shed"].inc()
+            if req.span is not None:
+                req.span.finish("shed", reason="doa", latency_s=0.0)
             fut._fail(
                 DeadlineExceededError(
                     f"deadline expired {now - req.deadline:.6f}s before "
@@ -550,6 +646,8 @@ class PolymulEngine:
                 latency_s=0.0,
             )
             return fut
+        if req.span is not None:
+            req.span.event("admit", queue_depth=self._pending_locked())
         bucket.push(req)
         self._cond.notify_all()
         return fut
@@ -577,7 +675,13 @@ class PolymulEngine:
                     None if t_end is None else t_end - time.perf_counter()
                 )
                 if remaining is not None and remaining <= 0:
-                    self.stats["rejected"] += 1
+                    self._m["rejected"].inc()
+                    if self.span_log is not None:
+                        s = self.span_log.start_span(
+                            "request", engine=self.name,
+                            bucket=_bucket_key_str(cfg),
+                        )
+                        s.finish("rejected", reason="queue_full")
                     raise QueueFullError(
                         f"submission queue full "
                         f"({self._pending_locked()} >= "
@@ -602,7 +706,13 @@ class PolymulEngine:
         with self._cond:
             if (self.max_pending is not None
                     and self._pending_locked() >= self.max_pending):
-                self.stats["rejected"] += 1
+                self._m["rejected"].inc()
+                if self.span_log is not None:
+                    s = self.span_log.start_span(
+                        "request", engine=self.name,
+                        bucket=_bucket_key_str(cfg),
+                    )
+                    s.finish("rejected", reason="queue_full")
                 return None
             return self._enqueue_locked(
                 cfg, pl, za, zb, deadline, priority, time.perf_counter()
@@ -665,12 +775,20 @@ class PolymulEngine:
                 while b.heap and b.heap[0][0] < now:
                     out.append((b.pop(), now))
             if out:
-                self.stats["shed"] += len(out)
+                self._m["shed"].inc(len(out))
                 self._cond.notify_all()  # queue space freed
         return out
 
     def _resolve_shed(self, items: list[tuple[_Request, float]]) -> int:
         for req, now in items:
+            if req.span is not None:
+                reason = (
+                    "expired" if req.deadline is not None
+                    and req.deadline <= now else "unmeetable"
+                )
+                req.span.finish(
+                    "shed", reason=reason, latency_s=now - req.t_submit
+                )
             req.future._fail(
                 DeadlineExceededError(
                     f"deadline missed before dispatch (seq {req.seq}, "
@@ -700,7 +818,13 @@ class PolymulEngine:
             and now - bucket.opened_at >= self.breaker_cooldown_s
         )
         if probing:
-            self.stats["probes"] += 1
+            self._m["probes"].inc()
+            if self.span_log is not None:
+                self.span_log.event(
+                    "probe", engine=self.name,
+                    bucket=_bucket_key_str(bucket.key),
+                    backend=api.plan_key(bucket.chain[0]).backend,
+                )
             use_plan = bucket.chain[0]
         else:
             use_plan = bucket.active_plan
@@ -719,7 +843,7 @@ class PolymulEngine:
             else:
                 reqs.append(req)
         if shed:
-            self.stats["shed"] += len(shed)
+            self._m["shed"].inc(len(shed))
         if reqs or shed:
             self._cond.notify_all()  # queue space freed
         return reqs, shed
@@ -760,6 +884,15 @@ class PolymulEngine:
             cfg = api.plan_key(use_plan)
             traces_before = len(self._trace_log)
             t0 = time.perf_counter()
+            for r in reqs:
+                if r.attempts == 0:  # first attempt: the queue wait
+                    self._h_queue_wait.observe(t0 - r.t_submit)
+                if r.span is not None:
+                    r.span.event(
+                        "dispatch", dispatch_index=dispatch_idx,
+                        backend=cfg.backend, batch=len(reqs),
+                        attempt=r.attempts, probing=probing,
+                    )
             try:
                 if cfg.width == "oracle":
                     za = np.stack([r.za for r in reqs])
@@ -796,6 +929,11 @@ class PolymulEngine:
                              dispatch_idx, exec_s) -> int:
         now = time.perf_counter()
         for i, r in enumerate(reqs):
+            if r.span is not None:
+                r.span.finish(
+                    "resolved", latency_s=now - r.t_submit,
+                    dispatch_index=dispatch_idx,
+                )
             r.future._resolve(out[i], now - r.t_submit,
                               dispatch_index=dispatch_idx)
         with self._cond:
@@ -804,17 +942,23 @@ class PolymulEngine:
             bucket.not_before = 0.0
             if probing and bucket.level > 0:
                 bucket.level = 0  # probe succeeded: breaker closes
-                self.stats["breaker_recovered"] += 1
+                self._m["breaker_recovered"].inc()
+                if self.span_log is not None:
+                    self.span_log.event(
+                        "breaker_recovered", engine=self.name,
+                        bucket=_bucket_key_str(bucket.key),
+                    )
             if exec_s is not None:  # None: compile dispatch, not service
                 bucket.ewma_service_s = (
                     exec_s if bucket.ewma_service_s == 0.0
                     else 0.75 * bucket.ewma_service_s + 0.25 * exec_s
                 )
-            self.stats["dispatches"] += 1
-            self.stats["served"] += len(reqs)
-            self.stats["padded_slots"] += pad
+            self._m["dispatches"].inc()
+            self._m["served"].inc(len(reqs))
+            self._m["padded_slots"].inc(pad)
             for r in reqs:
                 self._latencies.append(now - r.t_submit)
+                self._h_latency.observe(now - r.t_submit)
             self._cond.notify_all()
         return len(reqs)
 
@@ -828,7 +972,7 @@ class PolymulEngine:
         failed: list[_Request] = []
         with self._cond:
             self._inflight -= len(reqs)
-            self.stats["dispatch_failures"] += 1
+            self._m["dispatch_failures"].inc()
             for r in reqs:
                 if not probing:
                     r.attempts += 1
@@ -836,8 +980,13 @@ class PolymulEngine:
                     failed.append(r)
                 else:
                     bucket.push(r)
-                    self.stats["retried"] += 1
-            self.stats["failed"] += len(failed)
+                    self._m["retried"].inc()
+                    if r.span is not None:
+                        r.span.event(
+                            "retry", attempt=r.attempts,
+                            error=type(exc).__name__, probing=probing,
+                        )
+            self._m["failed"].inc(len(failed))
             if probing:
                 bucket.opened_at = now  # stay degraded, restart cooldown
             else:
@@ -853,6 +1002,11 @@ class PolymulEngine:
             self._cond.notify_all()
         backend = api.plan_key(use_plan).backend
         for r in failed:
+            if r.span is not None:
+                r.span.finish(
+                    "failed", backend=backend, attempts=r.attempts,
+                    error=type(exc).__name__, latency_s=now - r.t_submit,
+                )
             err = BackendFailedError(
                 f"request seq {r.seq} failed after {r.attempts} dispatch "
                 f"attempts (last backend {backend!r}): {exc}",
@@ -874,7 +1028,14 @@ class PolymulEngine:
         bucket.failures = 0
         bucket.opened_at = now
         bucket.not_before = 0.0
-        self.stats["breaker_opened"] += 1
+        self._m["breaker_opened"].inc()
+        if self.span_log is not None:
+            self.span_log.event(
+                "breaker_open", engine=self.name,
+                bucket=_bucket_key_str(bucket.key),
+                level=bucket.level,
+                backend=api.plan_key(bucket.active_plan).backend,
+            )
         return True
 
     def run_until_idle(self) -> int:
@@ -965,15 +1126,34 @@ class PolymulEngine:
         return False
 
     # -- probes --------------------------------------------------------
+    @property
+    def stats(self) -> dict:
+        """Live counter view: ``{stat: int}`` read from this engine's
+        children in the metrics registry (see ``_STAT_KEYS`` for the
+        vocabulary).  A fresh plain dict per access — exporters and the
+        registry itself hold the canonical series."""
+        return {k: int(c.value) for k, c in self._m.items()}
+
     def snapshot(self) -> dict:
-        """Point-in-time stats: the counter dict plus queue depth,
-        in-flight count, p50/p99 submit-to-result latency (ms, over the
-        last ``latency_window`` served requests) and per-bucket active
-        backends — what the soak driver and CLIs gate on/report."""
+        """Point-in-time stats: the counters plus queue depth, in-flight
+        count, p50/p99 submit-to-result latency (ms, over the last
+        ``latency_window`` served requests) and per-bucket active
+        backends — what the soak driver and CLIs gate on/report.
+
+        The snapshot is a FROZEN wire contract: its key set is exactly
+        ``SNAPSHOT_KEYS`` at ``schema_version`` =
+        ``SNAPSHOT_SCHEMA_VERSION`` (each key documented there), pinned
+        by a regression test so dashboards can't silently break.  It is
+        an exporter view over the metrics registry — the same numbers
+        are scrapeable via :func:`repro.obs.to_prometheus`."""
         with self._cond:
             snap = dict(self.stats)
+            snap["schema_version"] = SNAPSHOT_SCHEMA_VERSION
+            snap["engine"] = self.name
             snap["queue_depth"] = self._pending_locked()
             snap["inflight"] = self._inflight
+            self._g_queue_depth.set(snap["queue_depth"])
+            self._g_inflight.set(snap["inflight"])
             if self._latencies:
                 lat = np.asarray(self._latencies) * 1e3
                 snap["latency_p50_ms"] = float(np.percentile(lat, 50))
@@ -985,18 +1165,19 @@ class PolymulEngine:
                 1 for b in self._buckets.values() if b.level > 0
             )
             snap["bucket_backends"] = {
-                f"n{c.n}_t{c.t}_v{c.v}_{c.backend}":
-                    api.plan_key(b.active_plan).backend
+                _bucket_key_str(c): api.plan_key(b.active_plan).backend
                 for c, b in self._buckets.items()
             }
         return snap
 
     def reset_stats(self) -> None:
-        """Zero every counter and drop the latency window (benchmark
-        warm-up hygiene)."""
+        """Zero every counter/histogram series of THIS engine and drop
+        the latency window (benchmark warm-up hygiene)."""
         with self._cond:
-            for k in self.stats:
-                self.stats[k] = 0
+            for c in self._m.values():
+                c.reset()
+            self._h_latency.reset()
+            self._h_queue_wait.reset()
             self._latencies.clear()
 
     @property

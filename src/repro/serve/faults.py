@@ -48,6 +48,7 @@ import time
 import numpy as np
 
 from repro import api
+from repro.obs import metrics as obs_metrics
 
 __all__ = ["FaultInjector", "FaultRule", "InjectedFault", "spot_check"]
 
@@ -133,6 +134,11 @@ class FaultInjector:
         self.rng = np.random.default_rng(seed)
         self.calls = 0
         self.log: list[tuple[int, str, str]] = []
+        self._counter = obs_metrics.registry().counter(
+            "repro_faults_injected_total",
+            "faults fired by the injection schedule",
+            ("kind", "backend"),
+        )
 
     def _matches(self, rule: FaultRule, idx: int, backend: str) -> bool:
         if rule.backend is not None and backend != rule.backend:
@@ -152,6 +158,7 @@ class FaultInjector:
     def _fire(self, rule: FaultRule, idx: int, backend: str) -> None:
         rule.fired += 1
         self.log.append((idx, rule.kind, backend))
+        self._counter.labels(kind=rule.kind, backend=backend).inc()
 
     def wrap(self, fn):
         """The wrapped executor: ``fn`` with faults injected per the

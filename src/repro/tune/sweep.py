@@ -38,6 +38,7 @@ import numpy as np
 
 from repro import api
 from repro.errors import PlanError
+from repro.obs import metrics as obs_metrics
 from repro.tune import costcheck, table as table_mod
 
 # A challenger must beat the static default by this factor to dethrone it.
@@ -275,6 +276,16 @@ def sweep_workload(
         )
         if m["hlo"] is not None:
             rec.update(costcheck.predicted_cost(m["hlo"], kind))
+
+    # candidate outcomes land in the process registry beside the serve
+    # metrics, so a tuning run is scrapeable like any soak
+    cand_counter = obs_metrics.registry().counter(
+        "repro_tune_candidates_total",
+        "sweep candidate outcomes",
+        ("status",),
+    )
+    for r in records:
+        cand_counter.labels(status=r["status"]).inc()
 
     measured = [r for r in records if r["status"] == "measured"]
     check = costcheck.cross_check(

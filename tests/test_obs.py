@@ -1,0 +1,456 @@
+"""Observability layer tests (DESIGN.md §12): metrics registry
+semantics, the histogram-quantile accuracy contract vs exact
+``numpy.percentile`` (property-tested on latency- and queue-wait-shaped
+series), span lifecycle + conservation through the serving engine, the
+frozen snapshot schema, Prometheus/JSONL exporter round-trips, and the
+per-stage profiling drift record.
+
+Uses hypothesis when installed; otherwise the fallback shim turns each
+``@given`` property into an individual skip (the seeded versions of the
+same bounds still run — the contract is never untested).
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro import obs
+from repro.obs.metrics import MetricsRegistry
+from repro.serve.crypto_engine import (
+    SNAPSHOT_KEYS,
+    SNAPSHOT_SCHEMA_VERSION,
+    PolymulEngine,
+)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry semantics
+# ---------------------------------------------------------------------------
+
+
+def test_counter_inc_and_labels():
+    reg = MetricsRegistry()
+    c = reg.counter("repro_test_total", "help", ("engine",))
+    c.labels(engine="a").inc()
+    c.labels(engine="a").inc(2)
+    c.labels(engine="b").inc(5)
+    assert c.labels(engine="a").value == 3
+    assert c.labels(engine="b").value == 5
+
+
+def test_counter_rejects_negative():
+    reg = MetricsRegistry()
+    c = reg.counter("repro_test_total", "help")
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_gauge_set_inc_dec():
+    reg = MetricsRegistry()
+    g = reg.gauge("repro_depth", "help")
+    g.set(4.0)
+    g.inc()
+    g.dec(2.0)
+    assert g.value == 3.0
+
+
+def test_reregistration_idempotent_and_conflicts_raise():
+    reg = MetricsRegistry()
+    c1 = reg.counter("repro_shared_total", "help", ("engine",))
+    c2 = reg.counter("repro_shared_total", "help", ("engine",))
+    assert c1 is c2  # two engines share one family
+    with pytest.raises(ValueError):
+        reg.counter("repro_shared_total", "help", ("other",))
+    with pytest.raises(ValueError):
+        reg.gauge("repro_shared_total", "help")
+
+
+def test_invalid_metric_names_rejected():
+    reg = MetricsRegistry()
+    for bad in ("", "1abc", "a-b", "a.b"):
+        with pytest.raises(ValueError):
+            reg.counter(bad, "help")
+
+
+def test_histogram_empty_and_bad_quantile():
+    reg = MetricsRegistry()
+    h = reg.histogram("repro_lat_seconds", "help")
+    assert h.quantile(0.5) is None
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+
+
+def test_counter_thread_safety():
+    reg = MetricsRegistry()
+    c = reg.counter("repro_race_total", "help")
+
+    def bump():
+        for _ in range(1000):
+            c.inc()
+
+    threads = [threading.Thread(target=bump) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == 8000
+
+
+def test_default_registry_reset_zeroes_values():
+    c = obs.registry().counter("repro_tmp_total", "help")
+    c.inc(7)
+    obs.reset_default_registry()
+    # families persist (dashboards keep their series); values zero
+    assert obs.registry().get("repro_tmp_total") is c
+    assert c.value == 0
+
+
+# ---------------------------------------------------------------------------
+# histogram-quantile accuracy contract vs numpy.percentile
+# ---------------------------------------------------------------------------
+
+
+def _assert_quantile_bound(values, q):
+    """The documented contract: exact/G - lo <= estimate <= exact*G + lo
+    where G = HIST_GROWTH and lo = the first bucket bound."""
+    reg = MetricsRegistry()
+    h = reg.histogram("repro_q_seconds", "help")
+    for v in values:
+        h.observe(v)
+    est = h.quantile(q)
+    exact = float(np.percentile(np.asarray(values), q * 100))
+    lo = h.buckets[0]
+    g = obs.HIST_GROWTH
+    assert exact / g - lo <= est <= exact * g + lo, (
+        f"quantile({q}) = {est} outside [{exact / g - lo}, "
+        f"{exact * g + lo}] (exact {exact}, n={len(values)})"
+    )
+
+
+@pytest.mark.parametrize("q", [0.5, 0.9, 0.99])
+def test_quantile_bound_latency_shaped(q):
+    # lognormal ~ serving latency: long right tail
+    rng = np.random.default_rng(11)
+    values = rng.lognormal(mean=-6.0, sigma=1.5, size=500).tolist()
+    _assert_quantile_bound(values, q)
+
+
+@pytest.mark.parametrize("q", [0.5, 0.99])
+def test_quantile_bound_queue_wait_shaped(q):
+    # exponential with a point mass near zero ~ queue waits: most
+    # requests dispatch immediately, stragglers wait out a batch window
+    rng = np.random.default_rng(12)
+    values = np.concatenate([
+        rng.exponential(scale=2e-3, size=300),
+        np.full(200, 1e-7),  # below first bucket bound: absolute floor
+    ]).tolist()
+    _assert_quantile_bound(values, q)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.lists(
+        st.floats(min_value=1e-8, max_value=60.0,
+                  allow_nan=False, allow_infinity=False),
+        min_size=1, max_size=200,
+    ),
+    st.sampled_from([0.0, 0.5, 0.9, 0.99, 1.0]),
+)
+def test_quantile_bound_property(values, q):
+    _assert_quantile_bound(values, q)
+
+
+def test_quantile_exact_on_degenerate_series():
+    reg = MetricsRegistry()
+    h = reg.histogram("repro_one_seconds", "help")
+    h.observe(1e-3)
+    est = h.quantile(0.5)
+    assert est is not None
+    assert 1e-3 / obs.HIST_GROWTH <= est <= 1e-3 * obs.HIST_GROWTH
+
+
+# ---------------------------------------------------------------------------
+# tracing: span lifecycle, conservation, JSONL round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_span_finish_twice_raises_and_late_events_noop():
+    log = obs.SpanLog(None)
+    sp = log.start_span("request", bucket="b")
+    sp.event("admit")
+    sp.finish("resolved")
+    sp.event("late")  # must not reopen or mutate
+    assert sp.events[-1]["name"] == "admit"
+    with pytest.raises(RuntimeError):
+        sp.finish("failed")
+
+
+def test_trace_ids_unique_across_threads():
+    log = obs.SpanLog(None)
+    ids = []
+    lock = threading.Lock()
+
+    def mint():
+        local = [log.start_span("request").trace_id for _ in range(200)]
+        with lock:
+            ids.extend(local)
+
+    threads = [threading.Thread(target=mint) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(set(ids)) == len(ids) == 800
+
+
+def test_conservation_flags_violations():
+    log = obs.SpanLog(None)
+    ok = log.start_span("request")
+    ok.finish("resolved")
+    bad = log.start_span("request")
+    bad.status = "pending"  # forged non-terminal record
+    bad.t_end = bad.t_start
+    log._emit(bad.to_record())
+    rej = log.start_span("request")
+    rej.finish("rejected")  # never admitted: no terminal obligation
+    cons = obs.conservation(log.records)
+    assert cons["spans"] == 3
+    assert cons["admitted"] == 2
+    assert cons["by_status"]["rejected"] == 1
+    assert any("non-terminal" in v for v in cons["violations"])
+
+
+def test_span_log_jsonl_round_trip(tmp_path):
+    path = tmp_path / "spans.jsonl"
+    with obs.SpanLog(path) as log:
+        sp = log.start_span("request", bucket="b", seq=1)
+        sp.event("dispatch", backend="jnp")
+        sp.finish("resolved", latency_s=0.25)
+        log.event("breaker_open", level=1)
+    records = obs.read_jsonl(path)
+    assert records == log.records
+    span = next(r for r in records if r["kind"] == "span")
+    assert span["status"] == "resolved"
+    assert span["attrs"]["latency_s"] == 0.25
+    assert span["events"][0]["name"] == "dispatch"
+    assert span["t_unix"] > 1e9  # wall anchor, not perf_counter scale
+
+
+def test_read_jsonl_rejects_malformed(tmp_path):
+    path = tmp_path / "bad.jsonl"
+    path.write_text('{"kind": "span"}\nnot json\n')
+    with pytest.raises(ValueError, match="not valid JSON"):
+        obs.read_jsonl(path)
+    path.write_text('{"kind": "mystery"}\n')
+    with pytest.raises(ValueError, match="not a span/event"):
+        obs.read_jsonl(path)
+
+
+# ---------------------------------------------------------------------------
+# engine integration: spans + counters + frozen snapshot schema
+# ---------------------------------------------------------------------------
+
+
+def _drive_engine(span_log=None, registry=None, requests=6):
+    eng = PolymulEngine(batch_slots=4, span_log=span_log, registry=registry)
+    pl = eng.plan(n=64, t=3, v=30)
+    rng = np.random.default_rng(5)
+    shape = (pl.n, pl.config.seg_count)
+    futs = [
+        eng.submit(
+            pl,
+            rng.integers(0, 1 << pl.v, size=shape),
+            rng.integers(0, 1 << pl.v, size=shape),
+        )
+        for _ in range(requests)
+    ]
+    eng.run_until_idle()
+    return eng, futs
+
+
+def test_engine_spans_conserve_and_match_counters():
+    log = obs.SpanLog(None)
+    eng, futs = _drive_engine(span_log=log)
+    assert all(f.exception() is None for f in futs)
+    cons = obs.conservation(log.records)
+    assert cons["violations"] == []
+    snap = eng.snapshot()
+    assert cons["admitted"] == snap["submitted"] == len(futs)
+    assert cons["by_status"].get("resolved", 0) == snap["served"]
+    # every future carries its span's trace id
+    ids = {f.trace_id for f in futs}
+    assert len(ids) == len(futs)
+    span_ids = {r["trace_id"] for r in log.spans()}
+    assert ids == span_ids
+
+
+def test_engine_doa_request_sheds_with_span():
+    log = obs.SpanLog(None)
+    eng = PolymulEngine(batch_slots=4, span_log=log)
+    pl = eng.plan(n=64, t=3, v=30)
+    shape = (pl.n, pl.config.seg_count)
+    z = np.zeros(shape, np.int64)
+    fut = eng.submit(pl, z, z, deadline=0.0)  # dead on arrival
+    eng.run_until_idle()
+    assert fut.exception() is not None
+    spans = log.spans("shed")
+    assert len(spans) == 1
+    assert spans[0]["attrs"]["reason"] == "doa"
+    assert obs.conservation(log.records)["violations"] == []
+
+
+def test_engine_backpressure_rejection_span():
+    log = obs.SpanLog(None)
+    eng = PolymulEngine(batch_slots=4, max_pending=1, span_log=log)
+    pl = eng.plan(n=64, t=3, v=30)
+    shape = (pl.n, pl.config.seg_count)
+    z = np.zeros(shape, np.int64)
+    eng.submit(pl, z, z)
+    assert eng.try_submit(pl, z, z) is None  # queue full
+    eng.run_until_idle()
+    cons = obs.conservation(log.records)
+    assert cons["by_status"].get("rejected", 0) == 1
+    assert cons["violations"] == []
+    assert eng.stats["rejected"] == 1
+
+
+def test_engine_counters_in_private_registry():
+    reg = MetricsRegistry()
+    eng, _ = _drive_engine(registry=reg)
+    fam = reg.get("repro_engine_served_total")
+    assert fam is not None
+    assert fam.labels(engine=eng.name).value == 6
+    # latency histogram populated — quantile available for export
+    lat = reg.get("repro_engine_latency_seconds")
+    assert lat.labels(engine=eng.name).count == 6
+
+
+def test_snapshot_schema_frozen():
+    """Regression pin: the snapshot wire contract.  Adding a key means
+    bumping SNAPSHOT_SCHEMA_VERSION and updating SNAPSHOT_KEYS — this
+    test failing on an unintended change is the point."""
+    eng, _ = _drive_engine()
+    snap = eng.snapshot()
+    assert snap["schema_version"] == SNAPSHOT_SCHEMA_VERSION == 1
+    assert set(snap.keys()) == set(SNAPSHOT_KEYS)
+    # stable value types (JSON-serializable wire record)
+    json.dumps(snap)
+
+
+def test_reset_stats_zeroes_metrics():
+    reg = MetricsRegistry()
+    eng, _ = _drive_engine(registry=reg)
+    eng.reset_stats()
+    assert eng.stats["served"] == 0
+    assert reg.get("repro_engine_latency_seconds").labels(
+        engine=eng.name
+    ).count == 0
+
+
+# ---------------------------------------------------------------------------
+# exporters: Prometheus text format + JSON
+# ---------------------------------------------------------------------------
+
+
+def test_prometheus_round_trip_through_strict_parser():
+    reg = MetricsRegistry()
+    _drive_engine(registry=reg)
+    reg.gauge("repro_demo_ratio", "a gauge", ("stage",)).labels(
+        stage="compose"
+    ).set(0.25)
+    text = obs.to_prometheus(reg)
+    families = obs.parse_prometheus(text)
+    assert "repro_engine_served_total" in families
+    assert "repro_engine_latency_seconds" in families
+    hist = families["repro_engine_latency_seconds"]
+    assert hist["type"] == "histogram"
+
+
+def test_prometheus_parser_rejects_malformed():
+    for bad in (
+        "# TYPE repro_x_total counter\nrepro_x_total notanumber\n",
+        "# TYPE repro_x_total counter\nrepro_x_total{le=1.0} 1\n",  # unquoted
+        "# TYPE repro_h histogram\nrepro_h 1\n",  # bare sample for histogram
+        # histogram without the mandatory +Inf bucket
+        "# TYPE repro_h histogram\n"
+        'repro_h_bucket{le="1.0"} 1\nrepro_h_sum 1\nrepro_h_count 1\n',
+        # bucket counts not cumulative
+        "# TYPE repro_h histogram\n"
+        'repro_h_bucket{le="1.0"} 5\nrepro_h_bucket{le="+Inf"} 3\n'
+        "repro_h_sum 1\nrepro_h_count 5\n",
+        # buckets without _sum/_count
+        "# TYPE repro_h histogram\n"
+        'repro_h_bucket{le="+Inf"} 3\n',
+    ):
+        with pytest.raises(ValueError):
+            obs.parse_prometheus(bad)
+
+
+def test_json_export_carries_quantiles():
+    reg = MetricsRegistry()
+    h = reg.histogram("repro_j_seconds", "help")
+    for v in (0.001, 0.002, 0.004):
+        h.observe(v)
+    doc = obs.to_json(reg)
+    assert doc["schema"] == "repro.obs/v1"
+    fam = next(f for f in doc["families"] if f["name"] == "repro_j_seconds")
+    series = fam["series"][0]
+    assert series["count"] == 3
+    assert series["p50"] is not None and series["p99"] is not None
+
+
+# ---------------------------------------------------------------------------
+# per-stage profiling: byte attribution + measured-vs-model drift
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "pallas_fused"])
+def test_predicted_stage_bytes_sum_to_model(backend):
+    import repro
+    from repro.kernels import ops as ops_mod
+
+    from repro import api
+
+    pl = repro.plan(n=64, t=3, v=30, backend=backend)
+    rows = 4
+    per_stage = obs.predicted_stage_bytes(pl, rows)
+    assert set(per_stage) == set(obs.STAGES)
+    cfg = api.plan_key(pl)
+    total = ops_mod.hbm_traffic_model(
+        pl.params, rows, backend=cfg.backend, schedule=cfg.schedule
+    )["hbm_bytes"]
+    assert sum(per_stage.values()) == total
+
+
+def test_stage_timings_record_and_drift_gauges():
+    import repro
+
+    obs.reset_default_registry()
+    pl = repro.plan(n=64, t=3, v=30)
+    rec = obs.stage_timings(pl, batch=2, iters=2, warmup=1)
+    assert set(rec["stages"]) == set(obs.STAGES)
+    shares = [s["share_measured"] for s in rec["stages"].values()]
+    assert abs(sum(shares) - 1.0) < 1e-6
+    for s in rec["stages"].values():
+        assert s["seconds"] > 0
+        assert 0.0 <= s["share_predicted"] <= 1.0
+        assert np.isfinite(s["drift"])
+    assert rec["max_drift"] == pytest.approx(
+        max(abs(s["drift"]) for s in rec["stages"].values())
+    )
+    # drift is a queryable metric, not just a report field
+    g = obs.registry().get("repro_stage_share_drift")
+    assert g is not None
+    labeled = {lv for lv, _ in g.children()}
+    assert labeled == {
+        (stage, rec["backend"]) for stage in obs.STAGES
+    }
+    text = obs.to_prometheus(obs.registry())
+    obs.parse_prometheus(text)  # exposition stays valid with profiling families
+    obs.reset_default_registry()
